@@ -1,0 +1,59 @@
+"""Shared benchmark scaffolding."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.cluster.sim import SimBackend, SimSystemSpace
+from repro.core import (GroundTruth, PipeTune, TuneV1, TuneV2, SearchSpace,
+                        SystemSpace)
+from repro.core.backends import RealBackend
+from repro.core.job import HPTJob, Param
+
+
+def paper_space(small=True) -> SearchSpace:
+    """Paper §7.1.3 hyperparameters (epochs handled by the scheduler)."""
+    bs = (32, 64) if small else (32, 64, 128, 256, 512, 1024)
+    return SearchSpace([
+        Param("batch_size", "choice", choices=bs),
+        Param("dropout", "float", 0.0, 0.5),
+        Param("learning_rate", "log", 0.001, 0.1),
+    ])
+
+
+def real_backend(quick=True) -> RealBackend:
+    if quick:
+        return RealBackend(n_train=768, n_eval=192, steps_per_epoch=6)
+    return RealBackend(n_train=4096, n_eval=1024, steps_per_epoch=24)
+
+
+def real_sys_space() -> SystemSpace:
+    # precision stays fp32 on the CPU backend: bf16 here is software-emulated
+    # (5-20x slower), which is a host artifact, not a property of the TPU
+    # deployment target the tuner is meant to learn about.
+    return SystemSpace(remat=("none", "block"), microbatches=(1, 2, 4),
+                       precision=("fp32",))
+
+
+def sim_runners(gt=None):
+    gt = gt or GroundTruth()
+    return {
+        "TuneV1": lambda: TuneV1(SimBackend()),
+        "TuneV2": lambda: TuneV2(SimBackend(), SimSystemSpace()),
+        "PipeTune": lambda: PipeTune(SimBackend(), SimSystemSpace(),
+                                     groundtruth=gt, max_probes=6),
+    }
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.s = time.time() - self.t0
+
+
+def csv_row(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,69 @@
+"""Paper Fig 9/10: accuracy + per-trial training-time convergence over the
+tuning timeline (CNN on News20-like), PipeTune vs Tune V1/V2 (SimBackend for
+the full timeline; --real uses RealBackend)."""
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+from benchmarks import common
+from repro.cluster.sim import SimBackend, SimSystemSpace
+from repro.core import GroundTruth, PipeTune, TuneV1, TuneV2
+from repro.core.job import HPTJob
+
+
+def trace(runner, job, scheduler="hyperband", **kw):
+    """Returns [(cum_tuning_time, best_acc_so_far, trial_train_time)]."""
+    res = runner.run_job(job, scheduler=scheduler, **kw)
+    events = []
+    t, best = 0.0, 0.0
+    recs = list(res.records.values())
+    for rec in recs:
+        t += rec.train_time
+        best = max(best, rec.accuracy)
+        events.append((t, best, rec.train_time))
+    return events, res
+
+
+def run(quick=True, workload="cnn-news20", seed=0):
+    space = common.paper_space(small=False)
+    job = HPTJob(workload=workload, space=space, max_epochs=9, seed=seed)
+    out = {}
+    sspace = SimSystemSpace()
+    for name, runner in [
+        ("TuneV1", TuneV1(SimBackend(seed))),
+        ("TuneV2", TuneV2(SimBackend(seed), sspace)),
+        ("PipeTune", PipeTune(SimBackend(seed), sspace,
+                              groundtruth=GroundTruth(), max_probes=6)),
+    ]:
+        events, res = trace(runner, job)
+        out[name] = {"events": events,
+                     "final_acc": res.best_accuracy,
+                     "tuning_time": res.tuning_time_s}
+    return out
+
+
+def main(quick=True):
+    out = run(quick)
+    t_target = 0.6 * max(v["final_acc"] for v in out.values())
+    print(f"{'System':9s} {'final_acc':>9s} {'tuning[s]':>10s} "
+          f"{'t@60%acc[s]':>12s}")
+    for name, v in out.items():
+        t60 = next((t for t, acc, _ in v["events"] if acc >= t_target),
+                   float("nan"))
+        print(f"{name:9s} {v['final_acc']:9.3f} {v['tuning_time']:10.1f} "
+              f"{t60:12.1f}")
+    v1, pt = out["TuneV1"]["tuning_time"], out["PipeTune"]["tuning_time"]
+    print(f"PipeTune tuning speedup vs V1: {v1 / pt:.2f}x")
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=None)
+    a = ap.parse_args()
+    out = main()
+    if a.out:
+        json.dump(out, open(a.out, "w"), indent=1)

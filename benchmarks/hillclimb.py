@@ -1,0 +1,87 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb driver: run system-config variants of the three target
+cells and print before/after roofline terms.
+
+Targets (picked per the methodology from the baseline table):
+  * mixtral-8x22b x train_4k   — most representative (flagship training job)
+  * whisper-small x train_4k   — was most collective-bound
+  * xlstm-350m x train_4k      — worst roofline fraction
+
+Each variant encodes a hypothesis; see EXPERIMENTS.md §Perf for the napkin
+math and verdicts.
+"""
+import argparse
+import json
+
+from repro.launch import dryrun, mesh as mesh_lib
+
+VARIANTS = {
+    "mixtral-8x22b/train_4k": [
+        ("baseline", {}),
+        # H-A1: dots-policy remat skips the fwd recompute -> fewer weight
+        # re-gathers and fewer recompute flops (predict: compute -25%,
+        # memory -15%, HBM footprint up)
+        ("remat=dots", {"remat": "dots"}),
+        # H-A2: bigger attention chunks -> KV re-read drops with nq (S/qc)
+        ("qchunk=2048", {"q_chunk": 2048, "kv_chunk": 2048}),
+        # H-A3: fewer microbatches -> weights amortized over 2x tokens per
+        # gather (predict: memory term down, footprint up 2x)
+        ("micro=8", {"microbatches": 8}),
+    ],
+    "whisper-small/train_4k": [
+        ("baseline", {}),
+        # H-B1: tiny model over-sharded; single macro-batch amortizes weight
+        # reads 16x (predict: memory term down, collective count down)
+        ("micro=1", {"microbatches": 1}),
+        ("micro=4", {"microbatches": 4}),
+        # H-B2: no remat (activations are small) -> no recompute traffic
+        ("remat=none", {"remat": "none"}),
+    ],
+    "xlstm-350m/train_4k": [
+        ("baseline", {}),
+        # H-C1: the sLSTM per-timestep matmul re-reads w_rec every step;
+        # fewer microbatches amortize it over more rows (predict: memory
+        # term down ~linearly in per-device microbatch size)
+        ("micro=4", {"microbatches": 4}),
+        ("micro=1", {"microbatches": 1}),
+        # H-C2: no remat: scan-of-scan recompute doubles the sequential
+        # traffic; activations are small enough to save
+        ("micro=1+remat=none", {"microbatches": 1, "remat": "none"}),
+    ],
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--target", default=None,
+                    help="arch/shape (default: all three)")
+    ap.add_argument("--out", default="hillclimb.json")
+    a = ap.parse_args()
+    mesh = mesh_lib.make_production_mesh()
+    results = []
+    targets = ([a.target] if a.target else list(VARIANTS))
+    for tgt in targets:
+        arch, shape = tgt.split("/")
+        print(f"\n=== {tgt} ===")
+        for name, overrides in VARIANTS[tgt]:
+            r = dryrun.run_cell(arch, shape, mesh=mesh,
+                                sys_overrides=overrides, verbose=False)
+            r["variant"] = name
+            results.append(r)
+            if r["status"] != "ok":
+                print(f"{name:22s} FAILED: {r.get('error', '?')[:120]}")
+                continue
+            t = r["roofline"]
+            print(f"{name:22s} c/m/m*/n = {t['compute_s']:8.2e} "
+                  f"{t['memory_s']:8.2e} {t['memory_kernelized_s']:8.2e} "
+                  f"{t['collective_s']:8.2e}  dom={t['dominant']:10s} "
+                  f"mfu={t['mfu']:.4f} gb={r['per_device_gb']:6.1f}")
+    with open(a.out, "w") as f:
+        json.dump(results, f, indent=1)
+    print(f"\nwrote {a.out}")
+
+
+if __name__ == "__main__":
+    main()

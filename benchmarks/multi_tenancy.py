@@ -1,0 +1,84 @@
+"""Paper Fig 13/14: multi-tenant average response time.
+
+Fig 13: Type-I and Type-II jobs on the shared 4-node cluster, separately and
+mixed. Fig 14: Type-III on a single node. 20% unseen jobs (paper §7.4).
+Also reports the fault-tolerance variants (failures + stragglers) — beyond
+the paper, required for the 1000+ node story.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+from benchmarks import common
+from repro.cluster.sim import (ClusterConfig, ClusterSim, SimBackend,
+                               SimSystemSpace, make_arrivals)
+from repro.core import GroundTruth, PipeTune, TuneV1, TuneV2
+
+
+def scenario(workloads, n_jobs, n_nodes, seed=0, mean_arrival=400.0,
+             cluster_kw=None, n_trials=5):
+    space = common.paper_space(small=False)
+    jobs = make_arrivals(workloads, n_jobs=n_jobs,
+                         mean_interarrival_s=mean_arrival, space=space,
+                         max_epochs=9, seed=seed, unseen_frac=0.2)
+    sspace = SimSystemSpace()
+    gt = GroundTruth()
+    factories = {
+        "TuneV1": lambda: TuneV1(SimBackend(seed)),
+        "TuneV2": lambda: TuneV2(SimBackend(seed), sspace),
+        "PipeTune": lambda: PipeTune(SimBackend(seed), sspace, groundtruth=gt,
+                                     max_probes=6),
+    }
+    out = {}
+    for name, f in factories.items():
+        sim = ClusterSim(ClusterConfig(n_nodes=n_nodes, seed=seed,
+                                       **(cluster_kw or {})), f)
+        res = sim.run(jobs, scheduler="random", n_trials=n_trials)
+        out[name] = {
+            "mean_response_s": float(np.mean([o.response_s for o in res])),
+            "mean_accuracy": float(np.mean([o.best_accuracy for o in res])),
+            "by_type": {t: float(np.mean([o.response_s for o in res
+                                          if o.jtype == t]) or 0)
+                        for t in {o.jtype for o in res}},
+            "failures": int(sum(o.n_failures for o in res)),
+            "stragglers": int(sum(o.n_stragglers for o in res)),
+        }
+    return out
+
+
+def main(quick=True):
+    n = 8 if quick else 24
+    results = {}
+    results["fig13_typeI"] = scenario(["lenet-mnist", "lenet-fashion"], n, 4)
+    results["fig13_typeII"] = scenario(["cnn-news20", "lstm-news20"], n, 4)
+    results["fig13_mixed"] = scenario(
+        ["lenet-mnist", "cnn-news20", "lenet-fashion", "lstm-news20"], n, 4)
+    results["fig14_typeIII"] = scenario(
+        ["jacobi-rodinia", "spkmeans-rodinia", "bfs-rodinia"], n, 1,
+        mean_arrival=120.0)
+    results["faulty"] = scenario(
+        ["lenet-mnist", "cnn-news20"], n, 4,
+        cluster_kw=dict(mtbf_s=20000.0, straggler_prob=0.05))
+
+    for scen, rows in results.items():
+        v1 = rows["TuneV1"]["mean_response_s"]
+        pt = rows["PipeTune"]["mean_response_s"]
+        print(f"{scen:16s} V1={v1:9.1f}s V2="
+              f"{rows['TuneV2']['mean_response_s']:9.1f}s "
+              f"PipeTune={pt:9.1f}s  reduction_vs_V1={100*(1-pt/v1):5.1f}% "
+              f"acc V1/PT={rows['TuneV1']['mean_accuracy']:.3f}/"
+              f"{rows['PipeTune']['mean_accuracy']:.3f}")
+    return results
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--out", default=None)
+    a = ap.parse_args()
+    out = main(quick=not a.full)
+    if a.out:
+        json.dump(out, open(a.out, "w"), indent=1)

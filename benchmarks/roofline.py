@@ -1,0 +1,66 @@
+"""§Roofline report: per (arch x shape x mesh) terms from the dry-run JSON.
+
+Reads the records produced by ``python -m repro.launch.dryrun --all --out f``
+and prints the roofline table: three terms, dominant bottleneck, MODEL_FLOPS
+ratio, and the projected MFU. ``--pick`` lists the three hillclimb targets
+(worst roofline fraction / most collective-bound / most paper-representative).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import List
+
+
+def load(path):
+    with open(path) as f:
+        return [r for r in json.load(f) if r.get("status") == "ok"]
+
+
+def table(recs: List[dict]):
+    hdr = (f"{'arch':20s} {'shape':12s} {'mesh':8s} {'comp[s]':>9s} "
+           f"{'mem[s]':>9s} {'mem*[s]':>9s} {'coll[s]':>9s} {'dom':>5s} "
+           f"{'useful':>7s} {'MFU':>6s} {'GB/dev':>7s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in recs:
+        t = r["roofline"]
+        print(f"{r['arch']:20s} {r['shape']:12s} {r['mesh']:8s} "
+              f"{t['compute_s']:9.2e} {t['memory_s']:9.2e} "
+              f"{t['memory_kernelized_s']:9.2e} {t['collective_s']:9.2e} "
+              f"{t['dominant'][:4]:>5s} {t['useful_flop_fraction']:7.3f} "
+              f"{t['mfu']:6.3f} {r.get('per_device_gb', 0):7.2f}")
+
+
+def pick_targets(recs: List[dict]):
+    """The three §Perf hillclimb cells."""
+    train = [r for r in recs if r["shape"] == "train_4k"]
+    by_mfu = sorted(train, key=lambda r: r["roofline"]["mfu"])
+    worst = by_mfu[0]
+    coll = max(recs, key=lambda r: r["roofline"]["collective_s"]
+               / max(r["roofline"]["step_time_s"], 1e-12))
+    # most representative of the paper: the biggest train cell (system-param
+    # tuning targets training jobs; mixtral train_4k is the flagship)
+    rep = next((r for r in train if r["arch"] == "mixtral-8x22b"), train[-1])
+    return {"worst_mfu": worst, "most_collective": coll,
+            "representative": rep}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("path", nargs="?", default="dryrun_single.json")
+    ap.add_argument("--pick", action="store_true")
+    a = ap.parse_args()
+    recs = load(a.path)
+    table(recs)
+    if a.pick:
+        t = pick_targets(recs)
+        print("\nhillclimb targets:")
+        for k, r in t.items():
+            print(f"  {k}: {r['arch']} x {r['shape']} "
+                  f"(dom={r['roofline']['dominant']}, "
+                  f"mfu={r['roofline']['mfu']:.3f})")
+
+
+if __name__ == "__main__":
+    main()

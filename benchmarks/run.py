@@ -1,0 +1,132 @@
+"""Benchmark driver: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV per the scaffold contract, where
+us_per_call is the wall time of the benchmark and derived carries its
+headline result. Full (slow) versions: run each module directly with --full.
+"""
+from __future__ import annotations
+
+import time
+
+
+def _timed(name, fn):
+    t0 = time.time()
+    derived = fn()
+    us = (time.time() - t0) * 1e6
+    print(f"{name},{us:.0f},{derived}")
+
+
+def bench_table2():
+    from benchmarks import table2
+    rows = table2.run(quick=True)
+    pt, v1 = rows["PipeTune"], rows["TuneV1"]
+    return (f"acc_pt={pt['accuracy']:.3f};acc_v1={v1['accuracy']:.3f};"
+            f"tune_ratio={pt['tuning_time_s']/max(v1['tuning_time_s'],1e-9):.2f}")
+
+
+def bench_fig9_10_convergence():
+    from benchmarks import convergence
+    out = convergence.run(quick=True)
+    return (f"speedup_v1={out['TuneV1']['tuning_time']/out['PipeTune']['tuning_time']:.2f}x;"
+            f"speedup_v2={out['TuneV2']['tuning_time']/out['PipeTune']['tuning_time']:.2f}x")
+
+
+def bench_fig11_single_tenancy():
+    from benchmarks import single_tenancy
+    import numpy as np
+    out = single_tenancy.run(single_tenancy.TYPE_I_II)
+    red = [1 - r["PipeTune"]["tuning_time_s"] / r["TuneV1"]["tuning_time_s"]
+           for r in out.values()]
+    ene = [1 - r["PipeTune"]["energy_j"] / r["TuneV1"]["energy_j"]
+           for r in out.values()]
+    return (f"tuning_reduction_max={100*max(red):.1f}%;"
+            f"energy_reduction_max={100*max(ene):.1f}%")
+
+
+def bench_fig12_typeIII():
+    from benchmarks import single_tenancy
+    out = single_tenancy.run(single_tenancy.TYPE_III)
+    red = [1 - r["PipeTune"]["tuning_time_s"] / r["TuneV1"]["tuning_time_s"]
+           for r in out.values()]
+    return f"tuning_reduction_max={100*max(red):.1f}%"
+
+
+def bench_fig12_real_typeIII():
+    """Real (non-simulated) Type-III short-epoch jobs on NumericBackend."""
+    from repro.core import GroundTruth, PipeTune, TuneV1, SystemSpace
+    from repro.core.job import HPTJob, Param, SearchSpace
+    from repro.core.numeric_backend import NumericBackend
+    space = SearchSpace([Param("block", "choice", choices=(1, 2))])
+    sspace = SystemSpace(remat=("none",), microbatches=(1, 2),
+                         precision=("fp32",))
+    gt = GroundTruth()
+    ratios = []
+    for wl in ("jacobi-rodinia", "spkmeans-rodinia", "bfs-rodinia"):
+        job = HPTJob(workload=wl, space=space, max_epochs=6)
+        r1 = TuneV1(NumericBackend()).run_job(job, scheduler="random",
+                                              n_trials=3)
+        rp = PipeTune(NumericBackend(), sspace, groundtruth=gt,
+                      max_probes=2).run_job(job, scheduler="random",
+                                            n_trials=3)
+        ratios.append(rp.tuning_time_s / max(r1.tuning_time_s, 1e-9))
+    import numpy as np
+    return f"tune_ratio_mean={np.mean(ratios):.2f}"
+
+
+def bench_fig13_14_multi_tenancy():
+    from benchmarks import multi_tenancy
+    out = multi_tenancy.scenario(
+        ["lenet-mnist", "cnn-news20", "lenet-fashion", "lstm-news20"],
+        n_jobs=8, n_nodes=4)
+    v1 = out["TuneV1"]["mean_response_s"]
+    pt = out["PipeTune"]["mean_response_s"]
+    return f"response_reduction_vs_v1={100*(1-pt/v1):.1f}%"
+
+
+def bench_fig1_tuning_cost():
+    from benchmarks import tuning_cost
+    rows = tuning_cost.run(max_params=3, epochs=3)
+    return (f"growth_1to3={rows[-1]['tuning_time_s']/rows[0]['tuning_time_s']:.0f}x")
+
+
+def bench_fig8_clustering():
+    from benchmarks import clustering
+    out = clustering.run(n_per_workload=4)
+    return f"purity={out['purity']:.3f}"
+
+
+def bench_fig2_profiling_stability():
+    from benchmarks import profiling_stability
+    out = profiling_stability.run(epochs=3, quick=True)
+    return f"epoch_profile_separation={out['separation']:.1f}x"
+
+
+def bench_kernels():
+    """Kernel-vs-oracle wall time + correctness on a fixed shape."""
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.kernels import ops, ref
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (1, 512, 4, 2, 64))
+    k = jax.random.normal(ks[1], (1, 512, 4, 64))
+    v = jax.random.normal(ks[2], (1, 512, 4, 64))
+    out = ops.flash_attention(q, k, v)
+    exp = ref.flash_attention_ref(q, k, v)
+    err = float(jnp.max(jnp.abs(out - exp)))
+    return f"fa_max_err={err:.1e}"
+
+
+def main() -> None:
+    _timed("table2", bench_table2)
+    _timed("fig9_10_convergence", bench_fig9_10_convergence)
+    _timed("fig11_single_tenancy", bench_fig11_single_tenancy)
+    _timed("fig12_typeIII", bench_fig12_typeIII)
+    _timed("fig12_real_typeIII", bench_fig12_real_typeIII)
+    _timed("fig13_14_multi_tenancy", bench_fig13_14_multi_tenancy)
+    _timed("fig1_tuning_cost", bench_fig1_tuning_cost)
+    _timed("fig2_profiling_stability", bench_fig2_profiling_stability)
+    _timed("fig8_clustering", bench_fig8_clustering)
+    _timed("kernels", bench_kernels)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""Paper Fig 11/12: single-tenancy accuracy / training / tuning / energy per
+workload for Tune V1, Tune V2, PipeTune.
+
+Type-I/II (Fig 11) run on the 4-node cluster model; Type-III (Fig 12) on a
+single node with short epochs (the adversarial case for PipeTune's
+epoch-granular profiling).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+from benchmarks import common
+from repro.cluster.sim import SimBackend, SimSystemSpace
+from repro.core import GroundTruth, PipeTune, TuneV1, TuneV2
+from repro.core.job import HPTJob
+
+TYPE_I_II = ["lenet-mnist", "lenet-fashion", "cnn-news20", "lstm-news20"]
+TYPE_III = ["jacobi-rodinia", "spkmeans-rodinia", "bfs-rodinia"]
+
+
+def run(workloads, seed=0, shared_gt=True):
+    space = common.paper_space(small=False)
+    sspace = SimSystemSpace()
+    gt = GroundTruth()
+    out = {}
+    for wl in workloads:
+        job = HPTJob(workload=wl, space=space, max_epochs=9, seed=seed)
+        row = {}
+        for name, factory in [
+            ("TuneV1", lambda: TuneV1(SimBackend(seed))),
+            ("TuneV2", lambda: TuneV2(SimBackend(seed), sspace)),
+            ("PipeTune", lambda: PipeTune(
+                SimBackend(seed), sspace,
+                groundtruth=gt if shared_gt else GroundTruth(),
+                max_probes=6)),
+        ]:
+            res = factory().run_job(job, scheduler="hyperband")
+            row[name] = dict(
+                accuracy=res.best_accuracy,
+                training_time_s=res.best_train_time,
+                tuning_time_s=res.tuning_time_s,
+                energy_j=res.energy_j)
+        out[wl] = row
+    return out
+
+
+def _summary(out, label):
+    print(f"--- {label} ---")
+    print(f"{'workload':18s} {'system':9s} {'acc':>6s} {'train[s]':>9s} "
+          f"{'tune[s]':>9s} {'energy[kJ]':>11s}")
+    for wl, row in out.items():
+        for name, r in row.items():
+            print(f"{wl:18s} {name:9s} {r['accuracy']:6.3f} "
+                  f"{r['training_time_s']:9.1f} {r['tuning_time_s']:9.1f} "
+                  f"{r['energy_j']/1e3:11.1f}")
+    # headline deltas (paper: >=18% tuning reduction, <=29% energy reduction)
+    red_t, red_e = [], []
+    for row in out.values():
+        red_t.append(1 - row["PipeTune"]["tuning_time_s"]
+                     / row["TuneV1"]["tuning_time_s"])
+        red_e.append(1 - row["PipeTune"]["energy_j"]
+                     / row["TuneV1"]["energy_j"])
+    print(f"PipeTune vs V1: tuning-time reduction mean "
+          f"{100*np.mean(red_t):.1f}% (max {100*np.max(red_t):.1f}%), "
+          f"energy reduction mean {100*np.mean(red_e):.1f}% "
+          f"(max {100*np.max(red_e):.1f}%)")
+    return {"tuning_reduction_max": float(np.max(red_t)),
+            "energy_reduction_max": float(np.max(red_e))}
+
+
+def main():
+    out12 = run(TYPE_I_II)
+    s1 = _summary(out12, "Fig 11: Type-I/II")
+    out3 = run(TYPE_III)
+    s3 = _summary(out3, "Fig 12: Type-III (short epochs)")
+    return {"fig11": out12, "fig12": out3, "headline": {**s1, **s3}}
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=None)
+    a = ap.parse_args()
+    out = main()
+    if a.out:
+        json.dump(out, open(a.out, "w"), indent=1)

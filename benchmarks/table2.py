@@ -1,0 +1,72 @@
+"""Paper Table 2: accuracy / training time / tuning time per approach,
+LeNet on MNIST(-like). Real training on CPU (RealBackend).
+
+Approaches: Arbitrary (fixed mediocre hparams, no tuning), Tune V1, Tune V2,
+PipeTune. The paper's numbers: PipeTune matches V1 accuracy, matches V2
+training time, and has the lowest tuning time.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import GroundTruth, PipeTune, TuneV1, TuneV2
+from repro.core.job import HPTJob
+
+
+def run(quick=True, workload="lenet-mnist", seed=0):
+    space = common.paper_space(small=quick)
+    n_trials = 6 if quick else 12
+    epochs = 6 if quick else 9
+    job = HPTJob(workload=workload, space=space, max_epochs=epochs, seed=seed)
+    sys_space = common.real_sys_space()
+    rows = {}
+
+    # Arbitrary: fixed so-so hyperparameters, single training run
+    backend = common.real_backend(quick)
+    arb = TuneV1(backend)
+    rec = arb.run_trial(workload, "arbitrary",
+                        {"batch_size": 1024 if not quick else 64,
+                         "learning_rate": 0.08, "dropout": 0.45}, epochs)
+    rows["Arbitrary"] = dict(accuracy=rec.accuracy,
+                             training_time_s=rec.train_time,
+                             tuning_time_s=0.0, energy_j=rec.energy)
+
+    def best_train_time(res):
+        br = res.best_record
+        return br.train_time if br else 0.0
+
+    for name, runner in [
+        ("TuneV1", TuneV1(common.real_backend(quick))),
+        ("TuneV2", TuneV2(common.real_backend(quick), sys_space)),
+        ("PipeTune", PipeTune(common.real_backend(quick), sys_space,
+                              groundtruth=GroundTruth(), max_probes=4)),
+    ]:
+        res = runner.run_job(job, scheduler="random", n_trials=n_trials)
+        rows[name] = dict(accuracy=res.best_accuracy,
+                          training_time_s=best_train_time(res),
+                          tuning_time_s=res.tuning_time_s,
+                          energy_j=res.energy_j)
+    return rows
+
+
+def main(quick=True):
+    rows = run(quick=quick)
+    print(f"{'Approach':10s} {'Acc[%]':>8s} {'Train[s]':>9s} {'Tune[s]':>9s}")
+    for name, r in rows.items():
+        print(f"{name:10s} {100*r['accuracy']:8.2f} "
+              f"{r['training_time_s']:9.2f} {r['tuning_time_s']:9.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--out", default=None)
+    a = ap.parse_args()
+    rows = main(quick=not a.full)
+    if a.out:
+        json.dump(rows, open(a.out, "w"), indent=1)

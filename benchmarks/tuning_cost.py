@@ -1,0 +1,67 @@
+"""Paper Fig 1: tuning cost grows exponentially with the number of tuned
+hyperparameters (grid search, 3 values each), priced on small/medium/large
+cloud instances."""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.cluster.sim import SimBackend
+from repro.core import TuneV1, GridSearch
+from repro.core.job import Param, SearchSpace
+
+INSTANCE_USD_PER_H = {"small": 0.8, "medium": 1.9, "large": 4.1}
+INSTANCE_SPEEDUP = {"small": 1.0, "medium": 1.8, "large": 3.1}
+
+ALL_PARAMS = [
+    Param("batch_size", "choice", choices=(32, 128, 1024)),
+    Param("learning_rate", "choice", choices=(0.001, 0.01, 0.1)),
+    Param("dropout", "choice", choices=(0.0, 0.25, 0.5)),
+    Param("embed_dim", "choice", choices=(50, 100, 300)),
+    Param("momentum", "choice", choices=(0.0, 0.9, 0.99)),
+    Param("weight_decay", "choice", choices=(0.0, 0.01, 0.1)),
+]
+
+
+def run(max_params=6, epochs=5):
+    rows = []
+    for n in range(1, max_params + 1):
+        space = SearchSpace(ALL_PARAMS[:n])
+        runner = TuneV1(SimBackend())
+        sched = GridSearch(space, per_dim=3, epochs=epochs)
+
+        def evaluate(tid, hp, ep):
+            rec = runner.run_trial("lenet-mnist", tid, hp, ep)
+            return rec.accuracy
+        sched.run(evaluate)
+        t = sum(r.train_time for r in runner.records.values())
+        row = {"n_params": n, "n_trials": len(runner.records),
+               "tuning_time_s": t}
+        for inst, usd in INSTANCE_USD_PER_H.items():
+            row[f"cost_{inst}_usd"] = usd * (t / INSTANCE_SPEEDUP[inst]) / 3600
+        rows.append(row)
+    return rows
+
+
+def main(max_params=4):
+    rows = run(max_params)
+    print(f"{'#params':>7s} {'trials':>7s} {'time[s]':>10s} "
+          f"{'$small':>8s} {'$large':>8s}")
+    for r in rows:
+        print(f"{r['n_params']:7d} {r['n_trials']:7d} "
+              f"{r['tuning_time_s']:10.1f} {r['cost_small_usd']:8.2f} "
+              f"{r['cost_large_usd']:8.2f}")
+    growth = rows[-1]["tuning_time_s"] / rows[0]["tuning_time_s"]
+    print(f"growth {rows[0]['n_params']}->{rows[-1]['n_params']} params: "
+          f"{growth:.0f}x (exponential in #params)")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--max-params", type=int, default=4)
+    ap.add_argument("--out", default=None)
+    a = ap.parse_args()
+    rows = main(a.max_params)
+    if a.out:
+        json.dump(rows, open(a.out, "w"), indent=1)

@@ -1,0 +1,31 @@
+"""Quickstart: tune a LeNet-style job with PipeTune in under a minute (CPU).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core import GroundTruth, PipeTune, HPTJob, SearchSpace, SystemSpace
+from repro.core.backends import RealBackend
+from repro.core.job import Param
+
+
+def main():
+    space = SearchSpace([
+        Param("batch_size", "choice", choices=(32, 64)),
+        Param("learning_rate", "log", 0.005, 0.05),
+        Param("dropout", "float", 0.0, 0.3),
+    ])
+    job = HPTJob(workload="lenet-mnist", space=space, max_epochs=4)
+    sys_space = SystemSpace(remat=("none", "block"), microbatches=(1, 2),
+                            precision=("fp32",))
+    tuner = PipeTune(RealBackend(n_train=768, n_eval=192, steps_per_epoch=6),
+                     sys_space, groundtruth=GroundTruth(), max_probes=3)
+    res = tuner.run_job(job, scheduler="random", n_trials=4)
+    print(f"best hyperparameters: {res.best_hparams}")
+    print(f"best accuracy:        {res.best_accuracy:.3f}")
+    print(f"tuning time:          {res.tuning_time_s:.1f}s "
+          f"(ground-truth hits: {res.gt_hits})")
+    best = res.best_record
+    print(f"system configs used by the best trial: {best.sys_history[-1]}")
+
+
+if __name__ == "__main__":
+    main()

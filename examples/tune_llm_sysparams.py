@@ -1,0 +1,103 @@
+"""PipeTune on an LM training job: tune the TPU-edition system parameters
+(remat / microbatches / precision) per epoch while hyper-tuning the LR.
+
+This is the paper's technique applied to the LM substrate — the same
+PipeTune core drives it because backends are pluggable.
+
+    PYTHONPATH=src python examples/tune_llm_sysparams.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import GroundTruth, PipeTune, SystemSpace
+from repro.core.backends import EpochResult, TrialState
+from repro.core.job import HPTJob, Param, SearchSpace
+from repro.core.profiler import Profiler
+from repro.data import synthetic
+from repro.launch import steps as steps_lib
+from repro.models.transformer import ModelConfig, SystemConfig
+from repro.optim import optimizers
+
+
+class LMBackend:
+    """Epoch-at-a-time LM trainer with switchable system params (CPU)."""
+
+    def __init__(self, steps_per_epoch=6):
+        self.steps_per_epoch = steps_per_epoch
+        self.profiler = Profiler()
+        self._cache = {}
+
+    def _cfg(self):
+        return ModelConfig(name="tune-lm", family="dense", n_layers=2,
+                           d_model=128, n_heads=4, n_kv_heads=2, d_ff=512,
+                           vocab=512, head_dim=32)
+
+    def init_trial(self, workload, hparams, seed=0):
+        cfg = self._cfg()
+        opt = optimizers.adamw(float(hparams.get("learning_rate", 3e-4)))
+        state = steps_lib.make_train_state(jax.random.PRNGKey(seed), cfg, opt)
+        toks = synthetic.make_lm_dataset(seed, 64 * 8 * 64, cfg.vocab)
+        stream = toks[:64 * 8 * 64].reshape(-1, 8, 64)
+        return TrialState(workload=workload, hparams=dict(hparams), cfg=cfg,
+                          params=(state, opt), opt_state=None, step=0,
+                          epoch=0, data=stream, eval_batch={}, seed=seed)
+
+    def run_epoch(self, ts, sys_cfg, collect_profile=True):
+        state, opt = ts.params
+        cfg = ts.cfg
+        sys = SystemConfig(microbatches=int(sys_cfg.get("microbatches", 1)),
+                           remat=sys_cfg.get("remat", "none"),
+                           precision=sys_cfg.get("precision", "fp32"))
+        key = ("step", str(sys_cfg), ts.hparams.get("learning_rate"))
+        if key not in self._cache:
+            self._cache[key] = jax.jit(
+                steps_lib.make_train_step(cfg, sys, opt))
+        step_fn = self._cache[key]
+        times, losses = [], []
+        for i in range(self.steps_per_epoch):
+            chunk = ts.data[(ts.step + i) % len(ts.data)]
+            batch = {"tokens": jnp.asarray(chunk),
+                     "labels": jnp.asarray(np.roll(chunk, -1, -1))}
+            t0 = time.time()
+            state, m = step_fn(state, batch)
+            jax.block_until_ready(m["loss"])
+            times.append(time.time() - t0)
+            losses.append(float(m["loss"]))
+        ts.params = (state, opt)
+        ts.step += self.steps_per_epoch
+        ts.epoch += 1
+        prof = self.profiler.build(step_times=times, loss_start=losses[0],
+                                   loss_end=losses[-1], power_w=200.0,
+                                   tokens_per_step=8 * 64)
+        return ts, EpochResult(
+            duration_s=float(np.sum(times)), energy_j=200.0 * np.sum(times),
+            loss=losses[-1], accuracy=-losses[-1], profile=prof,
+            sys_config=dict(sys_cfg), step_times=times)
+
+
+def main():
+    space = SearchSpace([Param("learning_rate", "log", 1e-4, 1e-2)])
+    sys_space = SystemSpace(remat=("none", "block"), microbatches=(1, 2, 4),
+                            precision=("fp32",))
+    job = HPTJob(workload="tune-lm", space=space, max_epochs=6)
+    tuner = PipeTune(LMBackend(), sys_space, groundtruth=GroundTruth(),
+                     max_probes=4, objective="accuracy")
+    res = tuner.run_job(job, scheduler="random", n_trials=3)
+    best = res.best_record
+    print(f"best lr: {res.best_hparams.get('learning_rate'):.2e} "
+          f"(final loss {-res.best_accuracy:.3f})")
+    print(f"system config locked by PipeTune: {best.sys_history[-1]}")
+    durs = {}
+    for rec in res.records.values():
+        for e in rec.epochs:
+            durs.setdefault(str(e.sys_config), []).append(e.duration_s)
+    print("epoch time by system config:")
+    for k, v in sorted(durs.items(), key=lambda kv: np.mean(kv[1])):
+        print(f"  {np.mean(v):6.2f}s  {k}")
+
+
+if __name__ == "__main__":
+    main()

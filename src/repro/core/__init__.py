@@ -1,0 +1,16 @@
+"""PipeTune core: pipelined hyper + system parameter tuning (the paper).
+
+Public surface:
+    PipeTune           — Algorithm 1 trial runner + HPT job driver
+    TuneV1 / TuneV2    — the paper's baselines (§4)
+    GroundTruth        — k-means similarity store over epoch profiles
+    Profiler           — epoch-level profile vectors (the PMU-counter analogue)
+    HyperBand/ASHA/... — trial schedulers
+    SystemSpace        — the system-parameter search space
+"""
+from repro.core.groundtruth import GroundTruth, KMeans  # noqa: F401
+from repro.core.profiler import Profiler, PROFILE_EVENTS  # noqa: F401
+from repro.core.schedulers import (  # noqa: F401
+    GridSearch, RandomSearch, HyperBand, ASHA, PBT)
+from repro.core.pipetune import PipeTune, TuneV1, TuneV2  # noqa: F401
+from repro.core.job import HPTJob, SearchSpace, SystemSpace  # noqa: F401

@@ -1,0 +1,183 @@
+"""Ground-truth store: k-means similarity over workload profiles (paper §5.4).
+
+scikit-learn is not available offline, so KMeans is implemented here
+(kmeans++ init + Lloyd iterations, fixed seeds). The similarity threshold
+follows the paper: the distance of a new profile to its nearest centroid is
+compared against the model's inertia-derived radius; within the radius we
+reuse the stored optimal system config (no probing), otherwise the job is
+probed and the store is refit (re-clustering).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+class KMeans:
+    """kmeans++ / Lloyd. Deterministic under `seed`."""
+
+    def __init__(self, k: int = 2, seed: int = 0, max_iter: int = 100,
+                 tol: float = 1e-6):
+        self.k, self.seed, self.max_iter, self.tol = k, seed, max_iter, tol
+        self.centroids: Optional[np.ndarray] = None
+        self.inertia_: float = float("inf")
+
+    def _init_centroids(self, X, rng):
+        n = X.shape[0]
+        first = rng.randint(n)
+        cents = [X[first]]
+        for _ in range(1, self.k):
+            d2 = np.min(
+                ((X[:, None, :] - np.asarray(cents)[None]) ** 2).sum(-1), 1)
+            total = d2.sum()
+            if total <= 1e-12:                   # all points coincide
+                cents.append(X[rng.randint(n)])
+            else:
+                cents.append(X[rng.choice(n, p=d2 / total)])
+        return np.asarray(cents)
+
+    def fit(self, X: np.ndarray) -> "KMeans":
+        X = np.asarray(X, np.float64)
+        k = min(self.k, X.shape[0])
+        rng = np.random.RandomState(self.seed)
+        cents = self._init_centroids(X, rng)[:k]
+        for _ in range(self.max_iter):
+            d2 = ((X[:, None, :] - cents[None]) ** 2).sum(-1)
+            assign = d2.argmin(1)
+            new = np.array([X[assign == j].mean(0) if (assign == j).any()
+                            else cents[j] for j in range(k)])
+            shift = np.abs(new - cents).max()
+            cents = new
+            if shift < self.tol:
+                break
+        self.centroids = cents
+        d2 = ((X[:, None, :] - cents[None]) ** 2).sum(-1)
+        self.labels_ = d2.argmin(1)
+        self.inertia_ = float(d2.min(1).sum())
+        return self
+
+    def predict(self, x: np.ndarray) -> Tuple[int, float]:
+        """(cluster, distance) for a single profile vector."""
+        d2 = ((self.centroids - x[None]) ** 2).sum(-1)
+        j = int(d2.argmin())
+        return j, float(np.sqrt(d2[j]))
+
+
+@dataclasses.dataclass
+class GTEntry:
+    profile: np.ndarray
+    workload: str
+    sys_config: dict
+    objective: float
+
+
+class GroundTruth:
+    """Profile -> known-optimal system config, privacy-preserving (§5.5):
+    only low-level profile vectors are stored, never model/dataset identity
+    (the `workload` tag is an opaque id used for evaluation bookkeeping)."""
+
+    def __init__(self, k: int = 2, seed: int = 0, radius_factor: float = 1.5,
+                 min_radius: float = 8.0, min_sigma: float = 0.1,
+                 path: Optional[str] = None):
+        self.k, self.seed = k, seed
+        self.radius_factor = radius_factor
+        # floors keep small stores usable: profile events are log1p-compressed
+        # so min_sigma=0.1 ~= 10% jitter tolerance per event; min_radius ~=
+        # sqrt(58 dims) z-units accepts same-workload jitter while different
+        # workload types sit hundreds of z-units away
+        self.min_radius = min_radius
+        self.min_sigma = min_sigma
+        self.entries: List[GTEntry] = []
+        self.kmeans: Optional[KMeans] = None
+        self._mu = None
+        self._sigma = None
+        self.path = path
+        self.hits = 0
+        self.misses = 0
+        if path and os.path.exists(path):
+            self.load(path)
+
+    # --------------------------------------------------------- normalization
+    def _normalize(self, X):
+        if self._mu is None:
+            return X
+        return (X - self._mu) / self._sigma
+
+    def refit(self):
+        if not self.entries:
+            self.kmeans = None
+            return
+        X = np.stack([e.profile for e in self.entries])
+        self._mu = X.mean(0)
+        self._sigma = np.maximum(X.std(0), self.min_sigma)
+        Xn = self._normalize(X)
+        k = min(max(1, self.k), len(self.entries))
+        self.kmeans = KMeans(k=k, seed=self.seed).fit(Xn)
+
+    # --------------------------------------------------------------- queries
+    @property
+    def radius(self) -> float:
+        """Mean within-cluster distance, scaled — the paper's inertia-based
+        reliability threshold."""
+        if self.kmeans is None or not self.entries:
+            return 0.0
+        mean_d2 = self.kmeans.inertia_ / max(1, len(self.entries))
+        return max(self.radius_factor * float(np.sqrt(mean_d2)),
+                   self.min_radius)
+
+    def lookup(self, profile: np.ndarray) -> Tuple[float, Optional[dict]]:
+        """Returns (similarity score in [0,1], config or None).
+
+        score > 0 iff the profile sits within the cluster radius; the config
+        returned is the best-objective entry of the matched cluster.
+        """
+        if self.kmeans is None:
+            self.misses += 1
+            return 0.0, None
+        x = self._normalize(np.asarray(profile, np.float64))
+        cluster, dist = self.kmeans.predict(x)
+        r = self.radius
+        if r <= 0 or dist > r:
+            self.misses += 1
+            return 0.0, None
+        X = np.stack([e.profile for e in self.entries])
+        labels = self.kmeans.labels_
+        members = [self.entries[i] for i in range(len(self.entries))
+                   if labels[i] == cluster]
+        if not members:
+            self.misses += 1
+            return 0.0, None
+        best = max(members, key=lambda e: e.objective)
+        self.hits += 1
+        return 1.0 - dist / r, dict(best.sys_config)
+
+    def add(self, profile: np.ndarray, workload: str, sys_config: dict,
+            objective: float, refit: bool = True):
+        self.entries.append(GTEntry(np.asarray(profile, np.float64), workload,
+                                    dict(sys_config), float(objective)))
+        if refit:
+            self.refit()
+        if self.path:
+            self.save(self.path)
+
+    # ------------------------------------------------------------------- io
+    def save(self, path: str):
+        payload = [{"profile": e.profile.tolist(), "workload": e.workload,
+                    "sys_config": e.sys_config, "objective": e.objective}
+                   for e in self.entries]
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(payload, f)
+        os.replace(tmp, path)
+
+    def load(self, path: str):
+        with open(path) as f:
+            payload = json.load(f)
+        self.entries = [GTEntry(np.asarray(p["profile"]), p["workload"],
+                                p["sys_config"], p["objective"])
+                        for p in payload]
+        self.refit()

@@ -1,0 +1,76 @@
+"""Backend running the Type-III numeric workloads for real (paper Fig 12).
+
+Short epochs (tens of milliseconds) make the profiling/probing overhead
+proportionally large — the paper's hardest setting for PipeTune. System
+knobs: precision (fp32/bf16), sweeps batching (microbatches analogue:
+1/sweeps scales the epoch's work granularity).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import energy as energy_lib
+from repro.core.backends import EpochResult, TrialState
+from repro.core.profiler import Profiler
+from repro.models import numeric
+
+
+class NumericBackend:
+    def __init__(self):
+        self.profiler = Profiler()
+        self._cache: Dict[tuple, object] = {}
+
+    def init_trial(self, workload: str, hparams: dict, seed: int = 0
+                   ) -> TrialState:
+        cfg = numeric.CONFIGS[workload]
+        state = numeric.init_state(cfg, seed)
+        return TrialState(workload=workload, hparams=dict(hparams), cfg=cfg,
+                          params=state, opt_state=None, step=0, epoch=0,
+                          data=None, eval_batch={}, seed=seed)
+
+    def _epoch_fn(self, cfg, sys_cfg):
+        dtype = jnp.bfloat16 if sys_cfg.get("precision") == "bf16" \
+            else jnp.float32
+        key = (cfg.name, str(dtype))
+        if key not in self._cache:
+            self._cache[key] = jax.jit(numeric._epoch_fn(cfg, dtype))
+        return self._cache[key]
+
+    def run_epoch(self, ts: TrialState, sys_cfg: dict, collect_profile=True
+                  ) -> Tuple[TrialState, EpochResult]:
+        cfg = ts.cfg
+        fn = self._epoch_fn(cfg, sys_cfg)
+        reps = max(1, int(sys_cfg.get("microbatches", 1)))
+        times = []
+        aux = None
+        state = ts.params
+        for _ in range(reps):
+            t0 = time.time()
+            state, aux = fn(state)
+            jax.block_until_ready(aux)
+            times.append(time.time() - t0)
+        if len(times) >= 3:                       # strip first-call compile
+            med = float(np.median(times[1:]))
+            if times[0] > 3.0 * med:
+                times[0] = med
+        acc = numeric.accuracy(cfg, state, aux)
+        ts.params = state
+        ts.epoch += 1
+        util = 0.6
+        profile = self.profiler.build(
+            step_times=times, power_w=energy_lib.power_w(util, 1),
+            loss_start=1 - acc, loss_end=1 - acc,
+            workload_meta={"batch": cfg.size, "seq_or_dim": cfg.size,
+                           "params": cfg.size ** 2, "layers": 1,
+                           "d_model": cfg.size, "vocab": 0},
+            tokens_per_step=cfg.size)
+        return ts, EpochResult(
+            duration_s=float(np.sum(times)),
+            energy_j=energy_lib.epoch_energy(times, util, 1),
+            loss=1 - acc, accuracy=acc, profile=profile,
+            sys_config=dict(sys_cfg), step_times=times)

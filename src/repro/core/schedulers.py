@@ -1,0 +1,179 @@
+"""HPT trial schedulers: GridSearch, RandomSearch, HyperBand, ASHA.
+
+The scheduler proposes (trial_id, hparams, epoch budget) tuples and consumes
+reported scores; the trial *runner* (Tune V1/V2 or PipeTune) decides how each
+trial executes. Survivor trials resume from their checkpointed state, so a
+rung promotion costs only the additional epochs (paper's Tune/HyperBand
+semantics).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.job import SearchSpace
+
+# evaluate(trial_id: str, hparams: dict, total_epochs: int) -> score: float
+Evaluator = Callable[[str, Dict[str, Any], int], float]
+
+
+class GridSearch:
+    def __init__(self, space: SearchSpace, per_dim: int = 3, epochs: int = 9):
+        self.space, self.per_dim, self.epochs = space, per_dim, epochs
+
+    def run(self, evaluate: Evaluator) -> Tuple[Dict[str, Any], float]:
+        best, best_score = None, -math.inf
+        for i, hp in enumerate(self.space.grid(self.per_dim)):
+            score = evaluate(f"grid-{i}", hp, self.epochs)
+            if score > best_score:
+                best, best_score = hp, score
+        return best, best_score
+
+
+class RandomSearch:
+    def __init__(self, space: SearchSpace, n_trials: int = 16, epochs: int = 9,
+                 seed: int = 0):
+        self.space, self.n, self.epochs = space, n_trials, epochs
+        self.seed = seed
+
+    def run(self, evaluate: Evaluator) -> Tuple[Dict[str, Any], float]:
+        rng = np.random.RandomState(self.seed)
+        best, best_score = None, -math.inf
+        for i in range(self.n):
+            hp = self.space.sample(rng)
+            score = evaluate(f"rand-{i}", hp, self.epochs)
+            if score > best_score:
+                best, best_score = hp, score
+        return best, best_score
+
+
+class HyperBand:
+    """Li et al. (JMLR'17) — the paper's default scheduler (§6).
+
+    R: max resource (epochs) per trial; eta: downsampling rate.
+    """
+
+    def __init__(self, space: SearchSpace, R: int = 9, eta: int = 3,
+                 seed: int = 0):
+        self.space, self.R, self.eta, self.seed = space, R, eta, seed
+        self.s_max = int(math.floor(math.log(R, eta)))
+        self.B = (self.s_max + 1) * R
+
+    def brackets(self) -> List[dict]:
+        out = []
+        for s in range(self.s_max, -1, -1):
+            n = int(math.ceil(self.B / self.R * (self.eta ** s) / (s + 1)))
+            r = self.R * (self.eta ** (-s))
+            out.append({"s": s, "n": n, "r": r})
+        return out
+
+    def run(self, evaluate: Evaluator) -> Tuple[Dict[str, Any], float]:
+        rng = np.random.RandomState(self.seed)
+        best, best_score = None, -math.inf
+        for b in self.brackets():
+            n, r, s = b["n"], b["r"], b["s"]
+            trials = [(f"hb{s}-{i}", self.space.sample(rng))
+                      for i in range(n)]
+            for i in range(s + 1):
+                n_i = int(math.floor(n * self.eta ** (-i)))
+                r_i = int(round(r * self.eta ** i))
+                scores = []
+                for tid, hp in trials[:max(1, n_i)]:
+                    score = evaluate(tid, hp, max(1, r_i))
+                    scores.append((score, tid, hp))
+                scores.sort(key=lambda t: -t[0])
+                if scores and scores[0][0] > best_score:
+                    best_score, _, best = scores[0]
+                keep = max(1, int(math.floor(n_i / self.eta)))
+                kept_ids = {tid for _, tid, _ in scores[:keep]}
+                trials = [(tid, hp) for tid, hp in trials if tid in kept_ids]
+        return best, best_score
+
+
+class PBT:
+    """Population-based training (Jaderberg et al., cited by the paper §1):
+    a population trains in parallel; every `interval` epochs the bottom
+    quantile exploits (copies) a top performer's state+hparams and explores
+    (perturbs) them. Requires resumable trials — our TrialRunner gives that
+    for free, and PipeTune's per-epoch system tuning composes under it.
+    """
+
+    def __init__(self, space: SearchSpace, population: int = 8,
+                 total_epochs: int = 9, interval: int = 3, quantile=0.25,
+                 perturb=1.25, seed: int = 0):
+        self.space, self.n, self.R = space, population, total_epochs
+        self.interval, self.quantile, self.perturb = interval, quantile, perturb
+        self.seed = seed
+        self.clone_events = 0
+
+    def _explore(self, hp, rng):
+        out = dict(hp)
+        for k, v in out.items():
+            if isinstance(v, float):
+                out[k] = v * (self.perturb if rng.rand() < 0.5
+                              else 1.0 / self.perturb)
+        return out
+
+    def run(self, evaluate: Evaluator, clone=None
+            ) -> Tuple[Dict[str, Any], float]:
+        """clone(dst_trial_id, src_trial_id) copies trial state (optional —
+        without it PBT degrades to synchronized random search + hparam copy)."""
+        rng = np.random.RandomState(self.seed)
+        pop = [(f"pbt-{i}", self.space.sample(rng)) for i in range(self.n)]
+        scores: Dict[str, float] = {}
+        for epoch in range(self.interval, self.R + 1, self.interval):
+            for tid, hp in pop:
+                scores[tid] = evaluate(tid, hp, epoch)
+            ranked = sorted(pop, key=lambda t: -scores[t[0]])
+            k = max(1, int(self.n * self.quantile))
+            tops, bottoms = ranked[:k], ranked[-k:]
+            for i, (tid, hp) in enumerate(bottoms):
+                src_tid, src_hp = tops[i % len(tops)]
+                if clone is not None:
+                    clone(tid, src_tid)
+                new_hp = self._explore(src_hp, rng)
+                pop[pop.index((tid, hp))] = (tid, new_hp)
+                self.clone_events += 1
+        best_tid, best_hp = max(pop, key=lambda t: scores.get(t[0], -1e9))
+        return best_hp, scores.get(best_tid, 0.0)
+
+
+class ASHA:
+    """Asynchronous successive halving — promotes greedily, tolerates
+    stragglers (a trial stuck at a rung never blocks others)."""
+
+    def __init__(self, space: SearchSpace, max_epochs: int = 9, eta: int = 3,
+                 n_trials: int = 27, seed: int = 0):
+        self.space, self.R, self.eta, self.n = space, max_epochs, eta, n_trials
+        self.seed = seed
+        self.rungs: Dict[int, List[Tuple[float, str]]] = {}
+
+    def _rung_levels(self):
+        levels, r = [], 1
+        while r < self.R:
+            levels.append(r)
+            r *= self.eta
+        return levels + [self.R]
+
+    def run(self, evaluate: Evaluator) -> Tuple[Dict[str, Any], float]:
+        rng = np.random.RandomState(self.seed)
+        best, best_score = None, -math.inf
+        levels = self._rung_levels()
+        for i in range(self.n):
+            tid = f"asha-{i}"
+            hp = self.space.sample(rng)
+            score = None
+            for li, r in enumerate(levels):
+                score = evaluate(tid, hp, r)
+                rung = self.rungs.setdefault(li, [])
+                rung.append((score, tid))
+                rung.sort(key=lambda t: -t[0])
+                k = max(1, len(rung) // self.eta)
+                if (score, tid) not in rung[:k]:
+                    break              # not in top 1/eta -> stop this trial
+            if score is not None and score > best_score:
+                best, best_score = hp, score
+        return best, best_score

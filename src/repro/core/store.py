@@ -1,0 +1,66 @@
+"""File-backed metrics time-series store (the paper's InfluxDB stand-in).
+
+Append-only JSONL per measurement with tags + fields + timestamps, and a
+query surface good enough for the benchmarks: filter by measurement, tags,
+time range.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from typing import Any, Dict, Iterator, List, Optional
+
+
+class MetricsStore:
+    def __init__(self, root: str):
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+        self._lock = threading.Lock()
+        self._buffers: Dict[str, list] = {}
+
+    def _path(self, measurement: str) -> str:
+        return os.path.join(self.root, f"{measurement}.jsonl")
+
+    def write(self, measurement: str, fields: Dict[str, Any],
+              tags: Optional[Dict[str, str]] = None,
+              ts: Optional[float] = None):
+        rec = {"ts": time.time() if ts is None else ts,
+               "tags": tags or {}, "fields": fields}
+        with self._lock:
+            self._buffers.setdefault(measurement, []).append(rec)
+            if len(self._buffers[measurement]) >= 64:
+                self._flush(measurement)
+
+    def _flush(self, measurement: str):
+        buf = self._buffers.get(measurement, [])
+        if not buf:
+            return
+        with open(self._path(measurement), "a") as f:
+            for rec in buf:
+                f.write(json.dumps(rec) + "\n")
+        self._buffers[measurement] = []
+
+    def flush(self):
+        with self._lock:
+            for m in list(self._buffers):
+                self._flush(m)
+
+    def query(self, measurement: str, tags: Optional[Dict[str, str]] = None,
+              t0: float = 0.0, t1: float = float("inf")) -> List[dict]:
+        self.flush()
+        path = self._path(measurement)
+        if not os.path.exists(path):
+            return []
+        out = []
+        with open(path) as f:
+            for line in f:
+                rec = json.loads(line)
+                if not (t0 <= rec["ts"] <= t1):
+                    continue
+                if tags and any(rec["tags"].get(k) != v
+                                for k, v in tags.items()):
+                    continue
+                out.append(rec)
+        return out

@@ -1,0 +1,2 @@
+from repro.data.synthetic import (  # noqa: F401
+    make_image_dataset, make_text_dataset, make_lm_dataset, Batches)

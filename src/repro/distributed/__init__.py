@@ -1,0 +1,2 @@
+from repro.distributed.sharding import (  # noqa: F401
+    param_specs, batch_specs, cache_specs, state_specs, BATCH_AXES)

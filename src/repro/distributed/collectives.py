@@ -1,0 +1,53 @@
+"""Compression-aware data-parallel gradient reduction via shard_map.
+
+TPU adaptation of 1-bit/int8-Adam-style compressed reduction: int8 values
+cannot be ring-all-reduced (summing saturates), so each DP rank quantizes its
+local gradient, the int8 payload + per-tensor scales are all-gathered over
+the data axis, and the dequantized mean is computed locally. Wire bytes drop
+~4x vs an fp32 all-reduce (the roofline collective term tracks this via
+``repro.distributed.compression.compressed_bytes``). Error feedback is the
+caller's job (``compression.compress_grads``) so convergence is preserved.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.distributed import compression
+
+
+def compressed_psum_mean(x, axis_name: str, method: str = "int8"):
+    """Inside shard_map: mean of per-rank x over `axis_name`.
+
+    method="none" is the plain fp32 pmean (for A/B tests).
+    """
+    if method == "none":
+        return jax.lax.pmean(x, axis_name)
+    q, scale = compression.quantize_int8(x)
+    qg = jax.lax.all_gather(q, axis_name)              # (W, ...) int8 payload
+    sg = jax.lax.all_gather(scale, axis_name)          # (W,) scales
+    deq = qg.astype(jnp.float32) * sg.reshape(
+        (-1,) + (1,) * (qg.ndim - 1))
+    return jnp.mean(deq, axis=0)
+
+
+def compressed_grad_mean(stacked_grads, mesh: Mesh, axis_name: str = "data",
+                         method: str = "int8"):
+    """Reduce per-rank gradients to their (replicated) mean.
+
+    ``stacked_grads`` leaves carry the per-rank values on a leading axis of
+    size = mesh axis size (the layout local grads have after a per-rank
+    value_and_grad under shard_map). Returns the mean without the rank axis,
+    identical on every rank.
+    """
+    def body(g_local):
+        return jax.tree.map(
+            lambda t: compressed_psum_mean(t[0], axis_name, method),
+            g_local)
+
+    in_specs = jax.tree.map(lambda _: P(axis_name), stacked_grads)
+    out_specs = jax.tree.map(lambda _: P(), stacked_grads)
+    return shard_map(body, mesh=mesh, in_specs=(in_specs,),
+                     out_specs=out_specs, check_rep=False)(stacked_grads)

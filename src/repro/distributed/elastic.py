@@ -1,0 +1,30 @@
+"""Elastic re-sharding: move live state onto a different mesh.
+
+Used for (a) PipeTune's epoch-boundary system-parameter switches (different
+dp x tp split of the same chips), (b) fault recovery onto fewer nodes, and
+(c) elastic grow/shrink under cluster pressure. Logical arrays are identical
+before/after; only placement changes.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.distributed import sharding
+
+
+def reshard_state(state, cfg, old_mesh, new_mesh, sys):
+    """device_put the full train state onto new_mesh with the rule-derived
+    shardings. Works across device *counts* too (restore-on-smaller-slice)."""
+    specs = sharding.state_specs(state, cfg, new_mesh, sys)
+    shardings = jax.tree.map(
+        lambda s: jax.sharding.NamedSharding(new_mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+    return jax.tree.map(jax.device_put, state, shardings)
+
+
+def reshard_params(params, cfg, new_mesh, sys):
+    specs = sharding.param_specs(params, cfg, new_mesh, sys)
+    shardings = jax.tree.map(
+        lambda s: jax.sharding.NamedSharding(new_mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+    return jax.tree.map(jax.device_put, params, shardings)

@@ -1,0 +1,264 @@
+"""Named-axis sharding rules for every model family.
+
+Mesh axes: ("data", "model") single-pod, ("pod", "data", "model") multi-pod.
+Batch always shards over ("pod","data"); tensor-parallel dims over "model".
+Rules are divisibility-checked against the mesh: the first dim in a tensor's
+preference list that divides evenly gets the "model" axis (GSPMD could pad
+uneven dims, but even sharding keeps the roofline honest); big 2D+ params
+additionally take an "fsdp" dim over ("pod","data") when
+``sys.param_sharding == "2d"`` (ZeRO-3-style, gathered per scan step).
+
+The hillclimb in EXPERIMENTS.md §Perf mutates exactly these rules.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+BATCH_AXES = ("pod", "data")          # logical batch axes (subset present in mesh)
+
+
+def _mesh_axis_sizes(mesh: Mesh):
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _batch_axes(mesh: Mesh):
+    return tuple(a for a in BATCH_AXES if a in mesh.axis_names)
+
+
+def _fsdp_axes(mesh: Mesh, sys) -> Optional[tuple]:
+    if getattr(sys, "param_sharding", "2d") != "2d":
+        return None
+    return _batch_axes(mesh) or None
+
+
+def _divides(n, mesh_sizes, axes):
+    total = 1
+    for a in (axes if isinstance(axes, tuple) else (axes,)):
+        total *= mesh_sizes[a]
+    return n % total == 0
+
+
+class RuleEngine:
+    """Maps param-tree paths to PartitionSpecs via ordered regex rules.
+
+    Each rule is (path_regex, [axis_prefs per tensor dim]) where an axis pref
+    is a list of candidate assignments tried in order: "model", "fsdp",
+    or None. The first candidate whose mesh product divides the dim wins.
+    """
+
+    def __init__(self, mesh: Mesh, sys):
+        self.sizes = _mesh_axis_sizes(mesh)
+        self.fsdp = _fsdp_axes(mesh, sys)
+        self.mesh = mesh
+
+    def _resolve(self, dim_size, prefs, taken):
+        for cand in prefs:
+            if cand is None:
+                return None
+            padded = isinstance(cand, str) and cand.endswith("~")
+            base = cand.rstrip("~")
+            axes = self.fsdp if base == "fsdp" else ("model",)
+            if axes is None:
+                continue
+            if any(a in taken for a in axes) or not all(
+                    a in self.sizes for a in axes):
+                continue
+            if _divides(dim_size, self.sizes, axes):
+                taken.update(axes)
+                return axes if len(axes) > 1 else axes[0]
+            if padded:
+                # GSPMD pads uneven dims; allow when waste stays <= 2x
+                total = 1
+                for a in axes:
+                    total *= self.sizes[a]
+                shard = -(-dim_size // total)
+                if shard * total <= 2 * dim_size:
+                    taken.update(axes)
+                    return axes if len(axes) > 1 else axes[0]
+        return None
+
+    def spec(self, shape, dim_prefs):
+        taken: set = set()
+        out = []
+        for size, prefs in zip(shape, dim_prefs):
+            out.append(self._resolve(size, prefs, taken))
+        return P(*out)
+
+
+# Ordered (regex, dim_prefs) rules. Dim prefs are per-dimension candidate
+# lists; unlisted trailing dims default to replicated.
+_RULES = [
+    # --- attention: params must shard exactly (inputs can't pad), so the
+    # chain K -> G -> D picks the first dividing axis; activations are
+    # re-constrained to (padded) head sharding inside the block, which keeps
+    # score math device-local (layers.shard_heads).
+    (r"attn/wq$",      [["fsdp"], ["model"], ["model"], ["model"]]),   # (d,K,G,D)
+    (r"attn/wk$",      [["fsdp"], ["model"], ["model"]]),              # (d,K,D)
+    (r"attn/wv$",      [["fsdp"], ["model"], ["model"]]),
+    (r"attn/wo$",      [["model"], ["model"], ["model"], ["fsdp"]]),   # (K,G,D,d)
+    (r"attn/b[qkv]$",  [[None], [None], [None]]),
+    # --- dense MLP ---
+    (r"mlp/w_(gate|up)$", [["fsdp"], ["model"]]),                      # (d,f)
+    (r"mlp/w_down$",      [["model"], ["fsdp"]]),                      # (f,d)
+    (r"(mlp|shared)/b_(up|down)$", [[None]]),
+    # --- MoE experts: E rarely divides the data axis (8, 60), so the d_model
+    # dim takes the FSDP axis as fallback (ZeRO-3 gather per layer) ---
+    (r"moe/router$",   [[None], [None]]),
+    (r"moe/w_(gate|up)$", [["fsdp"], ["fsdp"], ["model"]]),            # (E,d,f)
+    (r"moe/w_down$",      [["fsdp"], ["model"], ["fsdp"]]),            # (E,f,d)
+    (r"shared/w_(gate|up)$", [["fsdp"], ["model"]]),
+    (r"shared/w_down$",      [["model"], ["fsdp"]]),
+    # --- RG-LRU ---
+    (r"rec/w_in_(x|gate)$", [["fsdp"], ["model"]]),                    # (d,r)
+    (r"rec/conv_w$",        [[None], ["model"]]),
+    (r"rec/(w_a|w_x)$",     [[None], ["model"]]),                      # (r,r)
+    (r"rec/(b_a|b_x|Lambda|conv_b)$", [["model"]]),
+    (r"rec/w_out$",         [["model"], ["fsdp"]]),                    # (r,d)
+    # --- xLSTM ---
+    (r"cell/w_(up|gate)$", [["fsdp"], ["model"]]),                     # (d,di)
+    (r"cell/conv_w$",      [[None], ["model"]]),
+    (r"cell/conv_b$",      [["model"]]),
+    (r"cell/w[qkv]$",      [["model"], [None], [None]]),               # (di,H,D)
+    (r"cell/w_if$",        [[None], [None], [None]]),
+    (r"cell/b_if$",        [[None], [None]]),
+    (r"cell/w_down$",      [["model"], ["fsdp"]]),                     # (di,d)
+    (r"cell/w_in$",        [["fsdp"], ["model"]]),                     # sLSTM (d,4di)
+    (r"cell/w_rec$",       [[None], ["model"]]),                       # (di,4di)
+    (r"cell/b$",           [["model"]]),
+    # --- whisper enc-dec MHA (H=12 does not divide 16 -> D=64 shards) ---
+    (r"(self|cross)/w[qkv]$", [["fsdp"], ["model"], ["model"]]),       # (d,H,D)
+    (r"(self|cross)/wo$",     [["model"], ["model"], ["fsdp"]]),       # (H,D,d)
+    # --- embeddings / heads / norms ---
+    # d_model stays unsharded here: fsdp('data') on the gather/contraction dim
+    # collides with the batch's 'data' axis and GSPMD resolves it by
+    # replicating the batch — catastrophically (found in the §Perf log).
+    (r"embed$",        [["model"], [None]]),                           # (V,d)
+    (r"lm_head$",      [[None], ["model"]]),                           # (d,V)
+    (r"adapter$",      [[None], ["model"]]),
+    (r"(norm|scale|bias)", [[None]]),
+]
+
+
+def _path_str(path):
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_specs(params_tree, cfg, mesh: Mesh, sys) -> Any:
+    """PartitionSpec pytree for a (possibly abstract) params pytree.
+
+    Stacked layer dims (leading scan axes added by vmap-init) are detected by
+    comparing leaf rank to the rule's dim count and treated as replicated.
+    """
+    engine = RuleEngine(mesh, sys)
+
+    def per_leaf(path, leaf):
+        ps = _path_str(path)
+        for regex, prefs in _RULES:
+            if re.search(regex, ps):
+                ndim = len(leaf.shape)
+                extra = ndim - len(prefs)
+                if extra >= 0:          # leading dims are layer-stack axes
+                    dim_prefs = [[None]] * extra + prefs
+                else:                   # defensive: rule longer than leaf
+                    dim_prefs = prefs[-ndim:]
+                return engine.spec(leaf.shape, dim_prefs)
+        return P(*([None] * len(leaf.shape)))
+
+    return jax.tree_util.tree_map_with_path(per_leaf, params_tree)
+
+
+def batch_specs(batch_tree, mesh: Mesh) -> Any:
+    axes = _batch_axes(mesh)
+    baxes = axes if len(axes) > 1 else (axes[0] if axes else None)
+
+    def per_leaf(leaf):
+        return P(*([baxes] + [None] * (len(leaf.shape) - 1)))
+    return jax.tree.map(per_leaf, batch_tree)
+
+
+def cache_specs(cache_tree, cfg, mesh: Mesh) -> Any:
+    """Decode caches: batch over data axes; head/state dims over model."""
+    engine = RuleEngine(mesh, sys=type("S", (), {"param_sharding": "tp"})())
+    axes = _batch_axes(mesh)
+    baxes = axes if len(axes) > 1 else (axes[0] if axes else None)
+    sizes = _mesh_axis_sizes(mesh)
+
+    def per_leaf(path, leaf):
+        ps = _path_str(path)
+        shape = leaf.shape
+        spec = [None] * len(shape)
+        # find the batch dim: first dim matching known stacked prefixes is the
+        # layer axis; batch is the first non-layer dim. Caches are built as
+        # (L, B, ...) or (L, G, B, ...) or (B, ...) for tails.
+        # Heuristic: shard the first dim whose size is divisible by the data
+        # axes product AND which is not obviously a layer dim (< 8 layers ok
+        # for reduced; we instead mark batch by name).
+        b_idx = _cache_batch_dim(ps, shape)
+        if b_idx is not None and baxes is not None:
+            prod = 1
+            for a in axes:
+                prod *= sizes[a]
+            if shape[b_idx] % prod == 0:
+                spec[b_idx] = baxes
+        # model-shard the first exactly-dividing candidate dim. KV caches
+        # prefer the sequence/window axis (flash-decoding style split-KV:
+        # scores shard-local, only tiny softmax stats + output all-reduce).
+        m = sizes.get("model", 1)
+        for i in _cache_model_dims(ps, len(shape)):
+            if i != b_idx and spec[i] is None and shape[i] % m == 0 \
+                    and shape[i] >= m:
+                spec[i] = "model"
+                break
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(per_leaf, cache_tree)
+
+
+def _cache_batch_dim(path_str, shape):
+    """Cache layouts (see transformer.init_cache):
+    attn k/v: (L, B, W, K, D); hybrid recs: (G, R, B, ...); tails: (T, B, ...);
+    ssm mlstms: (G, M, B, ...); slstm: (G, B, di); encdec: (L, B, ...)."""
+    if re.search(r"recs/|mlstms/", path_str):
+        return 2
+    if re.search(r"tail/|slstm/|self_k|self_v|cross_k|cross_v|attn/|^k$|/k$|/v$",
+                 path_str):
+        return 1
+    return 1 if len(shape) > 1 else None
+
+
+def _cache_model_dims(path_str, rank):
+    """Ordered candidate dims for model-axis sharding of a cache leaf."""
+    if re.search(r"(^|/)[kv]$|self_k|self_v|cross_k|cross_v", path_str):
+        # kv-heads, then head_dim. (Window-axis sharding looks attractive —
+        # flash-decoding style — but the ring-buffer dynamic-update-slice at a
+        # data-dependent slot makes GSPMD gather the cache; see §Perf log.)
+        return [rank - 2, rank - 1]
+    if re.search(r"/C$|/n$|/h$|/conv$", path_str):
+        return [rank - 1]               # state feature dim
+    return []
+
+
+def state_specs(state_tree, cfg, mesh: Mesh, sys) -> Any:
+    """TrainState {params, opt{m,v}, step} -> spec tree."""
+    pspec = param_specs(state_tree["params"], cfg, mesh, sys)
+    return {"params": pspec,
+            "opt": {k: pspec for k in state_tree["opt"]},
+            "step": P()}
+
+
+def named(tree, spec_tree, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

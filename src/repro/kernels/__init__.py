@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the compute hot spots of the assigned archs.
+
+flash_attention — blockwise causal GQA attention (+ sliding window); removes
+                  the score-class HBM traffic that dominates the XLA-only
+                  memory roofline term (EXPERIMENTS.md §Perf).
+rglru           — chunked RG-LRU linear recurrence (recurrentgemma).
+mlstm           — chunkwise-parallel matrix-memory recurrence (xlstm).
+
+Each kernel ships ops.py (jit wrapper) and ref.py (pure-jnp oracle) and is
+validated in interpret=True mode on CPU across shape/dtype sweeps.
+"""

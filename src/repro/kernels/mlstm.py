@@ -1,0 +1,120 @@
+"""Chunkwise-parallel mLSTM Pallas kernel (xLSTM matrix memory).
+
+Grid: (B, H, num_chunks); chunks minor-most so each core walks the sequence
+carrying (C (D,D), n (D,), m ()) in VMEM scratch. Per chunk:
+
+  intra: the stabilized quadratic form — two MXU matmuls (q@k^T, (w*s)@v) +
+         VPU cumsum/max/exp for the decay matrix;
+  inter: q @ C_carry (MXU) weighted by the carried stabilizer;
+  state: C <- exp(F_tot + m - m_new) C + (in_w * v)^T (k scale) (MXU outer).
+
+The GPU xLSTM kernel leans on shared-memory tiles per SM; the TPU analogue
+keeps the whole (D,D) matrix memory resident in VMEM across the sequence
+walk (D<=512 -> <=1MB fp32, well under the ~16MB VMEM budget), which is the
+hardware-adaptation note recorded in DESIGN.md §5.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mlstm_kernel(q_ref, k_ref, v_ref, ig_ref, fg_ref, h_ref,
+                  C_ref, n_ref, m_ref, *, chunk: int, head_dim: int):
+    si = pl.program_id(2)
+    scale = 1.0 / math.sqrt(head_dim)
+
+    @pl.when(si == 0)
+    def _init():
+        C_ref[...] = jnp.zeros_like(C_ref)
+        n_ref[...] = jnp.zeros_like(n_ref)
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # (Q, D)
+    k = k_ref[0, 0].astype(jnp.float32) * scale
+    v = v_ref[0, 0].astype(jnp.float32)
+    ig = ig_ref[0, 0].astype(jnp.float32)          # (Q,)
+    fg = fg_ref[0, 0].astype(jnp.float32)
+
+    logf = jax.nn.log_sigmoid(fg)
+    F = jnp.cumsum(logf)                           # (Q,)
+    Ftot = F[-1]
+    m_prev = m_ref[0]
+
+    # --- row stabilizers
+    m_inter = F + m_prev                           # (Q,)
+    logw = F[:, None] - F[None, :] + ig[None, :]   # (Q s, Q t)
+    causal = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1) <= \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    logw = jnp.where(causal, logw, -jnp.inf)
+    m_intra = jnp.max(logw, axis=1)
+    m_row = jnp.maximum(m_inter, m_intra)          # (Q,)
+
+    w = jnp.exp(logw - m_row[:, None])
+    s_qk = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+    a = s_qk * w
+    num = jax.lax.dot(a, v, preferred_element_type=jnp.float32)   # (Q, D)
+    den = jnp.sum(a, axis=1)                                      # (Q,)
+
+    w_state = jnp.exp(m_inter - m_row)
+    num = num + w_state[:, None] * jax.lax.dot(
+        q, C_ref[...], preferred_element_type=jnp.float32)
+    den = den + w_state * jax.lax.dot(
+        q, n_ref[0][:, None], preferred_element_type=jnp.float32)[:, 0]
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_row))[:, None]
+    h_ref[0, 0] = h.astype(h_ref.dtype)
+
+    # --- state update
+    m_new = jnp.maximum(Ftot + m_prev, jnp.max(ig + Ftot - F))
+    carry_w = jnp.exp(Ftot + m_prev - m_new)
+    in_w = jnp.exp(ig + Ftot - F - m_new)          # (Q,)
+    C_ref[...] = carry_w * C_ref[...] + jax.lax.dot_general(
+        k * in_w[:, None], v, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    n_ref[0] = carry_w * n_ref[0] + jnp.sum(k * in_w[:, None], axis=0)
+    m_ref[0] = m_new
+
+
+def mlstm_chunkwise(q, k, v, i_gate, f_gate, *, chunk=128, interpret=True):
+    """q,k,v: (B, S, H, D); gates: (B, S, H). Returns h (B, S, H, D).
+
+    Kernel computes the sequence outputs; final state stays in scratch (the
+    decode path carries state explicitly via repro.models.xlstm).
+    """
+    B, S, H, D = q.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0, f"S={S} must be divisible by chunk={chunk}"
+    ns = S // chunk
+
+    def arrange(x):
+        return jnp.moveaxis(x, 2, 1)               # (B, H, S, ...)
+
+    q2, k2, v2 = arrange(q), arrange(k), arrange(v)
+    ig2, fg2 = arrange(i_gate), arrange(f_gate)
+
+    out = pl.pallas_call(
+        functools.partial(_mlstm_kernel, chunk=chunk, head_dim=D),
+        grid=(B, H, ns),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, D), lambda b, h, s: (b, h, s, 0)),
+            pl.BlockSpec((1, 1, chunk, D), lambda b, h, s: (b, h, s, 0)),
+            pl.BlockSpec((1, 1, chunk, D), lambda b, h, s: (b, h, s, 0)),
+            pl.BlockSpec((1, 1, chunk), lambda b, h, s: (b, h, s)),
+            pl.BlockSpec((1, 1, chunk), lambda b, h, s: (b, h, s)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk, D), lambda b, h, s: (b, h, s, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((D, D), jnp.float32),       # matrix memory C
+            pltpu.VMEM((1, D), jnp.float32),       # normalizer n
+            pltpu.VMEM((1,), jnp.float32),         # stabilizer m
+        ],
+        interpret=interpret,
+    )(q2, k2, v2, ig2, fg2)
+    return jnp.moveaxis(out, 1, 2)                 # (B, S, H, D)

@@ -1,0 +1,122 @@
+"""Public jit'd kernel ops with autodiff.
+
+Forward = Pallas kernel; backward = recompute through the jnp oracle
+(flash-style: nothing score-shaped is saved, the backward recomputes blocks).
+``interpret`` defaults to True so everything runs on CPU; TPU launchers pass
+interpret=False.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as fa_kernel
+from repro.kernels import flash_attention_bwd as fa_bwd_kernel
+from repro.kernels import mlstm as mlstm_kernel
+from repro.kernels import rglru as rglru_kernel
+from repro.kernels import ref
+
+
+# ---------------------------------------------------------------- attention
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def flash_attention(q, k, v, causal=True, window=None, q_block=128,
+                    kv_block=128, interpret=True):
+    return fa_kernel.flash_attention(q, k, v, causal=causal, window=window,
+                                     q_block=q_block, kv_block=kv_block,
+                                     interpret=interpret)
+
+
+def _fa_fwd(q, k, v, causal, window, q_block, kv_block, interpret):
+    out = flash_attention(q, k, v, causal, window, q_block, kv_block,
+                          interpret)
+    return out, (q, k, v)
+
+
+def _fa_bwd(causal, window, q_block, kv_block, interpret, res, g):
+    q, k, v = res
+    # recompute-through-oracle backward (identical math, nothing saved)
+    _, vjp = jax.vjp(lambda q, k, v: ref.flash_attention_ref(
+        q, k, v, causal=causal, window=window,
+        q_chunk=q_block, kv_chunk=kv_block), q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_fa_fwd, _fa_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def flash_attention_fused(q, k, v, causal=True, window=None, q_block=128,
+                          kv_block=128, interpret=True):
+    """Kernel forward AND kernel backward (dq/dk/dv Pallas kernels) —
+    score blocks never touch HBM in either direction."""
+    out, _ = fa_kernel.flash_attention(
+        q, k, v, causal=causal, window=window, q_block=q_block,
+        kv_block=kv_block, interpret=interpret, return_lse=True)
+    return out
+
+
+def _faf_fwd(q, k, v, causal, window, q_block, kv_block, interpret):
+    out, lse = fa_kernel.flash_attention(
+        q, k, v, causal=causal, window=window, q_block=q_block,
+        kv_block=kv_block, interpret=interpret, return_lse=True)
+    return out, (q, k, v, out, lse)
+
+
+def _faf_bwd(causal, window, q_block, kv_block, interpret, res, g):
+    q, k, v, out, lse = res
+    return fa_bwd_kernel.flash_attention_bwd(
+        q, k, v, out, lse, g, causal=causal, window=window,
+        q_block=q_block, kv_block=kv_block, interpret=interpret)
+
+
+flash_attention_fused.defvjp(_faf_fwd, _faf_bwd)
+
+
+# ------------------------------------------------------------------- rglru
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def rglru(log_a, b, h0, chunk=128, r_block=128, interpret=True):
+    h, h_last = rglru_kernel.rglru_scan(log_a, b, h0, chunk=chunk,
+                                        r_block=r_block, interpret=interpret)
+    return h, h_last
+
+
+def _rglru_fwd(log_a, b, h0, chunk, r_block, interpret):
+    out = rglru(log_a, b, h0, chunk, r_block, interpret)
+    return out, (log_a, b, h0)
+
+
+def _rglru_bwd(chunk, r_block, interpret, res, g):
+    log_a, b, h0 = res
+    _, vjp = jax.vjp(lambda la, b, h0: ref.rglru_ref(la, b, h0),
+                     log_a, b, h0)
+    return vjp(g)
+
+
+rglru.defvjp(_rglru_fwd, _rglru_bwd)
+
+
+# ------------------------------------------------------------------- mlstm
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def mlstm(q, k, v, i_gate, f_gate, chunk=128, interpret=True):
+    return mlstm_kernel.mlstm_chunkwise(q, k, v, i_gate, f_gate, chunk=chunk,
+                                        interpret=interpret)
+
+
+def _mlstm_fwd(q, k, v, i_gate, f_gate, chunk, interpret):
+    out = mlstm(q, k, v, i_gate, f_gate, chunk, interpret)
+    return out, (q, k, v, i_gate, f_gate)
+
+
+def _mlstm_bwd(chunk, interpret, res, g):
+    q, k, v, ig, fg = res
+    _, vjp = jax.vjp(lambda q, k, v, ig, fg: ref.mlstm_ref(
+        q, k, v, ig, fg, chunk=chunk)[0], q, k, v, ig, fg)
+    return vjp(g)
+
+
+mlstm.defvjp(_mlstm_fwd, _mlstm_bwd)

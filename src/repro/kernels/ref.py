@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for every kernel (single source of truth for tests).
+
+These delegate to the model-layer implementations, so a kernel validated
+against ref.py is by construction consistent with what the models compute.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models import layers, recurrent, xlstm
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None,
+                        q_chunk=1024, kv_chunk=1024):
+    """q: (B,S,K,G,D); k,v: (B,T,K,D)."""
+    return layers.chunked_attention(q, k, v, causal=causal, window=window,
+                                    q_chunk=q_chunk, kv_chunk=kv_chunk)
+
+
+def attention_direct_ref(q, k, v, *, causal=True, window=None):
+    return layers.attention(q, k, v, causal=causal, window=window)
+
+
+def rglru_ref(log_a, b, h0=None):
+    """Linear recurrence h_t = exp(log_a_t) * h_{t-1} + b_t.
+
+    log_a, b: (B, S, R) fp32; h0: (B, R) fp32 or None.
+    Returns (h (B,S,R) fp32, h_last (B,R)).
+    """
+    import jax
+    from jax import lax
+
+    if h0 is not None:
+        b = b.at[:, 0].add(jnp.exp(log_a[:, 0]) * h0)
+
+    def combine(c1, c2):
+        (la1, b1), (la2, b2) = c1, c2
+        return la1 + la2, jnp.exp(la2) * b1 + b2
+
+    la, h = lax.associative_scan(combine, (log_a, b), axis=1)
+    return h, h[:, -1]
+
+
+def mlstm_ref(q, k, v, i_gate, f_gate, chunk=256, state=None):
+    """Chunkwise mLSTM oracle — delegates to the model implementation."""
+    return xlstm.mlstm_chunkwise(q, k, v, i_gate, f_gate, chunk=chunk,
+                                 state=state)

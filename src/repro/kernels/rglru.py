@@ -1,0 +1,73 @@
+"""Chunked RG-LRU linear-recurrence Pallas kernel.
+
+Grid: (B, num_R_blocks, num_S_chunks) with the sequence axis minor-most —
+the TPU core walks chunks sequentially carrying the hidden state h in VMEM
+scratch. Inside a chunk, a fori_loop applies h = exp(log_a)*h + b per step on
+the VPU (pure elementwise on an (Rb,) vector — the recurrence has no matmul,
+so the kernel's job is purely to keep h and the chunk tiles resident in VMEM
+and stream (log_a, b) through one DMA per chunk).
+
+This is the TPU adaptation of Griffin's fused scan: the GPU version leans on
+warp shuffles for the intra-warp scan; on TPU the sequential-grid + VMEM
+carry is the idiomatic equivalent (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rglru_kernel(la_ref, b_ref, h0_ref, o_ref, h_ref, *, chunk: int):
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        h_ref[...] = h0_ref[0].astype(jnp.float32)
+
+    la = la_ref[0].astype(jnp.float32)        # (chunk, Rb)
+    b = b_ref[0].astype(jnp.float32)
+
+    def step(t, h):
+        h = jnp.exp(la[t]) * h + b[t]
+        pl.store(o_ref, (0, pl.dslice(t, 1), slice(None)),
+                 h[None].astype(o_ref.dtype))
+        return h
+
+    h_ref[...] = jax.lax.fori_loop(0, chunk, step, h_ref[...])
+
+
+def rglru_scan(log_a, b, h0=None, *, chunk=128, r_block=128, interpret=True):
+    """log_a, b: (B, S, R) fp32; h0: (B, R) fp32. Returns (h, h_last)."""
+    B, S, R = log_a.shape
+    if h0 is None:
+        h0 = jnp.zeros((B, R), jnp.float32)
+    chunk = min(chunk, S)
+    r_block = min(r_block, R)
+    ns = -(-S // chunk)
+    nr = -(-R // r_block)
+    Sp, Rp = ns * chunk, nr * r_block
+    if Sp != S or Rp != R:
+        log_a = jnp.pad(log_a, ((0, 0), (0, Sp - S), (0, Rp - R)))
+        b = jnp.pad(b, ((0, 0), (0, Sp - S), (0, Rp - R)))
+        h0 = jnp.pad(h0, ((0, 0), (0, Rp - R)))
+
+    out = pl.pallas_call(
+        functools.partial(_rglru_kernel, chunk=chunk),
+        grid=(B, nr, ns),
+        in_specs=[
+            pl.BlockSpec((1, chunk, r_block), lambda bi, ri, si: (bi, si, ri)),
+            pl.BlockSpec((1, chunk, r_block), lambda bi, ri, si: (bi, si, ri)),
+            pl.BlockSpec((1, r_block), lambda bi, ri, si: (bi, ri)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, r_block),
+                               lambda bi, ri, si: (bi, si, ri)),
+        out_shape=jax.ShapeDtypeStruct((B, Sp, Rp), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((r_block,), jnp.float32)],
+        interpret=interpret,
+    )(log_a, b, h0)
+    h = out[:, :S, :R]
+    return h, h[:, -1]

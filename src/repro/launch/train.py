@@ -1,0 +1,83 @@
+"""Training launcher: real training of a (reduced or custom) arch on local
+devices, with checkpoint/restart and optional PipeTune system tuning.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b --reduced \
+        --steps 100 --ckpt /tmp/ck
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.checkpoint import CheckpointManager
+from repro.data import synthetic
+from repro.launch import steps as steps_lib
+from repro.models.transformer import SystemConfig
+from repro.optim import optimizers
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--remat", default="none")
+    ap.add_argument("--precision", default="fp32")
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    cfg = configs.get_reduced(args.arch) if args.reduced \
+        else configs.get_config(args.arch)
+    if steps_lib.is_encdec(cfg):
+        raise SystemExit("use whisper paths via examples; train.py covers LM")
+    sys = SystemConfig(microbatches=args.microbatches, remat=args.remat,
+                       precision=args.precision)
+    opt = optimizers.adamw(
+        optimizers.warmup_cosine(args.lr, 10, args.steps), weight_decay=0.01)
+    step_fn = jax.jit(steps_lib.make_train_step(cfg, sys, opt),
+                      donate_argnums=(0,))
+    state = steps_lib.make_train_state(jax.random.PRNGKey(0), cfg, opt)
+
+    mgr = CheckpointManager(args.ckpt, keep=2) if args.ckpt else None
+    start = 0
+    if mgr and args.resume:
+        restored, meta = mgr.restore(jax.eval_shape(lambda: state))
+        if restored is not None:
+            state, start = restored, meta["step"]
+            print(f"resumed from step {start}")
+
+    toks = synthetic.make_lm_dataset(0, args.batch * args.seq * 32, cfg.vocab)
+    stream = toks[:args.batch * args.seq * 32].reshape(-1, args.batch,
+                                                       args.seq)
+    t0 = time.time()
+    loss = float("nan")
+    for step in range(start, args.steps):
+        chunk = stream[step % len(stream)]
+        batch = {"tokens": jnp.asarray(chunk),
+                 "labels": jnp.asarray(np.roll(chunk, -1, -1))}
+        state, m = step_fn(state, batch)
+        loss = float(m["loss"])
+        if mgr and (step + 1) % args.ckpt_every == 0:
+            mgr.save(step + 1, state, metadata={"step": step + 1})
+        if (step + 1) % 10 == 0:
+            print(f"step {step+1:4d} loss={loss:.4f} "
+                  f"({(time.time()-t0)/10:.2f}s/step)")
+            t0 = time.time()
+    if mgr:
+        mgr.wait()
+    print(f"done: final loss {loss:.4f}")
+
+
+if __name__ == "__main__":
+    main()

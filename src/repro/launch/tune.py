@@ -1,0 +1,76 @@
+"""HPT-job launcher: run a full PipeTune (or baseline) tuning job.
+
+    PYTHONPATH=src python -m repro.launch.tune --workload lenet-mnist \
+        --system pipetune --scheduler hyperband --epochs 9
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.cluster.sim import SimBackend, SimSystemSpace
+from repro.core import (GroundTruth, HPTJob, PipeTune, SearchSpace,
+                        SystemSpace, TuneV1, TuneV2)
+from repro.core.backends import RealBackend
+from repro.core.job import Param
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workload", default="lenet-mnist")
+    ap.add_argument("--system", default="pipetune",
+                    choices=["pipetune", "v1", "v2"])
+    ap.add_argument("--scheduler", default="hyperband",
+                    choices=["hyperband", "random", "grid"])
+    ap.add_argument("--epochs", type=int, default=6)
+    ap.add_argument("--backend", default="real", choices=["real", "sim"])
+    ap.add_argument("--gt-store", default=None,
+                    help="path for the persistent ground-truth store")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    space = SearchSpace([
+        Param("batch_size", "choice", choices=(32, 64, 128)),
+        Param("learning_rate", "log", 0.001, 0.1),
+        Param("dropout", "float", 0.0, 0.5),
+    ])
+    job = HPTJob(workload=args.workload, space=space, max_epochs=args.epochs)
+
+    if args.backend == "real":
+        backend = RealBackend(n_train=1024, n_eval=256, steps_per_epoch=8)
+        sys_space = SystemSpace(remat=("none", "block"),
+                                microbatches=(1, 2, 4),
+                                precision=("fp32", "bf16"))
+    else:
+        backend = SimBackend()
+        sys_space = SimSystemSpace()
+
+    gt = GroundTruth(path=args.gt_store)
+    if args.system == "pipetune":
+        runner = PipeTune(backend, sys_space, groundtruth=gt, max_probes=4)
+    elif args.system == "v2":
+        runner = TuneV2(backend, sys_space)
+    else:
+        runner = TuneV1(backend)
+
+    kw = {"n_trials": 6} if args.scheduler == "random" else {}
+    res = runner.run_job(job, scheduler=args.scheduler, **kw)
+    print(f"workload={args.workload} system={args.system} "
+          f"scheduler={args.scheduler}")
+    print(f"  best accuracy : {res.best_accuracy:.4f}")
+    print(f"  best hparams  : {res.best_hparams}")
+    print(f"  tuning time   : {res.tuning_time_s:.1f}s "
+          f"({len(res.records)} trials)")
+    print(f"  energy        : {res.energy_j/1e3:.1f} kJ")
+    if args.system == "pipetune":
+        print(f"  ground truth  : {res.gt_hits} hits / {res.gt_misses} misses")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({"accuracy": res.best_accuracy,
+                       "hparams": res.best_hparams,
+                       "tuning_time_s": res.tuning_time_s,
+                       "energy_j": res.energy_j}, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""Model zoo: pure-pytree JAX models (no flax) with scan-over-layers.
+
+Every model family exposes:
+  init(key, cfg)            -> params pytree
+  forward(params, batch, cfg, ...) -> logits
+  loss_fn(params, batch, cfg)      -> (loss, metrics)
+  init_cache(cfg, batch, seq)      -> decode cache pytree   (decoder models)
+  prefill / decode steps           (see repro.launch.steps)
+"""
+from repro.models import layers, moe, recurrent, xlstm, transformer, encdec, small  # noqa: F401

@@ -1,0 +1,260 @@
+"""Whisper-style encoder-decoder backbone (audio frontend is a stub).
+
+Per the assignment the conv frontend is stubbed: ``input_specs()`` provides
+precomputed frame embeddings (B, S_enc, d). We keep whisper's absolute
+(sinusoidal) positions — no RoPE — LayerNorm, and GELU MLPs.
+Decode carries a decoder self-attention KV ring plus precomputed encoder
+cross K/V.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers
+from repro.models.transformer import SystemConfig, DEFAULT_SYS, _cast, _remat
+
+
+@dataclasses.dataclass(frozen=True)
+class EncDecConfig:
+    name: str
+    n_layers: int                # per stack (encoder and decoder)
+    d_model: int
+    n_heads: int
+    d_ff: int
+    vocab: int
+    n_enc_frames: int = 1500
+    family: str = "audio"
+    dtype: Any = jnp.float32
+
+    @property
+    def head_dim(self):
+        return self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self):
+        return -(-self.vocab // 256) * 256
+
+    @property
+    def sub_quadratic(self) -> bool:
+        return False
+
+    @property
+    def takes_embeddings(self) -> bool:
+        return True              # encoder side consumes frame embeddings
+
+
+def sinusoid(length, dim):
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None]
+    div = jnp.exp(-math.log(10000.0) * jnp.arange(0, dim, 2, jnp.float32) / dim)
+    pe = jnp.zeros((length, dim), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe
+
+
+def _init_mha(key, d, H, D, dtype):
+    ks = jax.random.split(key, 4)
+    return {"wq": layers.dense_init(ks[0], (d, H, D), dtype=dtype),
+            "wk": layers.dense_init(ks[1], (d, H, D), dtype=dtype),
+            "wv": layers.dense_init(ks[2], (d, H, D), dtype=dtype),
+            "wo": layers.dense_init(ks[3], (H, D, d), in_axis_size=H * D,
+                                    dtype=dtype)}
+
+
+def _mha(p, xq, xkv, *, causal, chunked=False, q_chunk=1024, kv_chunk=1024,
+         shard=False):
+    # grouped layout with K = n_heads, G = 1 -> q (B,S,H,1,D)
+    q = jnp.einsum("bsd,dhk->bshk", xq, p["wq"])[:, :, :, None, :]
+    k = jnp.einsum("btd,dhk->bthk", xkv, p["wk"])
+    v = jnp.einsum("btd,dhk->bthk", xkv, p["wv"])
+    # head-shard the attention math (padded; scores stay device-local —
+    # without this the D-sharded projections all-reduce every score chunk)
+    q = layers.shard_heads(q, shard, axis=2)
+    k = layers.shard_heads(k, shard, axis=2)
+    v = layers.shard_heads(v, shard, axis=2)
+    if chunked:
+        out = layers.chunked_attention(q, k, v, causal=causal,
+                                       q_chunk=q_chunk, kv_chunk=kv_chunk)
+    else:
+        out = layers.attention(q, k, v, causal=causal)
+    out = out[:, :, :, 0, :]                                       # (B,S,H,D)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def _init_block(key, cfg, cross: bool, dtype):
+    ks = jax.random.split(key, 3)
+    d, H, D = cfg.d_model, cfg.n_heads, cfg.head_dim
+    p = {"self_norm": layers.init_layernorm(d, dtype),
+         "self": _init_mha(ks[0], d, H, D, dtype),
+         "mlp_norm": layers.init_layernorm(d, dtype),
+         "mlp": layers.init_mlp(ks[1], d, cfg.d_ff, dtype=dtype)}
+    if cross:
+        p["cross_norm"] = layers.init_layernorm(d, dtype)
+        p["cross"] = _init_mha(ks[2], d, H, D, dtype)
+    return p
+
+
+def init(key, cfg: EncDecConfig):
+    ks = jax.random.split(key, 5)
+    n = cfg.n_layers
+    return {
+        "embed": layers.embed_init(ks[0], (cfg.padded_vocab, cfg.d_model),
+                                   cfg.dtype),
+        "enc_layers": jax.vmap(lambda k: _init_block(k, cfg, False, cfg.dtype))(
+            jax.random.split(ks[1], n)),
+        "dec_layers": jax.vmap(lambda k: _init_block(k, cfg, True, cfg.dtype))(
+            jax.random.split(ks[2], n)),
+        "enc_norm": layers.init_layernorm(cfg.d_model, cfg.dtype),
+        "dec_norm": layers.init_layernorm(cfg.d_model, cfg.dtype),
+    }
+
+
+def encode(params, frames, cfg: EncDecConfig, sys: SystemConfig = DEFAULT_SYS):
+    """frames: (B, S_enc, d) precomputed embeddings (conv stub output)."""
+    x = frames + sinusoid(frames.shape[1], cfg.d_model).astype(frames.dtype)
+
+    def body(x, lp):
+        x = layers.shard_batch(x, sys.batch_axes)
+        h = layers.layernorm(lp["self_norm"], x)
+        x = x + _mha(lp["self"], h, h, causal=False,
+                     chunked=frames.shape[1] > 2048, shard=sys.shard_attn)
+        h = layers.layernorm(lp["mlp_norm"], x)
+        return x + layers.apply_mlp(lp["mlp"], h), 0
+    x, _ = lax.scan(_remat(body, sys), x, params["enc_layers"])
+    return layers.layernorm(params["enc_norm"], x)
+
+
+def decode_train(params, tokens, enc_out, cfg: EncDecConfig,
+                 sys: SystemConfig = DEFAULT_SYS, collect_cache=False,
+                 last_only=False):
+    x = params["embed"][tokens]
+    x = x + sinusoid(tokens.shape[1], cfg.d_model).astype(x.dtype)
+
+    def body(x, lp):
+        x = layers.shard_batch(x, sys.batch_axes)
+        h = layers.layernorm(lp["self_norm"], x)
+        kv = None
+        if collect_cache:
+            kv = (jnp.einsum("btd,dhk->bthk", h,
+                             lp["self"]["wk"]).astype(jnp.bfloat16),
+                  jnp.einsum("btd,dhk->bthk", h,
+                             lp["self"]["wv"]).astype(jnp.bfloat16))
+        x = x + _mha(lp["self"], h, h, causal=True,
+                     chunked=tokens.shape[1] > 2048,
+                     q_chunk=sys.q_chunk, kv_chunk=sys.kv_chunk,
+                     shard=sys.shard_attn)
+        h = layers.layernorm(lp["cross_norm"], x)
+        x = x + _mha(lp["cross"], h, enc_out, causal=False,
+                     chunked=tokens.shape[1] > 2048, shard=sys.shard_attn)
+        h = layers.layernorm(lp["mlp_norm"], x)
+        return x + layers.apply_mlp(lp["mlp"], h), (kv if collect_cache else 0)
+    x, ys = lax.scan(_remat(body, sys), x, params["dec_layers"])
+    if last_only:
+        x = x[:, -1:]
+    x = layers.layernorm(params["dec_norm"], x)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"],
+                        preferred_element_type=jnp.float32)
+    if collect_cache:
+        return logits, ys[0], ys[1]
+    return logits
+
+
+def forward(params, batch, cfg: EncDecConfig, sys: SystemConfig = DEFAULT_SYS):
+    cparams = _cast(params, sys.compute_dtype)
+    enc_out = encode(cparams, batch["frames"].astype(sys.compute_dtype), cfg, sys)
+    logits = decode_train(cparams, batch["tokens"], enc_out, cfg, sys)
+    return logits, jnp.float32(0)
+
+
+def loss_fn(params, batch, cfg: EncDecConfig, sys: SystemConfig = DEFAULT_SYS):
+    logits, aux = forward(params, batch, cfg, sys)
+    labels = batch["labels"]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    loss = ((lse - gold) * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    metrics = {"loss": loss, "aux_loss": aux, "tokens": mask.sum(),
+               "accuracy": ((jnp.argmax(logits, -1) == labels) * mask).sum()
+               / jnp.maximum(mask.sum(), 1.0)}
+    return loss + aux, metrics
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: EncDecConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    H, D, L = cfg.n_heads, cfg.head_dim, cfg.n_layers
+    return {
+        "self_k": jnp.zeros((L, batch, max_len, H, D), dtype),
+        "self_v": jnp.zeros((L, batch, max_len, H, D), dtype),
+        "cross_k": jnp.zeros((L, batch, cfg.n_enc_frames, H, D), dtype),
+        "cross_v": jnp.zeros((L, batch, cfg.n_enc_frames, H, D), dtype),
+    }
+
+
+def build_cross_cache(params, enc_out, cfg: EncDecConfig, dtype=jnp.bfloat16):
+    def per_layer(lp):
+        h = layers.layernorm(lp["cross_norm"], enc_out)
+        k = jnp.einsum("btd,dhk->bthk", h, lp["cross"]["wk"])
+        v = jnp.einsum("btd,dhk->bthk", h, lp["cross"]["wv"])
+        return k.astype(dtype), v.astype(dtype)
+    ks, vs = jax.vmap(per_layer)(params["dec_layers"])
+    return ks, vs
+
+
+def decode_step(params, cache, tokens, pos, cfg: EncDecConfig,
+                sys: SystemConfig = DEFAULT_SYS):
+    """tokens: (B,1). cache holds decoder self KV ring + encoder cross KV."""
+    cparams = _cast(params, sys.compute_dtype)
+    x = cparams["embed"][tokens]
+    W = cache["self_k"].shape[2]
+    pe = sinusoid(W, cfg.d_model)
+    x = x + lax.dynamic_slice_in_dim(pe, pos % W, 1, axis=0)[None].astype(x.dtype)
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+
+    def body(x, xs):
+        lp, sk, sv, ck_, cv_ = xs
+        h = layers.layernorm(lp["self_norm"], x)
+        q = jnp.einsum("bsd,dhk->bshk", h, lp["self"]["wq"])
+        k = jnp.einsum("bsd,dhk->bshk", h, lp["self"]["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", h, lp["self"]["wv"])
+        slot = pos % W
+        sk = lax.dynamic_update_slice(sk, k.astype(sk.dtype), (0, slot, 0, 0))
+        sv = lax.dynamic_update_slice(sv, v.astype(sv.dtype), (0, slot, 0, 0))
+        idx = jnp.arange(W)
+        slot_pos = jnp.where(idx <= slot, pos - slot + idx, pos - slot - W + idx)
+        valid = slot_pos >= 0
+        s = jnp.einsum("bshk,bthk->bhst", q, sk,
+                       preferred_element_type=jnp.float32) * scale
+        s = jnp.where(valid[None, None, None, :], s, layers.NEG_INF)
+        p = jax.nn.softmax(s, -1).astype(sv.dtype)
+        o = jnp.einsum("bhst,bthk->bshk", p, sv,
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+        x = x + jnp.einsum("bshk,hkd->bsd", o, lp["self"]["wo"])
+        # cross attention against precomputed encoder KV
+        h = layers.layernorm(lp["cross_norm"], x)
+        q = jnp.einsum("bsd,dhk->bshk", h, lp["cross"]["wq"])
+        s = jnp.einsum("bshk,bthk->bhst", q, ck_,
+                       preferred_element_type=jnp.float32) * scale
+        p = jax.nn.softmax(s, -1).astype(cv_.dtype)
+        o = jnp.einsum("bhst,bthk->bshk", p, cv_,
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+        x = x + jnp.einsum("bshk,hkd->bsd", o, lp["cross"]["wo"])
+        h = layers.layernorm(lp["mlp_norm"], x)
+        return x + layers.apply_mlp(lp["mlp"], h), (sk, sv)
+
+    x, (nsk, nsv) = lax.scan(
+        body, x, (cparams["dec_layers"], cache["self_k"], cache["self_v"],
+                  cache["cross_k"], cache["cross_v"]))
+    x = layers.layernorm(params["dec_norm"], x)
+    logits = jnp.einsum("bsd,vd->bsv", x, cparams["embed"],
+                        preferred_element_type=jnp.float32)
+    new_cache = dict(cache, self_k=nsk, self_v=nsv)
+    return logits, new_cache

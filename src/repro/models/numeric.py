@@ -1,0 +1,138 @@
+"""Type-III workloads (paper Table 3: Rodinia suite) as real JAX kernels.
+
+Short-epoch iterative jobs — the adversarial case for PipeTune's
+epoch-granular profiling (paper §7.3 Fig 12):
+
+  jacobi    — 2D Poisson sweep solver; epoch = N red/black sweeps,
+              accuracy = 1 - residual/initial.
+  spkmeans  — Lloyd iterations on synthetic blobs; accuracy = purity
+              against the generating labels.
+  bfs       — level-synchronous frontier propagation on a random graph via
+              masked adjacency matmuls; accuracy = fraction of reachable
+              nodes visited so far.
+
+Each exposes (init_state, run_epoch(state, sys) -> state, metrics) with the
+same system knobs the classifier backend probes (precision; block size acts
+as the microbatch analogue).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class NumericConfig:
+    name: str
+    kind: str                  # jacobi | spkmeans | bfs
+    size: int = 128            # grid side / points / nodes
+    sweeps_per_epoch: int = 20
+    k: int = 8                 # clusters (spkmeans)
+    avg_degree: int = 8        # bfs
+    family: str = "numeric"
+
+
+def init_state(cfg: NumericConfig, seed: int = 0):
+    rng = np.random.RandomState(seed)
+    if cfg.kind == "jacobi":
+        b = jnp.asarray(rng.randn(cfg.size, cfg.size), jnp.float32)
+        x = jnp.zeros_like(b)
+        return {"x": x, "b": b, "r0": float(jnp.linalg.norm(b))}
+    if cfg.kind == "spkmeans":
+        centers = rng.randn(cfg.k, 16) * 6
+        labels = rng.randint(0, cfg.k, cfg.size * 16)
+        pts = centers[labels] + rng.randn(cfg.size * 16, 16)
+        cents = pts[rng.choice(len(pts), cfg.k, replace=False)]
+        return {"pts": jnp.asarray(pts, jnp.float32),
+                "cents": jnp.asarray(cents, jnp.float32),
+                "labels": jnp.asarray(labels)}
+    if cfg.kind == "bfs":
+        n = cfg.size * 8
+        adj = (rng.rand(n, n) < cfg.avg_degree / n)
+        adj = np.logical_or(adj, adj.T)
+        frontier = np.zeros(n, bool)
+        frontier[0] = True
+        return {"adj": jnp.asarray(adj), "visited": jnp.asarray(frontier),
+                "frontier": jnp.asarray(frontier)}
+    raise ValueError(cfg.kind)
+
+
+def _epoch_fn(cfg: NumericConfig, dtype):
+    if cfg.kind == "jacobi":
+        def epoch(state):
+            x, b = state["x"].astype(dtype), state["b"].astype(dtype)
+
+            def sweep(x, _):
+                up = jnp.roll(x, 1, 0)
+                dn = jnp.roll(x, -1, 0)
+                lf = jnp.roll(x, 1, 1)
+                rt = jnp.roll(x, -1, 1)
+                return ((up + dn + lf + rt + b) / 4.0), None
+            x, _ = jax.lax.scan(sweep, x, None, length=cfg.sweeps_per_epoch)
+            res = jnp.linalg.norm(
+                (x - (jnp.roll(x, 1, 0) + jnp.roll(x, -1, 0)
+                      + jnp.roll(x, 1, 1) + jnp.roll(x, -1, 1) + b) / 4.0)
+                .astype(jnp.float32))
+            return {**state, "x": x.astype(jnp.float32)}, res
+        return epoch
+    if cfg.kind == "spkmeans":
+        def epoch(state):
+            pts = state["pts"].astype(dtype)
+            cents = state["cents"].astype(dtype)
+
+            def lloyd(c, _):
+                d2 = ((pts[:, None] - c[None]) ** 2).sum(-1)
+                assign = jnp.argmin(d2, 1)
+                one = jax.nn.one_hot(assign, cfg.k, dtype=dtype)
+                new = (one.T @ pts) / jnp.maximum(one.sum(0)[:, None], 1.0)
+                return new, assign
+            cents, assigns = jax.lax.scan(
+                lloyd, cents, None, length=max(1, cfg.sweeps_per_epoch // 4))
+            return ({**state, "cents": cents.astype(jnp.float32)},
+                    assigns[-1])
+        return epoch
+    if cfg.kind == "bfs":
+        def epoch(state):
+            adj = state["adj"]
+
+            def level(carry, _):
+                visited, frontier = carry
+                nxt = jnp.logical_and((adj @ frontier.astype(jnp.int32)) > 0,
+                                      jnp.logical_not(visited))
+                return (jnp.logical_or(visited, nxt), nxt), None
+            (visited, frontier), _ = jax.lax.scan(
+                level, (state["visited"], state["frontier"]), None,
+                length=2)
+            return ({**state, "visited": visited, "frontier": frontier},
+                    visited.sum())
+        return epoch
+    raise ValueError(cfg.kind)
+
+
+def accuracy(cfg: NumericConfig, state, aux) -> float:
+    if cfg.kind == "jacobi":
+        return float(max(0.0, 1.0 - float(aux) / max(state["r0"], 1e-9)))
+    if cfg.kind == "spkmeans":
+        assign = np.asarray(aux)
+        labels = np.asarray(state["labels"])
+        purity = 0
+        for c in range(cfg.k):
+            members = labels[assign == c]
+            if len(members):
+                purity += np.bincount(members).max()
+        return float(purity / len(labels))
+    if cfg.kind == "bfs":
+        n = state["visited"].shape[0]
+        return float(aux) / n
+    raise ValueError(cfg.kind)
+
+
+CONFIGS = {
+    "jacobi-rodinia": NumericConfig("jacobi-rodinia", "jacobi"),
+    "spkmeans-rodinia": NumericConfig("spkmeans-rodinia", "spkmeans"),
+    "bfs-rodinia": NumericConfig("bfs-rodinia", "bfs"),
+}

@@ -1,0 +1,181 @@
+"""The paper's small workloads, trained for real on CPU in benchmarks.
+
+Type-I:  LeNet5 on MNIST-like 28x28 images (and FASHION-like).
+Type-II: TextCNN and LSTM classifiers on News20-like token sequences.
+Type-III stand-ins: small iterative numeric kernels wrapped as "epoch" jobs
+(see repro.cluster.sim for the Jacobi/BFS/spk-means analogues).
+
+These expose the same (init, loss_fn, forward) surface as the LM zoo so the
+PipeTune trial runner is model-agnostic. Hyperparameters (dropout, embedding
+dim, ...) are actual function arguments here because the paper tunes them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers
+
+
+@dataclasses.dataclass(frozen=True)
+class SmallConfig:
+    name: str
+    kind: str                    # lenet | textcnn | lstm
+    n_classes: int = 10
+    image_size: int = 28
+    vocab: int = 4096
+    seq_len: int = 128
+    embed_dim: int = 100         # hyperparameter (paper: 50-300)
+    hidden: int = 128
+    dropout: float = 0.0         # hyperparameter (paper: 0.0-0.5)
+    dtype: Any = jnp.float32
+    family: str = "small"
+
+
+# ---------------------------------------------------------------------------
+# LeNet5
+# ---------------------------------------------------------------------------
+
+def init_lenet(key, cfg: SmallConfig):
+    ks = jax.random.split(key, 5)
+    d = cfg.dtype
+    return {
+        "c1": {"w": layers.dense_init(ks[0], (5, 5, 1, 6), in_axis_size=25, dtype=d),
+               "b": jnp.zeros((6,), d)},
+        "c2": {"w": layers.dense_init(ks[1], (5, 5, 6, 16), in_axis_size=150, dtype=d),
+               "b": jnp.zeros((16,), d)},
+        "f1": {"w": layers.dense_init(ks[2], (16 * 4 * 4, 120), dtype=d),
+               "b": jnp.zeros((120,), d)},
+        "f2": {"w": layers.dense_init(ks[3], (120, 84), dtype=d),
+               "b": jnp.zeros((84,), d)},
+        "out": {"w": layers.dense_init(ks[4], (84, cfg.n_classes), dtype=d),
+                "b": jnp.zeros((cfg.n_classes,), d)},
+    }
+
+
+def _conv(x, w, b):
+    y = lax.conv_general_dilated(x, w, (1, 1), "VALID",
+                                 dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + b
+
+
+def _maxpool(x):
+    return lax.reduce_window(x, -jnp.inf, lax.max, (1, 2, 2, 1), (1, 2, 2, 1),
+                             "VALID")
+
+
+def forward_lenet(params, batch, cfg: SmallConfig, *, train=False, rng=None):
+    x = batch["images"].astype(params["c1"]["w"].dtype)   # (B, 28, 28, 1)
+    x = jnp.tanh(_conv(x, params["c1"]["w"], params["c1"]["b"]))
+    x = _maxpool(x)
+    x = jnp.tanh(_conv(x, params["c2"]["w"], params["c2"]["b"]))
+    x = _maxpool(x)
+    x = x.reshape(x.shape[0], -1)
+    x = jnp.tanh(x @ params["f1"]["w"] + params["f1"]["b"])
+    x = _dropout(x, cfg.dropout, train, rng, 0)
+    x = jnp.tanh(x @ params["f2"]["w"] + params["f2"]["b"])
+    return x @ params["out"]["w"] + params["out"]["b"]
+
+
+# ---------------------------------------------------------------------------
+# TextCNN / LSTM classifiers
+# ---------------------------------------------------------------------------
+
+def init_textcnn(key, cfg: SmallConfig):
+    ks = jax.random.split(key, 5)
+    d = cfg.dtype
+    E = cfg.embed_dim
+    return {
+        "embed": layers.embed_init(ks[0], (cfg.vocab, E), d),
+        "convs": [
+            {"w": layers.dense_init(ks[1 + i], (k, E, cfg.hidden),
+                                    in_axis_size=k * E, dtype=d),
+             "b": jnp.zeros((cfg.hidden,), d)}
+            for i, k in enumerate((3, 4, 5))],
+        "out": {"w": layers.dense_init(ks[4], (3 * cfg.hidden, cfg.n_classes),
+                                       dtype=d),
+                "b": jnp.zeros((cfg.n_classes,), d)},
+    }
+
+
+def forward_textcnn(params, batch, cfg: SmallConfig, *, train=False, rng=None):
+    x = params["embed"][batch["tokens"]]             # (B, S, E)
+    feats = []
+    for conv in params["convs"]:
+        h = lax.conv_general_dilated(x, conv["w"], (1,), "VALID",
+                                     dimension_numbers=("NWC", "WIO", "NWC"))
+        h = jax.nn.relu(h + conv["b"])
+        feats.append(h.max(axis=1))                  # global max pool
+    h = jnp.concatenate(feats, axis=-1)
+    h = _dropout(h, cfg.dropout, train, rng, 1)
+    return h @ params["out"]["w"] + params["out"]["b"]
+
+
+def init_lstm(key, cfg: SmallConfig):
+    ks = jax.random.split(key, 4)
+    d, E, H = cfg.dtype, cfg.embed_dim, cfg.hidden
+    return {
+        "embed": layers.embed_init(ks[0], (cfg.vocab, E), d),
+        "w_ih": layers.dense_init(ks[1], (E, 4 * H), dtype=d),
+        "w_hh": layers.dense_init(ks[2], (H, 4 * H), dtype=d),
+        "b": jnp.zeros((4 * H,), d),
+        "out": {"w": layers.dense_init(ks[3], (H, cfg.n_classes), dtype=d),
+                "b": jnp.zeros((cfg.n_classes,), d)},
+    }
+
+
+def forward_lstm(params, batch, cfg: SmallConfig, *, train=False, rng=None):
+    x = params["embed"][batch["tokens"]]             # (B, S, E)
+    H = cfg.hidden
+    B = x.shape[0]
+
+    def step(carry, x_t):
+        h, c = carry
+        z = x_t @ params["w_ih"] + h @ params["w_hh"] + params["b"]
+        i, f, g, o = jnp.split(z, 4, axis=-1)
+        c = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+        h = jax.nn.sigmoid(o) * jnp.tanh(c)
+        return (h, c), None
+
+    h0 = jnp.zeros((B, H), x.dtype)
+    (h, _), _ = lax.scan(step, (h0, h0), x.swapaxes(0, 1))
+    h = _dropout(h, cfg.dropout, train, rng, 2)
+    return h @ params["out"]["w"] + params["out"]["b"]
+
+
+# ---------------------------------------------------------------------------
+# shared surface
+# ---------------------------------------------------------------------------
+
+_INIT = {"lenet": init_lenet, "textcnn": init_textcnn, "lstm": init_lstm}
+_FWD = {"lenet": forward_lenet, "textcnn": forward_textcnn, "lstm": forward_lstm}
+
+
+def _dropout(x, rate, train, rng, salt):
+    if not train or rate <= 0.0 or rng is None:
+        return x
+    keep = jax.random.bernoulli(jax.random.fold_in(rng, salt), 1.0 - rate,
+                                x.shape)
+    return jnp.where(keep, x / (1.0 - rate), 0.0)
+
+
+def init(key, cfg: SmallConfig):
+    return _INIT[cfg.kind](key, cfg)
+
+
+def forward(params, batch, cfg: SmallConfig, *, train=False, rng=None):
+    return _FWD[cfg.kind](params, batch, cfg, train=train, rng=rng)
+
+
+def loss_fn(params, batch, cfg: SmallConfig, rng=None):
+    logits = forward(params, batch, cfg, train=True, rng=rng)
+    labels = batch["labels"]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    loss = jnp.mean(lse - gold)
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    return loss, {"loss": loss, "accuracy": acc}

@@ -1,0 +1,3 @@
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer, adamw, sgd, clip_by_global_norm, cosine_schedule,
+    constant_schedule, warmup_cosine)

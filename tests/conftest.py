@@ -1,0 +1,12 @@
+import os
+# NOTE: do NOT set xla_force_host_platform_device_count here — smoke tests
+# and benches must see 1 device; only launch/dryrun.py forces 512.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,117 @@
+"""Cluster sim: FIFO, faults, stragglers, perf-model shape (paper Fig 3b)."""
+import numpy as np
+import pytest
+
+from repro.cluster import perfmodel
+from repro.cluster.sim import (ClusterConfig, ClusterSim, SimBackend,
+                               SimSystemSpace, make_arrivals)
+from repro.core import GroundTruth, PipeTune, TuneV1
+from repro.core.job import HPTJob, Param, SearchSpace
+
+
+def _space():
+    return SearchSpace([
+        Param("batch_size", "choice", choices=(32, 64, 256, 1024)),
+        Param("learning_rate", "log", 0.001, 0.1),
+    ])
+
+
+def test_perfmodel_cores_vs_batch_tradeoff():
+    """Paper Fig 3b: more chips help batch 1024, hurt batch 64."""
+    fast_big = perfmodel.epoch_time_s("lenet-mnist", 1024, 16)
+    slow_big = perfmodel.epoch_time_s("lenet-mnist", 1024, 4)
+    assert fast_big < slow_big
+    fast_small = perfmodel.epoch_time_s("lenet-mnist", 64, 4)
+    slow_small = perfmodel.epoch_time_s("lenet-mnist", 64, 16)
+    assert fast_small < slow_small
+
+
+def test_perfmodel_memory_pressure():
+    t_small = perfmodel.epoch_time_s("lenet-mnist", 1024, 8, memory_gb=32)
+    t_paged = perfmodel.epoch_time_s("lenet-mnist", 1024, 8, memory_gb=1)
+    assert t_paged > t_small
+
+
+def test_accuracy_surface_tradeoffs():
+    """Paper Fig 3a: larger batch -> worse accuracy (at same epochs)."""
+    hp32 = {"batch_size": 32, "learning_rate": 0.01}
+    hp1024 = {"batch_size": 1024, "learning_rate": 0.01}
+    a32 = perfmodel.accuracy_at("lenet-mnist", hp32, 8)
+    a1024 = perfmodel.accuracy_at("lenet-mnist", hp1024, 8)
+    assert a32 > a1024
+
+
+def test_profiles_cluster_by_family():
+    """Paper Fig 8: same-family workloads cluster together."""
+    from repro.core import KMeans
+    vecs, labels = [], []
+    for wl, fam in [("lenet-mnist", 0), ("lenet-fashion", 0),
+                    ("cnn-news20", 1), ("lstm-news20", 1)]:
+        for s in range(4):
+            vecs.append(perfmodel.profile_vector(wl, 64, 8, seed=s))
+            labels.append(fam)
+    km = KMeans(k=2, seed=0).fit(np.stack(vecs))
+    pred = [km.predict(v)[0] for v in vecs]
+    # all type-I in one cluster, all type-II in the other
+    t1 = {p for p, l in zip(pred, labels) if l == 0}
+    t2 = {p for p, l in zip(pred, labels) if l == 1}
+    assert len(t1) == 1 and len(t2) == 1 and t1 != t2
+
+
+def _jobs(n=4, seed=0):
+    return make_arrivals(["lenet-mnist", "cnn-news20"], n_jobs=n,
+                         mean_interarrival_s=100.0, space=_space(),
+                         max_epochs=6, seed=seed)
+
+
+def test_fifo_response_ordering():
+    sim = ClusterSim(ClusterConfig(n_nodes=1, seed=0),
+                     lambda: TuneV1(SimBackend()))
+    out = sim.run(_jobs(3), scheduler="random", n_trials=2)
+    # single node: each job starts after the previous finishes
+    for a, b in zip(out, out[1:]):
+        assert b.start >= a.finish - 1e-6
+
+
+def test_failures_add_service_time():
+    base = ClusterSim(ClusterConfig(n_nodes=2, seed=3),
+                      lambda: TuneV1(SimBackend()))
+    faulty = ClusterSim(ClusterConfig(n_nodes=2, mtbf_s=500.0, seed=3),
+                        lambda: TuneV1(SimBackend()))
+    o1 = base.run(_jobs(3), scheduler="random", n_trials=2)
+    o2 = faulty.run(_jobs(3), scheduler="random", n_trials=2)
+    assert sum(o.n_failures for o in o2) > 0
+    assert sum(o.service_s for o in o2) > sum(o.service_s for o in o1)
+
+
+def test_straggler_mitigation_bounds_slowdown():
+    slow = ClusterSim(ClusterConfig(n_nodes=2, straggler_prob=0.3,
+                                    mitigate_stragglers=False, seed=5),
+                      lambda: TuneV1(SimBackend()))
+    mitigated = ClusterSim(ClusterConfig(n_nodes=2, straggler_prob=0.3,
+                                         mitigate_stragglers=True, seed=5),
+                           lambda: TuneV1(SimBackend()))
+    t_slow = sum(o.service_s for o in slow.run(_jobs(3), scheduler="random",
+                                               n_trials=2))
+    t_mit = sum(o.service_s for o in mitigated.run(_jobs(3),
+                                                   scheduler="random",
+                                                   n_trials=2))
+    assert t_mit < t_slow
+
+
+def test_pipetune_beats_v1_multi_tenant():
+    jobs = _jobs(6, seed=1)
+    v1 = ClusterSim(ClusterConfig(n_nodes=2, seed=0),
+                    lambda: TuneV1(SimBackend()))
+    r1 = v1.run(jobs, scheduler="random", n_trials=3)
+    gt = GroundTruth()
+    pt = ClusterSim(ClusterConfig(n_nodes=2, seed=0),
+                    lambda: PipeTune(SimBackend(), SimSystemSpace(),
+                                     groundtruth=gt, max_probes=4))
+    rp = pt.run(jobs, scheduler="random", n_trials=3)
+    resp1 = np.mean([o.response_s for o in r1])
+    respp = np.mean([o.response_s for o in rp])
+    acc1 = np.mean([o.best_accuracy for o in r1])
+    accp = np.mean([o.best_accuracy for o in rp])
+    assert respp < resp1
+    assert accp > acc1 - 0.02

@@ -1,0 +1,143 @@
+"""PipeTune core: kmeans properties, ground truth, probing, profiler."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import GroundTruth, KMeans, PROFILE_EVENTS, Profiler
+from repro.core.probing import plan_diverse, plan_grid, ProbeResult
+from repro.core.job import Param, SearchSpace, SystemSpace
+
+
+# ------------------------------------------------------------------ kmeans
+
+def test_kmeans_separates_blobs():
+    rng = np.random.RandomState(0)
+    a = rng.randn(30, 8) + 10.0
+    b = rng.randn(30, 8) - 10.0
+    X = np.concatenate([a, b])
+    km = KMeans(k=2, seed=0).fit(X)
+    la = {km.predict(x)[0] for x in a}
+    lb = {km.predict(x)[0] for x in b}
+    assert len(la) == 1 and len(lb) == 1 and la != lb
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 5), st.integers(10, 40), st.integers(2, 6))
+def test_kmeans_properties(k, n, d):
+    rng = np.random.RandomState(k * 100 + n)
+    X = rng.randn(n, d) * 3
+    km = KMeans(k=k, seed=1).fit(X)
+    # predict returns the nearest centroid
+    for x in X[:5]:
+        c, dist = km.predict(x)
+        dists = np.sqrt(((km.centroids - x) ** 2).sum(-1))
+        assert np.isclose(dist, dists.min())
+        assert c == int(dists.argmin())
+    # inertia equals sum of squared distances to assigned centroids
+    d2 = ((X[:, None] - km.centroids[None]) ** 2).sum(-1).min(1).sum()
+    assert np.isclose(km.inertia_, d2, rtol=1e-6)
+
+
+def test_kmeans_identical_points_no_crash():
+    X = np.ones((5, 4))
+    km = KMeans(k=2, seed=0).fit(X)
+    assert km.inertia_ < 1e-9
+
+
+# -------------------------------------------------------------- groundtruth
+
+def _profile(base, jitter, seed):
+    rng = np.random.RandomState(seed)
+    return base + rng.randn(58) * jitter
+
+
+def test_groundtruth_hit_same_workload_miss_different():
+    gt = GroundTruth()
+    base_a = np.zeros(58); base_a[:5] = 10.0
+    base_b = np.zeros(58); base_b[5:10] = 25.0
+    for i in range(3):
+        gt.add(_profile(base_a, 0.05, i), "wl-a", {"chips": 4}, 0.9)
+    score, cfg = gt.lookup(_profile(base_a, 0.05, 99))
+    assert cfg == {"chips": 4} and score > 0
+    score_b, cfg_b = gt.lookup(_profile(base_b, 0.05, 100))
+    assert cfg_b is None and score_b == 0.0
+
+
+def test_groundtruth_returns_best_objective_member():
+    gt = GroundTruth()
+    base = np.zeros(58)
+    gt.add(_profile(base, 0.01, 1), "w", {"chips": 4}, objective=0.5)
+    gt.add(_profile(base, 0.01, 2), "w", {"chips": 16}, objective=0.9)
+    gt.add(_profile(base, 0.01, 3), "w", {"chips": 8}, objective=0.7)
+    _, cfg = gt.lookup(_profile(base, 0.01, 9))
+    assert cfg == {"chips": 16}
+
+
+def test_groundtruth_persistence(tmp_path):
+    p = str(tmp_path / "gt.json")
+    gt = GroundTruth(path=p)
+    base = np.zeros(58)
+    gt.add(_profile(base, 0.01, 1), "w", {"chips": 4}, 0.5)
+    gt.add(_profile(base, 0.01, 2), "w", {"chips": 4}, 0.6)
+    gt2 = GroundTruth(path=p)
+    assert len(gt2.entries) == 2
+    _, cfg = gt2.lookup(_profile(base, 0.01, 5))
+    assert cfg == {"chips": 4}
+
+
+# ------------------------------------------------------------------ probing
+
+def _cfgs():
+    return SystemSpace(remat=("none", "block"), microbatches=(1, 2, 4),
+                       precision=("fp32",)).configs()
+
+
+def test_probe_plan_grid_subsample():
+    plan = plan_grid(_cfgs(), max_probes=3)
+    assert len(plan.configs) == 3
+    assert not plan.done
+    seen = [plan.next_config() for _ in range(3)]
+    assert plan.done and len({str(s) for s in seen}) == 3
+
+
+def test_probe_plan_diverse_covers_space():
+    plan = plan_diverse(_cfgs(), max_probes=4, seed=0)
+    # first few probes should differ in every varying key
+    remats = {c["remat"] for c in plan.configs[:4]}
+    micros = {c["microbatches"] for c in plan.configs[:4]}
+    assert len(remats) == 2 and len(micros) >= 2
+
+
+def test_probe_best_objectives():
+    plan = plan_grid(_cfgs(), max_probes=3)
+    for i, (dur, en) in enumerate([(5.0, 15.0), (2.0, 8.0), (9.0, 3.0)]):
+        plan.record(ProbeResult(sys_config={"id": i}, duration_s=dur,
+                                energy_j=en, accuracy=0.5, loss=1.0))
+    assert plan.best("duration") == {"id": 1}
+    assert plan.best("energy") == {"id": 2}
+    assert plan.best("edp") == {"id": 1}    # 5*15=75, 2*8=16, 9*3=27
+
+
+# ----------------------------------------------------------------- profiler
+
+def test_profile_vector_shape_and_determinism():
+    prof = Profiler()
+    p = prof.build(step_times=[0.1, 0.11, 0.09], loss_start=2.0,
+                   loss_end=1.5, power_w=100.0, tokens_per_step=64)
+    v1, v2 = p.vector(), p.vector()
+    assert v1.shape == (58,) == (len(PROFILE_EVENTS),)
+    assert np.array_equal(v1, v2)
+    assert np.isfinite(v1).all()
+
+
+def test_search_space_sampling_and_grid():
+    sp = SearchSpace([Param("lr", "log", 1e-3, 1e-1),
+                      Param("bs", "choice", choices=(32, 64)),
+                      Param("e", "int", 1, 5)])
+    rng = np.random.RandomState(0)
+    for _ in range(20):
+        s = sp.sample(rng)
+        assert 1e-3 <= s["lr"] <= 1e-1 and s["bs"] in (32, 64)
+        assert 1 <= s["e"] <= 5 and isinstance(s["e"], int)
+    g = sp.grid(2)
+    assert len(g) == 2 * 2 * 2

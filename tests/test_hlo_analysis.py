@@ -1,0 +1,82 @@
+"""HLO cost analyzer: dot flops, while trip counts, collectives, fusions."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import hlo_analysis
+
+
+def _analyze(fn, *args):
+    c = jax.jit(fn).lower(*args).compile()
+    return hlo_analysis.analyze(c.as_text())
+
+
+def test_plain_dot_flops():
+    A = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    B = jax.ShapeDtypeStruct((256, 64), jnp.float32)
+    cost = _analyze(lambda a, b: a @ b, A, B)
+    expected = 2 * 128 * 256 * 64
+    assert abs(cost.flops - expected) / expected < 0.05
+
+
+def test_scan_multiplies_by_trip_count():
+    X = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    W = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+
+    def f(x, w):
+        return jax.lax.scan(lambda c, _: (c @ w, None), x, None, length=17)[0]
+    cost = _analyze(f, X, W)
+    expected = 2 * 128 * 128 * 128 * 17
+    assert abs(cost.flops - expected) / expected < 0.05
+
+
+def test_nested_scan_trips():
+    X = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    W = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+
+    def f(x, w):
+        def outer(c, _):
+            c2 = jax.lax.scan(lambda d, _: (d @ w, None), c, None,
+                              length=3)[0]
+            return c2, None
+        return jax.lax.scan(outer, x, None, length=5)[0]
+    cost = _analyze(f, X, W)
+    expected = 2 * 64 ** 3 * 15
+    assert abs(cost.flops - expected) / expected < 0.1
+
+
+def test_score_like_classifier():
+    assert hlo_analysis._is_score_like("f32[4,2,1024,1024]{3,2,1,0}")
+    assert hlo_analysis._is_score_like("pred[1,1,2,1024,2048]{...}")
+    assert not hlo_analysis._is_score_like("f32[1024,1024]{1,0}")      # rank 2
+    assert not hlo_analysis._is_score_like("f32[1,4096,1024]{2,1,0}")  # rank 3
+    assert not hlo_analysis._is_score_like("f32[4,2,4096,128]{3,2,1,0}")
+
+
+def test_synthetic_collective_parse():
+    hlo = """
+HloModule test
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %r = f32[] add(%a, %b)
+}
+
+ENTRY %main (p: f32[128,256]) -> f32[128,256] {
+  %p = f32[128,256]{1,0} parameter(0)
+  %ar = f32[128,256]{1,0} all-reduce(%p), replica_groups={}, to_apply=%add
+  ROOT %out = f32[128,256]{1,0} add(%ar, %ar)
+}
+"""
+    cost = hlo_analysis.analyze(hlo)
+    assert cost.coll["all-reduce"] == 128 * 256 * 4
+    assert cost.coll_count == 1
+
+
+def test_bytes_nonzero_and_sane():
+    X = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    cost = _analyze(lambda x: (x * 2 + 1).sum(), X)
+    assert cost.bytes >= 256 * 256 * 4          # at least one read
+    assert cost.bytes < 50 * 256 * 256 * 4      # not absurdly overcounted

@@ -1,0 +1,147 @@
+"""Optimizers, schedules, data pipeline, compression, energy."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import energy
+from repro.data import synthetic
+from repro.distributed import compression
+from repro.optim import optimizers
+
+
+# ---------------------------------------------------------------- optimizers
+
+def _quadratic_min(opt, steps=200):
+    params = {"x": jnp.array([5.0, -3.0])}
+    state = opt.init(params)
+    for i in range(steps):
+        grads = {"x": 2 * params["x"]}          # d/dx of x^2
+        upd, state = opt.update(grads, state, params, jnp.int32(i))
+        params = optimizers.apply_updates(params, upd)
+    return float(jnp.abs(params["x"]).max())
+
+
+def test_adamw_converges_quadratic():
+    assert _quadratic_min(optimizers.adamw(0.1)) < 1e-2
+
+
+def test_sgd_momentum_converges_quadratic():
+    assert _quadratic_min(optimizers.sgd(0.05, momentum=0.9)) < 1e-2
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.ones((4,)) * 100.0}
+    clipped, norm = optimizers.clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(200.0)
+    total = jnp.sqrt(jnp.sum(jnp.square(clipped["a"])))
+    assert float(total) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_warmup_cosine_shape():
+    sched = optimizers.warmup_cosine(1e-3, warmup_steps=10, total_steps=100)
+    lrs = [float(sched(jnp.int32(s))) for s in range(100)]
+    assert lrs[0] < lrs[9] <= 1e-3 + 1e-9
+    assert lrs[-1] < lrs[20]
+    assert max(lrs) <= 1e-3 * 1.001
+
+
+def test_weight_decay_shrinks_params():
+    opt = optimizers.adamw(0.1, weight_decay=0.5)
+    params = {"x": jnp.array([10.0])}
+    state = opt.init(params)
+    upd, state = opt.update({"x": jnp.array([0.0])}, state, params,
+                            jnp.int32(0))
+    assert float(upd["x"][0]) < 0
+
+
+# ----------------------------------------------------------------------- data
+
+def test_dataset_deterministic_and_restartable():
+    d = synthetic.make_image_dataset(0, 256)
+    b = synthetic.Batches(d, 32, seed=7)
+    e1 = list(b.epoch(3))
+    e2 = list(b.epoch(3))
+    for x, y in zip(e1, e2):
+        np.testing.assert_array_equal(x["labels"], y["labels"])
+    # restart mid-epoch reproduces the tail (fault recovery contract)
+    tail = list(b.epoch(3, start_batch=4))
+    for x, y in zip(e1[4:], tail):
+        np.testing.assert_array_equal(x["labels"], y["labels"])
+
+
+def test_image_dataset_learnable_structure():
+    d = synthetic.make_image_dataset(0, 512)
+    # same-class images correlate more than cross-class
+    x = d["images"].reshape(512, -1)
+    y = d["labels"]
+    c0 = x[y == y[0]]
+    other = x[y != y[0]]
+    within = np.corrcoef(c0[0], c0[1])[0, 1] if len(c0) > 1 else 1.0
+    cross = np.corrcoef(c0[0], other[0])[0, 1]
+    assert within > cross
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 5), st.sampled_from([64, 128]))
+def test_text_dataset_shapes(seed, n):
+    d = synthetic.make_text_dataset(seed, n, n_classes=5, vocab=128,
+                                    seq_len=16)
+    assert d["tokens"].shape == (n, 16)
+    assert d["tokens"].max() < 128
+    assert set(np.unique(d["labels"])).issubset(set(range(5)))
+
+
+# ---------------------------------------------------------------- compression
+
+def test_int8_roundtrip_error_bound():
+    x = jnp.array(np.random.RandomState(0).randn(1000), jnp.float32)
+    q, s = compression.quantize_int8(x)
+    err = jnp.abs(compression.dequantize_int8(q, s) - x)
+    assert float(err.max()) <= float(s) * 0.5 + 1e-6
+
+
+def test_error_feedback_contracts():
+    """With EF, the *cumulative* compressed sum tracks the true sum."""
+    rng = np.random.RandomState(0)
+    grads_seq = [{"w": jnp.array(rng.randn(64), jnp.float32)}
+                 for _ in range(20)]
+    ef = compression.init_ef(grads_seq[0])
+    acc_q = jnp.zeros(64)
+    acc_t = jnp.zeros(64)
+    for g in grads_seq:
+        gq, ef = compression.compress_grads(g, ef, method="int8")
+        acc_q = acc_q + gq["w"]
+        acc_t = acc_t + g["w"]
+    # residual stays bounded -> cumulative error = final ef only
+    np.testing.assert_allclose(np.asarray(acc_q + ef["w"]),
+                               np.asarray(acc_t), rtol=1e-4, atol=1e-4)
+    assert float(jnp.abs(ef["w"]).max()) < 1.0
+
+
+def test_topk_keeps_largest():
+    x = jnp.array([0.1, -5.0, 0.2, 3.0], jnp.float32)
+    y, mask = compression.topk_sparsify(x, frac=0.5)
+    assert float(y[1]) == -5.0 and float(y[3]) == 3.0
+    assert float(y[0]) == 0.0 and float(y[2]) == 0.0
+
+
+def test_compressed_bytes_ordering():
+    g = {"w": jnp.zeros((1000,), jnp.float32)}
+    none = compression.compressed_bytes(g, "none")
+    i8 = compression.compressed_bytes(g, "int8")
+    tk = compression.compressed_bytes(g, "topk", topk_frac=0.01)
+    assert tk < i8 < none
+
+
+# --------------------------------------------------------------------- energy
+
+def test_trapezoid_constant_power():
+    assert energy.trapezoidal_energy([100.0] * 11, dt_s=1.0) == \
+        pytest.approx(1000.0)
+
+
+def test_power_monotone_in_utilization():
+    assert energy.power_w(0.9, 8) > energy.power_w(0.1, 8)
+    assert energy.power_w(0.5, 16) > energy.power_w(0.5, 8)

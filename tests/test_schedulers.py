@@ -1,0 +1,85 @@
+"""Scheduler math: HyperBand brackets, budget, planted-optimum recovery."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.job import Param, SearchSpace
+from repro.core.schedulers import ASHA, GridSearch, HyperBand, RandomSearch
+
+
+def _space():
+    return SearchSpace([Param("x", "float", 0.0, 1.0)])
+
+
+def _planted(x_opt=0.7):
+    """score(hp, epochs) rises with epochs; best at x=x_opt."""
+    calls = []
+
+    def evaluate(tid, hp, epochs):
+        calls.append((tid, epochs))
+        return (1.0 - (hp["x"] - x_opt) ** 2) * (1 - math.exp(-epochs))
+    return evaluate, calls
+
+
+def test_hyperband_bracket_structure():
+    hb = HyperBand(_space(), R=9, eta=3)
+    brackets = hb.brackets()
+    assert [b["s"] for b in brackets] == [2, 1, 0]
+    # standard hyperband: n = ceil(B/R * eta^s / (s+1))
+    assert brackets[0]["n"] == 9 and brackets[0]["r"] == 1
+    assert brackets[-1]["r"] == 9
+
+
+def test_hyperband_finds_planted_optimum():
+    ev, calls = _planted()
+    best, score = HyperBand(_space(), R=9, eta=3, seed=0).run(ev)
+    assert abs(best["x"] - 0.7) < 0.25
+    assert score > 0.9
+    # resource accounting: trials get monotonically growing budgets per rung
+    assert max(e for _, e in calls) == 9
+
+
+def test_random_and_grid_and_asha():
+    ev, _ = _planted()
+    for sched in [RandomSearch(_space(), n_trials=20, epochs=5, seed=1),
+                  GridSearch(_space(), per_dim=9, epochs=5),
+                  ASHA(_space(), max_epochs=9, n_trials=20, seed=1)]:
+        best, score = sched.run(ev)
+        assert abs(best["x"] - 0.7) < 0.25, type(sched).__name__
+
+
+def test_asha_prunes_bad_trials():
+    """Bad trials must stop at low rungs (fewer total epochs than full runs)."""
+    ev, calls = _planted()
+    ASHA(_space(), max_epochs=9, n_trials=30, seed=0).run(ev)
+    per_trial = {}
+    for tid, e in calls:
+        per_trial[tid] = max(per_trial.get(tid, 0), e)
+    full = sum(1 for v in per_trial.values() if v >= 9)
+    assert full < len(per_trial) / 2
+
+
+def test_pbt_improves_over_initial_population():
+    from repro.core.schedulers import PBT
+    ev, _ = _planted()
+    pbt = PBT(_space(), population=8, total_epochs=9, interval=3, seed=0)
+    best, score = pbt.run(ev)
+    assert pbt.clone_events > 0          # exploit/explore actually fired
+    assert abs(best["x"] - 0.7) < 0.3
+    assert score > 0.85
+
+
+def test_pbt_clone_transfers_trial_state():
+    from repro.cluster.sim import SimBackend
+    from repro.core import TuneV1
+    from repro.core.job import HPTJob, Param
+    from repro.core.job import SearchSpace as SS
+    job = HPTJob(workload="lenet-mnist",
+                 space=SS([Param("learning_rate", "log", 0.001, 0.1)]),
+                 max_epochs=6)
+    r = TuneV1(SimBackend())
+    res = r.run_job(job, scheduler="pbt", population=4, interval=3)
+    # cloned trials carry forward epochs (no trial restarted from epoch 0
+    # after an exploit)
+    assert res.best_accuracy > 0.8

@@ -1,0 +1,120 @@
+"""Sharding rules: every assigned arch gets divisible, sane specs."""
+import dataclasses
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.distributed import sharding
+from repro.launch import steps
+from repro.models.transformer import SystemConfig
+from repro.optim import optimizers
+
+
+class _FakeMesh:
+    """RuleEngine only needs axis names + sizes; no devices required."""
+
+    def __init__(self, shape, names):
+        import numpy as np
+        self.axis_names = names
+        self.devices = np.empty(shape, dtype=object)
+
+
+MESH_1POD = _FakeMesh((16, 16), ("data", "model"))
+MESH_2POD = _FakeMesh((2, 16, 16), ("pod", "data", "model"))
+SYS = SystemConfig(param_sharding="2d")
+
+
+def _abstract_params(arch):
+    cfg = configs.get_config(arch)
+    return cfg, jax.eval_shape(
+        lambda: steps.model_init(jax.random.PRNGKey(0), cfg))
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+@pytest.mark.parametrize("mesh", [MESH_1POD, MESH_2POD],
+                         ids=["1pod", "2pod"])
+def test_param_specs_divisible(arch, mesh):
+    cfg, params = _abstract_params(arch)
+    specs = sharding.param_specs(params, cfg, mesh, SYS)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def check(path, leaf, spec):
+        assert len(spec) <= len(leaf.shape)
+        for dim, ax in zip(leaf.shape, tuple(spec) + (None,) * 8):
+            if ax is None:
+                continue
+            total = 1
+            for a in (ax if isinstance(ax, tuple) else (ax,)):
+                total *= sizes[a]
+            assert dim % total == 0, (arch, path, leaf.shape, spec)
+
+    jax.tree_util.tree_map_with_path(
+        check, params, specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_model_axis_used_for_big_tensors(arch):
+    """Every parameter tensor above 4M elements must be sharded somewhere
+    (a replicated multi-GB tensor would blow per-device HBM)."""
+    cfg, params = _abstract_params(arch)
+    specs = sharding.param_specs(params, cfg, MESH_1POD, SYS)
+
+    def check(path, leaf, spec):
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        if n >= 4_000_000:
+            assert any(s is not None for s in tuple(spec)), \
+                (arch, sharding._path_str(path), leaf.shape)
+
+    jax.tree_util.tree_map_with_path(check, params, specs,
+                                     is_leaf=lambda x: isinstance(x, P))
+
+
+@pytest.mark.parametrize("arch", ["yi-34b", "mixtral-8x22b", "whisper-small",
+                                  "xlstm-350m", "recurrentgemma-9b"])
+def test_cache_specs_divisible(arch):
+    cfg = configs.get_config(arch)
+    shape = configs.SHAPES["decode_32k"]
+    from repro.models import encdec, transformer
+    if steps.is_encdec(cfg):
+        tree = jax.eval_shape(lambda: encdec.init_cache(cfg, 128, 1024))
+    else:
+        tree = jax.eval_shape(lambda: transformer.init_cache(cfg, 128, 1024))
+    specs = sharding.cache_specs(tree, cfg, MESH_1POD)
+    sizes = dict(zip(MESH_1POD.axis_names, MESH_1POD.devices.shape))
+
+    def check(path, leaf, spec):
+        for dim, ax in zip(leaf.shape, tuple(spec) + (None,) * 8):
+            if ax is None:
+                continue
+            total = 1
+            for a in (ax if isinstance(ax, tuple) else (ax,)):
+                total *= sizes[a]
+            assert dim % total == 0, (arch, path, leaf.shape, spec)
+
+    jax.tree_util.tree_map_with_path(check, tree, specs,
+                                     is_leaf=lambda x: isinstance(x, P))
+
+
+def test_state_specs_cover_opt(arch="qwen3-0.6b"):
+    cfg = configs.get_config(arch)
+    opt = optimizers.adamw(1e-3)
+    tree = steps.abstract_state(cfg, opt)
+    specs = sharding.state_specs(tree, cfg, MESH_1POD, SYS)
+    assert "m" in specs["opt"] and "v" in specs["opt"]
+    assert specs["step"] == P()
+
+
+def test_input_specs_batch_sharded():
+    cfg = configs.get_config("qwen3-0.6b")
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    d = steps.input_specs(cfg, configs.SHAPES["train_4k"], mesh)
+    assert d["tokens"].shape == (256, 4096)
+    assert d["labels"].dtype.name == "int32"
+    dd = steps.input_specs(cfg, configs.SHAPES["decode_32k"], mesh)
+    assert dd["tokens"].shape == (128, 1)
+    assert dd["pos"].shape == ()
