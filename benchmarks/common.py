@@ -1,15 +1,17 @@
-"""Shared benchmark scaffolding."""
+"""Shared benchmark scaffolding (all construction goes through repro.api)."""
 from __future__ import annotations
 
 import time
 
 import numpy as np
 
-from repro.cluster.sim import SimBackend, SimSystemSpace
-from repro.core import (GroundTruth, PipeTune, TuneV1, TuneV2, SearchSpace,
-                        SystemSpace)
+from repro.api import Experiment
+from repro.core import GroundTruth, SearchSpace, SystemSpace
 from repro.core.backends import RealBackend
 from repro.core.job import HPTJob, Param
+
+# benchmark label -> registry tuner name
+TUNERS = {"TuneV1": "v1", "TuneV2": "v2", "PipeTune": "pipetune"}
 
 
 def paper_space(small=True) -> SearchSpace:
@@ -36,14 +38,31 @@ def real_sys_space() -> SystemSpace:
                        precision=("fp32",))
 
 
-def sim_runners(gt=None):
+def experiment(job: HPTJob, tuner: str, backend="sim", gt=None, seed=0,
+               max_probes=6, **backend_kw) -> Experiment:
+    """An Experiment pre-wired the way the benchmarks compare approaches:
+    `tuner` is a benchmark label ("PipeTune") or registry name ("pipetune");
+    PipeTune shares `gt` across jobs (its cross-job learning)."""
+    name = TUNERS.get(tuner, tuner)
+    kw = {"max_probes": max_probes} if name == "pipetune" else {}
+    if backend == "sim":
+        backend_kw.setdefault("seed", seed)
+    exp = (Experiment(job)
+           .with_tuner(name, **kw)
+           .with_backend(backend, **backend_kw))
+    if name == "pipetune":
+        exp.with_groundtruth(gt or GroundTruth())
+    return exp
+
+
+def sim_runners(gt=None, seed=0, max_probes=6):
+    """TrialRunner factories over SimBackend, keyed by benchmark label
+    (``ClusterSim`` takes one factory per job)."""
     gt = gt or GroundTruth()
-    return {
-        "TuneV1": lambda: TuneV1(SimBackend()),
-        "TuneV2": lambda: TuneV2(SimBackend(), SimSystemSpace()),
-        "PipeTune": lambda: PipeTune(SimBackend(), SimSystemSpace(),
-                                     groundtruth=gt, max_probes=6),
-    }
+    dummy = HPTJob(workload="lenet-mnist", space=paper_space())
+    return {label: experiment(dummy, label, gt=gt, seed=seed,
+                              max_probes=max_probes).build_runner
+            for label in TUNERS}
 
 
 class Timer:

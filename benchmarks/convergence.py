@@ -9,8 +9,6 @@ import json
 import numpy as np
 
 from benchmarks import common
-from repro.cluster.sim import SimBackend, SimSystemSpace
-from repro.core import GroundTruth, PipeTune, TuneV1, TuneV2
 from repro.core.job import HPTJob
 
 
@@ -31,13 +29,8 @@ def run(quick=True, workload="cnn-news20", seed=0):
     space = common.paper_space(small=False)
     job = HPTJob(workload=workload, space=space, max_epochs=9, seed=seed)
     out = {}
-    sspace = SimSystemSpace()
-    for name, runner in [
-        ("TuneV1", TuneV1(SimBackend(seed))),
-        ("TuneV2", TuneV2(SimBackend(seed), sspace)),
-        ("PipeTune", PipeTune(SimBackend(seed), sspace,
-                              groundtruth=GroundTruth(), max_probes=6)),
-    ]:
+    for name in ("TuneV1", "TuneV2", "PipeTune"):
+        runner = common.experiment(job, name, seed=seed).build_runner()
         events, res = trace(runner, job)
         out[name] = {"events": events,
                      "final_acc": res.best_accuracy,

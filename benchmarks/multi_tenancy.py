@@ -13,9 +13,8 @@ import json
 import numpy as np
 
 from benchmarks import common
-from repro.cluster.sim import (ClusterConfig, ClusterSim, SimBackend,
-                               SimSystemSpace, make_arrivals)
-from repro.core import GroundTruth, PipeTune, TuneV1, TuneV2
+from repro.cluster.sim import ClusterConfig, ClusterSim, make_arrivals
+from repro.core import GroundTruth
 
 
 def scenario(workloads, n_jobs, n_nodes, seed=0, mean_arrival=400.0,
@@ -24,14 +23,7 @@ def scenario(workloads, n_jobs, n_nodes, seed=0, mean_arrival=400.0,
     jobs = make_arrivals(workloads, n_jobs=n_jobs,
                          mean_interarrival_s=mean_arrival, space=space,
                          max_epochs=9, seed=seed, unseen_frac=0.2)
-    sspace = SimSystemSpace()
-    gt = GroundTruth()
-    factories = {
-        "TuneV1": lambda: TuneV1(SimBackend(seed)),
-        "TuneV2": lambda: TuneV2(SimBackend(seed), sspace),
-        "PipeTune": lambda: PipeTune(SimBackend(seed), sspace, groundtruth=gt,
-                                     max_probes=6),
-    }
+    factories = common.sim_runners(gt=GroundTruth(), seed=seed)
     out = {}
     for name, f in factories.items():
         sim = ClusterSim(ClusterConfig(n_nodes=n_nodes, seed=seed,

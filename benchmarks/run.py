@@ -53,21 +53,19 @@ def bench_fig12_typeIII():
 
 def bench_fig12_real_typeIII():
     """Real (non-simulated) Type-III short-epoch jobs on NumericBackend."""
-    from repro.core import GroundTruth, PipeTune, TuneV1, SystemSpace
+    from repro.api import Experiment
+    from repro.core import GroundTruth
     from repro.core.job import HPTJob, Param, SearchSpace
-    from repro.core.numeric_backend import NumericBackend
     space = SearchSpace([Param("block", "choice", choices=(1, 2))])
-    sspace = SystemSpace(remat=("none",), microbatches=(1, 2),
-                         precision=("fp32",))
     gt = GroundTruth()
     ratios = []
     for wl in ("jacobi-rodinia", "spkmeans-rodinia", "bfs-rodinia"):
         job = HPTJob(workload=wl, space=space, max_epochs=6)
-        r1 = TuneV1(NumericBackend()).run_job(job, scheduler="random",
-                                              n_trials=3)
-        rp = PipeTune(NumericBackend(), sspace, groundtruth=gt,
-                      max_probes=2).run_job(job, scheduler="random",
-                                            n_trials=3)
+        r1 = (Experiment(job).with_tuner("v1").with_backend("numeric")
+              .with_scheduler("random", n_trials=3).run())
+        rp = (Experiment(job).with_tuner("pipetune", max_probes=2)
+              .with_backend("numeric").with_groundtruth(gt)
+              .with_scheduler("random", n_trials=3).run())
         ratios.append(rp.tuning_time_s / max(r1.tuning_time_s, 1e-9))
     import numpy as np
     return f"tune_ratio_mean={np.mean(ratios):.2f}"

@@ -13,8 +13,7 @@ import json
 import numpy as np
 
 from benchmarks import common
-from repro.cluster.sim import SimBackend, SimSystemSpace
-from repro.core import GroundTruth, PipeTune, TuneV1, TuneV2
+from repro.core import GroundTruth
 from repro.core.job import HPTJob
 
 TYPE_I_II = ["lenet-mnist", "lenet-fashion", "cnn-news20", "lstm-news20"]
@@ -23,21 +22,15 @@ TYPE_III = ["jacobi-rodinia", "spkmeans-rodinia", "bfs-rodinia"]
 
 def run(workloads, seed=0, shared_gt=True):
     space = common.paper_space(small=False)
-    sspace = SimSystemSpace()
     gt = GroundTruth()
     out = {}
     for wl in workloads:
         job = HPTJob(workload=wl, space=space, max_epochs=9, seed=seed)
         row = {}
-        for name, factory in [
-            ("TuneV1", lambda: TuneV1(SimBackend(seed))),
-            ("TuneV2", lambda: TuneV2(SimBackend(seed), sspace)),
-            ("PipeTune", lambda: PipeTune(
-                SimBackend(seed), sspace,
-                groundtruth=gt if shared_gt else GroundTruth(),
-                max_probes=6)),
-        ]:
-            res = factory().run_job(job, scheduler="hyperband")
+        for name in common.TUNERS:
+            res = common.experiment(
+                job, name, seed=seed,
+                gt=gt if shared_gt else GroundTruth()).run()
             row[name] = dict(
                 accuracy=res.best_accuracy,
                 training_time_s=res.best_train_time,

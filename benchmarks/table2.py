@@ -13,7 +13,7 @@ import json
 import numpy as np
 
 from benchmarks import common
-from repro.core import GroundTruth, PipeTune, TuneV1, TuneV2
+from repro.api import Experiment
 from repro.core.job import HPTJob
 
 
@@ -26,8 +26,8 @@ def run(quick=True, workload="lenet-mnist", seed=0):
     rows = {}
 
     # Arbitrary: fixed so-so hyperparameters, single training run
-    backend = common.real_backend(quick)
-    arb = TuneV1(backend)
+    arb = (Experiment(job).with_tuner("v1")
+           .with_backend(common.real_backend(quick)).build_runner())
     rec = arb.run_trial(workload, "arbitrary",
                         {"batch_size": 1024 if not quick else 64,
                          "learning_rate": 0.08, "dropout": 0.45}, epochs)
@@ -39,13 +39,13 @@ def run(quick=True, workload="lenet-mnist", seed=0):
         br = res.best_record
         return br.train_time if br else 0.0
 
-    for name, runner in [
-        ("TuneV1", TuneV1(common.real_backend(quick))),
-        ("TuneV2", TuneV2(common.real_backend(quick), sys_space)),
-        ("PipeTune", PipeTune(common.real_backend(quick), sys_space,
-                              groundtruth=GroundTruth(), max_probes=4)),
-    ]:
-        res = runner.run_job(job, scheduler="random", n_trials=n_trials)
+    for name in ("TuneV1", "TuneV2", "PipeTune"):
+        res = (common.experiment(job, name,
+                                 backend=common.real_backend(quick),
+                                 max_probes=4)
+               .with_sys_space(sys_space)
+               .with_scheduler("random", n_trials=n_trials)
+               .run())
         rows[name] = dict(accuracy=res.best_accuracy,
                           training_time_s=best_train_time(res),
                           tuning_time_s=res.tuning_time_s,

@@ -6,9 +6,8 @@ from __future__ import annotations
 import argparse
 import json
 
-from repro.cluster.sim import SimBackend
-from repro.core import TuneV1, GridSearch
-from repro.core.job import Param, SearchSpace
+from repro.api import Experiment
+from repro.core.job import HPTJob, Param, SearchSpace
 
 INSTANCE_USD_PER_H = {"small": 0.8, "medium": 1.9, "large": 4.1}
 INSTANCE_SPEEDUP = {"small": 1.0, "medium": 1.8, "large": 3.1}
@@ -26,16 +25,12 @@ ALL_PARAMS = [
 def run(max_params=6, epochs=5):
     rows = []
     for n in range(1, max_params + 1):
-        space = SearchSpace(ALL_PARAMS[:n])
-        runner = TuneV1(SimBackend())
-        sched = GridSearch(space, per_dim=3, epochs=epochs)
-
-        def evaluate(tid, hp, ep):
-            rec = runner.run_trial("lenet-mnist", tid, hp, ep)
-            return rec.accuracy
-        sched.run(evaluate)
-        t = sum(r.train_time for r in runner.records.values())
-        row = {"n_params": n, "n_trials": len(runner.records),
+        job = HPTJob(workload="lenet-mnist", space=SearchSpace(ALL_PARAMS[:n]),
+                     max_epochs=epochs)
+        res = (Experiment(job).with_tuner("v1").with_backend("sim")
+               .with_scheduler("grid", per_dim=3).run())
+        t = res.tuning_time_s
+        row = {"n_params": n, "n_trials": len(res.records),
                "tuning_time_s": t}
         for inst, usd in INSTANCE_USD_PER_H.items():
             row[f"cost_{inst}_usd"] = usd * (t / INSTANCE_SPEEDUP[inst]) / 3600

@@ -1,13 +1,17 @@
 """Multi-tenant cluster demo: PipeTune vs Tune V1/V2 under load + faults.
 
     PYTHONPATH=src python examples/multi_tenant_cluster.py
+
+Runner factories come from ``Experiment.build_runner`` — ``ClusterSim``
+builds a fresh runner per job, while PipeTune's shared GroundTruth store
+carries its cross-job learning.
 """
 import numpy as np
 
-from repro.cluster.sim import (ClusterConfig, ClusterSim, SimBackend,
-                               SimSystemSpace, make_arrivals)
-from repro.core import GroundTruth, PipeTune, TuneV1, TuneV2, SearchSpace
-from repro.core.job import Param
+from repro.api import Experiment
+from repro.cluster.sim import ClusterConfig, ClusterSim, make_arrivals
+from repro.core import GroundTruth, SearchSpace
+from repro.core.job import HPTJob, Param
 
 
 def main():
@@ -36,24 +40,25 @@ def main():
               f"{extras}")
         return resp
 
-    sspace = SimSystemSpace()
     gt = GroundTruth()
-    r1 = report("TuneV1", lambda: TuneV1(SimBackend()))
-    report("TuneV2", lambda: TuneV2(SimBackend(), sspace))
-    rp = report("PipeTune",
-                lambda: PipeTune(SimBackend(), sspace, groundtruth=gt,
-                                 max_probes=6))
+    proto_job = HPTJob(workload="lenet-mnist", space=space)
+
+    def factory(tuner):
+        exp = Experiment(proto_job).with_tuner(tuner, **(
+            {"max_probes": 6} if tuner == "pipetune" else {}))
+        exp.with_backend("sim").with_groundtruth(gt)
+        return exp.build_runner
+
+    r1 = report("TuneV1", factory("v1"))
+    report("TuneV2", factory("v2"))
+    rp = report("PipeTune", factory("pipetune"))
     print(f"\nPipeTune response-time reduction vs TuneV1: "
           f"{100*(1-rp/r1):.1f}% (paper: up to 30%)")
 
     print("\n--- with node failures (MTBF 20000s) + 5% stragglers ---")
-    report("PipeTune+faults",
-           lambda: PipeTune(SimBackend(), sspace, groundtruth=gt,
-                            max_probes=6),
+    report("PipeTune+faults", factory("pipetune"),
            mtbf_s=20000.0, straggler_prob=0.05)
-    report("PipeTune+faults+nomit",
-           lambda: PipeTune(SimBackend(), sspace, groundtruth=gt,
-                            max_probes=6),
+    report("PipeTune+faults+nomit", factory("pipetune"),
            mtbf_s=20000.0, straggler_prob=0.05, mitigate_stragglers=False)
 
 

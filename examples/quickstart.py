@@ -1,9 +1,15 @@
 """Quickstart: tune a LeNet-style job with PipeTune in under a minute (CPU).
 
     PYTHONPATH=src python examples/quickstart.py
+
+Everything goes through the `Experiment` facade: tuners ("pipetune", "v1",
+"v2"), backends ("real", "sim", "numeric"), and schedulers ("hyperband",
+"random", "grid", "asha", "pbt") resolve by name through `repro.api`
+registries; `run(parallelism=N)` executes each scheduler wave of
+independent trials on a thread pool.
 """
-from repro.core import GroundTruth, PipeTune, HPTJob, SearchSpace, SystemSpace
-from repro.core.backends import RealBackend
+from repro.api import Experiment
+from repro.core import HPTJob, SearchSpace, SystemSpace
 from repro.core.job import Param
 
 
@@ -14,11 +20,14 @@ def main():
         Param("dropout", "float", 0.0, 0.3),
     ])
     job = HPTJob(workload="lenet-mnist", space=space, max_epochs=4)
-    sys_space = SystemSpace(remat=("none", "block"), microbatches=(1, 2),
-                            precision=("fp32",))
-    tuner = PipeTune(RealBackend(n_train=768, n_eval=192, steps_per_epoch=6),
-                     sys_space, groundtruth=GroundTruth(), max_probes=3)
-    res = tuner.run_job(job, scheduler="random", n_trials=4)
+    res = (Experiment(job)
+           .with_tuner("pipetune", max_probes=3)
+           .with_backend("real", n_train=768, n_eval=192, steps_per_epoch=6)
+           .with_sys_space(SystemSpace(remat=("none", "block"),
+                                       microbatches=(1, 2),
+                                       precision=("fp32",)))
+           .with_scheduler("random", n_trials=4)
+           .run())
     print(f"best hyperparameters: {res.best_hparams}")
     print(f"best accuracy:        {res.best_accuracy:.3f}")
     print(f"tuning time:          {res.tuning_time_s:.1f}s "

@@ -17,7 +17,8 @@ import numpy as np
 from repro.checkpoint import CheckpointManager
 from repro.data import synthetic
 from repro.launch import steps as steps_lib
-from repro.models.transformer import ModelConfig, SystemConfig
+from repro.launch.sysargs import add_system_args, system_config_from_args
+from repro.models.transformer import ModelConfig
 from repro.optim import optimizers
 
 
@@ -29,6 +30,7 @@ def main():
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--vocab", type=int, default=2048)
+    add_system_args(ap, microbatches=2)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_lm_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--resume", action="store_true")
@@ -46,7 +48,7 @@ def main():
 
     opt = optimizers.adamw(optimizers.warmup_cosine(3e-4, 20, args.steps),
                            weight_decay=0.01)
-    sys = SystemConfig(microbatches=2, remat="none", precision="fp32")
+    sys = system_config_from_args(args)
     train_step = jax.jit(steps_lib.make_train_step(cfg, sys, opt),
                          donate_argnums=(0,))
 

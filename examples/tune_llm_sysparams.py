@@ -1,8 +1,11 @@
 """PipeTune on an LM training job: tune the TPU-edition system parameters
 (remat / microbatches / precision) per epoch while hyper-tuning the LR.
 
-This is the paper's technique applied to the LM substrate — the same
-PipeTune core drives it because backends are pluggable.
+This is the paper's technique applied to the LM substrate — and the
+demonstration of the `repro.api` extension story: a user-defined backend
+implements the three-method `Backend` protocol (init_trial / run_epoch /
+capabilities), registers itself under a name, and the `Experiment` facade
+drives it like any built-in.
 
     PYTHONPATH=src python examples/tune_llm_sysparams.py
 """
@@ -12,8 +15,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import GroundTruth, PipeTune, SystemSpace
-from repro.core.backends import EpochResult, TrialState
+from repro.api import Experiment, register_backend
+from repro.core import GroundTruth, SystemSpace
+from repro.core.backends import BackendCapabilities, EpochResult, TrialState
 from repro.core.job import HPTJob, Param, SearchSpace
 from repro.core.profiler import Profiler
 from repro.data import synthetic
@@ -29,6 +33,10 @@ class LMBackend:
         self.steps_per_epoch = steps_per_epoch
         self.profiler = Profiler()
         self._cache = {}
+
+    def capabilities(self) -> BackendCapabilities:
+        return BackendCapabilities(async_precompile=False, simulated=False,
+                                   deterministic=False)
 
     def _cfg(self):
         return ModelConfig(name="tune-lm", family="dense", n_layers=2,
@@ -78,14 +86,19 @@ class LMBackend:
             sys_config=dict(sys_cfg), step_times=times)
 
 
+register_backend("lm", LMBackend, sys_space=lambda: SystemSpace(
+    remat=("none", "block"), microbatches=(1, 2, 4), precision=("fp32",)))
+
+
 def main():
     space = SearchSpace([Param("learning_rate", "log", 1e-4, 1e-2)])
-    sys_space = SystemSpace(remat=("none", "block"), microbatches=(1, 2, 4),
-                            precision=("fp32",))
     job = HPTJob(workload="tune-lm", space=space, max_epochs=6)
-    tuner = PipeTune(LMBackend(), sys_space, groundtruth=GroundTruth(),
-                     max_probes=4, objective="accuracy")
-    res = tuner.run_job(job, scheduler="random", n_trials=3)
+    res = (Experiment(job)
+           .with_tuner("pipetune", max_probes=4)
+           .with_backend("lm")
+           .with_groundtruth(GroundTruth())
+           .with_scheduler("random", n_trials=3)
+           .run())
     best = res.best_record
     print(f"best lr: {res.best_hparams.get('learning_rate'):.2e} "
           f"(final loss {-res.best_accuracy:.3f})")

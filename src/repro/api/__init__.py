@@ -1,0 +1,31 @@
+"""Unified experiment API over the PipeTune core.
+
+Layers (module imports go only downward; the one upward edge is
+``TrialRunner.run_job`` lazily resolving scheduler *names* through
+``repro.api.registry`` at call time — scheduler instances need no api):
+
+    repro.api         Experiment facade, registries, executors, Backend
+                      protocol — the public surface every entry point uses
+    repro.core        runners (PipeTune / TuneV1 / TuneV2), ask/tell
+                      schedulers, backends, ground-truth store
+    repro.cluster     SimBackend + discrete-event multi-tenant simulation
+
+Quickstart::
+
+    from repro.api import Experiment
+    res = (Experiment(job)
+           .with_tuner("pipetune")
+           .with_backend("sim")
+           .run(parallelism=4))
+"""
+from repro.api.backend import (  # noqa: F401
+    Backend, BackendCapabilities, backend_capabilities)
+from repro.api.executor import (  # noqa: F401
+    ParallelTrialExecutor, SerialTrialExecutor, make_executor)
+from repro.api.experiment import Experiment  # noqa: F401
+from repro.api.registry import (  # noqa: F401
+    available_backends, available_schedulers, available_tuners,
+    default_sys_space, make_backend, make_scheduler, make_tuner,
+    register_backend, register_scheduler, register_tuner)
+from repro.core.schedulers import (  # noqa: F401
+    AskTellScheduler, TrialProposal)

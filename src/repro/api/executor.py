@@ -1,0 +1,6 @@
+"""Public re-export of the trial executors (implementation lives in
+``repro.core.executor`` so the core drive loop has no upward dependency)."""
+from repro.core.executor import (  # noqa: F401
+    ParallelTrialExecutor, SerialTrialExecutor, make_executor)
+
+__all__ = ["SerialTrialExecutor", "ParallelTrialExecutor", "make_executor"]

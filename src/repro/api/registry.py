@@ -1,0 +1,149 @@
+"""Name-based registries for schedulers, backends, and tuners.
+
+Every entry point (launcher, benchmarks, examples) used to hand-wire the
+same if/elif blocks mapping strings to constructors; these registries are
+the single replacement. Third-party code extends the system by registering
+a factory — no core edits:
+
+    from repro.api import register_backend
+    register_backend("my-cluster", MyBackend, sys_space=MySystemSpace)
+
+Factory conventions
+-------------------
+scheduler factory(job: HPTJob, **kw) -> AskTellScheduler
+backend   factory(**kw)              -> Backend
+tuner     factory(backend, sys_space=None, groundtruth=None, **kw)
+                                     -> TrialRunner
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional
+
+from repro.cluster.sim import SimBackend, SimSystemSpace
+from repro.core.backends import RealBackend
+from repro.core.job import HPTJob, SystemSpace
+from repro.core.numeric_backend import NumericBackend
+from repro.core.pipetune import PipeTune, TrialRunner, TuneV1, TuneV2
+from repro.core.schedulers import (ASHA, AskTellScheduler, GridSearch,
+                                   HyperBand, PBT, RandomSearch)
+
+__all__ = [
+    "register_scheduler", "register_backend", "register_tuner",
+    "make_scheduler", "make_backend", "make_tuner",
+    "default_sys_space", "available_schedulers", "available_backends",
+    "available_tuners",
+]
+
+_SCHEDULERS: Dict[str, Callable[..., AskTellScheduler]] = {}
+_BACKENDS: Dict[str, Dict[str, Any]] = {}
+_TUNERS: Dict[str, Callable[..., TrialRunner]] = {}
+
+
+def _lookup(table: Dict[str, Any], kind: str, name: str):
+    try:
+        return table[name]
+    except KeyError:
+        raise KeyError(f"unknown {kind} {name!r}; available: "
+                       f"{sorted(table)}") from None
+
+
+# -- registration ----------------------------------------------------------
+
+def register_scheduler(name: str,
+                       factory: Callable[..., AskTellScheduler]) -> None:
+    _SCHEDULERS[name] = factory
+
+
+def register_backend(name: str, factory: Callable[..., Any],
+                     sys_space: Optional[Callable[[], SystemSpace]] = None
+                     ) -> None:
+    """`sys_space` builds the system-parameter space this backend's knobs
+    live in; tuners that probe system configs (PipeTune, TuneV2) use it when
+    the caller doesn't supply one."""
+    _BACKENDS[name] = {"factory": factory, "sys_space": sys_space}
+
+
+def register_tuner(name: str, factory: Callable[..., TrialRunner]) -> None:
+    _TUNERS[name] = factory
+
+
+# -- resolution ------------------------------------------------------------
+
+def make_scheduler(name: str, job: HPTJob, **kw) -> AskTellScheduler:
+    return _lookup(_SCHEDULERS, "scheduler", name)(job, **kw)
+
+
+def make_backend(name: str, **kw):
+    return _lookup(_BACKENDS, "backend", name)["factory"](**kw)
+
+
+def default_sys_space(name: str) -> Optional[SystemSpace]:
+    maker = _lookup(_BACKENDS, "backend", name)["sys_space"]
+    return maker() if maker is not None else None
+
+
+def make_tuner(name: str, backend, sys_space=None, groundtruth=None,
+               **kw) -> TrialRunner:
+    return _lookup(_TUNERS, "tuner", name)(
+        backend, sys_space=sys_space, groundtruth=groundtruth, **kw)
+
+
+def available_schedulers():
+    return sorted(_SCHEDULERS)
+
+
+def available_backends():
+    return sorted(_BACKENDS)
+
+
+def available_tuners():
+    return sorted(_TUNERS)
+
+
+# -- built-ins -------------------------------------------------------------
+
+register_scheduler("grid", lambda job, **kw: GridSearch(
+    job.space, epochs=job.max_epochs, **kw))
+register_scheduler("random", lambda job, **kw: RandomSearch(
+    job.space, epochs=job.max_epochs, seed=job.seed, **kw))
+register_scheduler("hyperband", lambda job, **kw: HyperBand(
+    job.space, R=job.max_epochs, seed=job.seed, **kw))
+register_scheduler("asha", lambda job, **kw: ASHA(
+    job.space, max_epochs=job.max_epochs, seed=job.seed, **kw))
+register_scheduler("pbt", lambda job, **kw: PBT(
+    job.space, total_epochs=job.max_epochs, seed=job.seed, **kw))
+
+register_backend("sim", SimBackend, sys_space=SimSystemSpace)
+# precision stays fp32 on the CPU host: bf16 here is software-emulated
+# (5-20x slower) — a host artifact, not a property of the TPU target the
+# tuner is meant to learn about
+register_backend("real", RealBackend, sys_space=lambda: SystemSpace(
+    remat=("none", "block"), microbatches=(1, 2, 4), precision=("fp32",)))
+register_backend("numeric", NumericBackend, sys_space=lambda: SystemSpace(
+    remat=("none",), microbatches=(1, 2), precision=("fp32",)))
+
+
+def _make_v1(backend, sys_space=None, groundtruth=None, **kw):
+    return TuneV1(backend, **kw)
+
+
+def _make_v2(backend, sys_space=None, groundtruth=None, **kw):
+    if sys_space is None:
+        raise ValueError("tuner 'v2' needs a sys_space (use a registered "
+                         "backend with a default, or .with_sys_space())")
+    return TuneV2(backend, sys_space, **kw)
+
+
+def _make_pipetune(backend, sys_space=None, groundtruth=None, **kw):
+    if sys_space is None:
+        raise ValueError("tuner 'pipetune' needs a sys_space (use a "
+                         "registered backend with a default, or "
+                         ".with_sys_space())")
+    return PipeTune(backend, sys_space, groundtruth=groundtruth, **kw)
+
+
+register_tuner("v1", _make_v1)
+register_tuner("tunev1", _make_v1)
+register_tuner("v2", _make_v2)
+register_tuner("tunev2", _make_v2)
+register_tuner("pipetune", _make_pipetune)

@@ -14,6 +14,8 @@ from typing import Dict
 
 import numpy as np
 
+from repro.core.seeding import stable_hash as _stable_hash
+
 # per-sample forward+backward cost (modeled-seconds) and epoch sizing
 WORKLOADS: Dict[str, dict] = {
     # type-I: image CNNs (same model, different datasets)
@@ -80,7 +82,8 @@ def accuracy_at(workload: str, hparams: dict, epoch: int, seed: int = 0
     rate = 0.55 * (lr / 0.01) ** 0.35 * (32.0 / bs) ** 0.15
     rate = min(max(rate, 0.05), 1.5)
     acc = a_max * (1.0 - math.exp(-rate * (epoch + 1)))
-    rng = np.random.RandomState((hash(workload) + seed * 9973 + epoch) % 2**31)
+    rng = np.random.RandomState(
+        (_stable_hash(workload) + seed * 9973 + epoch) % 2**31)
     return float(np.clip(acc + rng.randn() * 0.004, 0.0, 1.0))
 
 
@@ -90,9 +93,9 @@ def profile_vector(workload: str, batch_size: int, chips: int,
     terms + seeded jitter. Same-family workloads land close together (the
     clustering result of paper Fig 8)."""
     w = WORKLOADS[workload]
-    rng = np.random.RandomState((hash(w["kind"]) % 1000) + 17)
+    rng = np.random.RandomState((_stable_hash(w["kind"]) % 1000) + 17)
     base = rng.rand(PROFILE_DIM) * 4.0            # family signature
-    rng2 = np.random.RandomState(hash(workload) % 2**31)
+    rng2 = np.random.RandomState(_stable_hash(workload) % 2**31)
     base = base + rng2.rand(PROFILE_DIM) * 0.4    # per-workload offset
     f = np.asarray(w["feat"])
     base[:3] += f

@@ -31,7 +31,7 @@ import numpy as np
 
 from repro.cluster import perfmodel
 from repro.core import energy as energy_lib
-from repro.core.backends import EpochResult, TrialState
+from repro.core.backends import BackendCapabilities, EpochResult, TrialState
 from repro.core.job import HPTJob, SystemSpace
 from repro.core.profiler import EpochProfile, Profiler
 
@@ -64,6 +64,10 @@ class SimBackend:
     def __init__(self, seed: int = 0):
         self.seed = seed
         self.profiler = Profiler()
+
+    def capabilities(self) -> BackendCapabilities:
+        return BackendCapabilities(async_precompile=False, simulated=True,
+                                   deterministic=True)
 
     def init_trial(self, workload: str, hparams: dict, seed: int = 0
                    ) -> TrialState:

@@ -11,6 +11,10 @@ Public surface:
 from repro.core.groundtruth import GroundTruth, KMeans  # noqa: F401
 from repro.core.profiler import Profiler, PROFILE_EVENTS  # noqa: F401
 from repro.core.schedulers import (  # noqa: F401
-    GridSearch, RandomSearch, HyperBand, ASHA, PBT)
-from repro.core.pipetune import PipeTune, TuneV1, TuneV2  # noqa: F401
+    AskTellScheduler, GridSearch, RandomSearch, HyperBand, ASHA, PBT,
+    TrialProposal)
+from repro.core.backends import (  # noqa: F401
+    BackendCapabilities, backend_capabilities)
+from repro.core.pipetune import (  # noqa: F401
+    JobResult, PipeTune, TrialRunner, TuneV1, TuneV2)
 from repro.core.job import HPTJob, SearchSpace, SystemSpace  # noqa: F401

@@ -23,6 +23,7 @@ import numpy as np
 from repro import configs
 from repro.core import energy as energy_lib
 from repro.core.profiler import EpochProfile, Profiler
+from repro.core.seeding import stable_hash
 from repro.data import synthetic
 from repro.models import small
 from repro.optim import optimizers
@@ -33,6 +34,33 @@ from repro.optim import optimizers
 # trials likewise all start from one fixed default). PipeTune's probing
 # discovers when the aggressive configs fit and are faster.
 SYS_DEFAULT = {"remat": "block", "microbatches": 4, "precision": "fp32"}
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendCapabilities:
+    """What a training backend can do, declared instead of duck-typed.
+
+    async_precompile — candidate system configs compile off the critical path
+                       (the runner may call ``precompile_async``).
+    simulated        — epochs are modeled, not executed (wall time is free).
+    deterministic    — ``run_epoch`` is a pure function of (state, sys_cfg),
+                       so results are bit-identical regardless of the order
+                       trials execute in (safe for parallel executors that
+                       need reproducibility).
+    """
+    async_precompile: bool = False
+    simulated: bool = False
+    deterministic: bool = False
+
+
+def backend_capabilities(backend) -> BackendCapabilities:
+    """Capabilities of ``backend``, with a duck-typing fallback for
+    third-party backends that predate the protocol."""
+    fn = getattr(backend, "capabilities", None)
+    if fn is not None:
+        return fn()
+    return BackendCapabilities(
+        async_precompile=hasattr(backend, "precompile_async"))
 
 
 def sys_key(sys_cfg: dict) -> str:
@@ -79,15 +107,22 @@ class RealBackend:
         self._lock = threading.Lock()
         self.profiler = Profiler()
 
+    def capabilities(self) -> BackendCapabilities:
+        # real training: step-time measurements are host-noisy, so parallel
+        # execution is allowed but not bit-reproducible
+        return BackendCapabilities(async_precompile=True, simulated=False,
+                                   deterministic=False)
+
     # ------------------------------------------------------------------ data
     def _dataset(self, workload: str, seed: int):
         cfg = configs.get_config(workload)
+        wl_seed = seed + stable_hash(workload) % 1000
         if cfg.kind == "lenet":
-            d = synthetic.make_image_dataset(seed + hash(workload) % 1000,
+            d = synthetic.make_image_dataset(wl_seed,
                                              self.n_train + self.n_eval,
                                              n_classes=cfg.n_classes)
         else:
-            d = synthetic.make_text_dataset(seed + hash(workload) % 1000,
+            d = synthetic.make_text_dataset(wl_seed,
                                             self.n_train + self.n_eval,
                                             n_classes=cfg.n_classes,
                                             vocab=cfg.vocab,

@@ -1,0 +1,87 @@
+"""Trial executors: run one scheduler wave against a TrialRunner.
+
+A wave (see ``repro.core.schedulers.AskTellScheduler``) is a list of
+independent ``TrialProposal``s. Executors return ``[(proposal, score), ...]``
+**in wave order** regardless of completion order, so scheduler decisions
+(rung promotion, PBT exploit, best tracking) never depend on scheduling
+noise.
+
+Reproducibility: on a backend whose capabilities declare ``deterministic``
+and a runner without cross-trial shared state (TuneV1/TuneV2),
+``parallelism=N`` is bit-identical to serial execution. PipeTune couples
+concurrent trials through its shared GroundTruth store — the lookup a trial
+sees depends on which wave-mates finished first — so its ground-truth
+hit/miss counts and locked system configs (hence tuning time) can vary
+across parallel runs; the hyperparameter search itself still sees identical
+scores on a deterministic backend with the default accuracy objective.
+
+Clone requests (``proposal.clone_from``, the PBT exploit) are applied
+serially *before* any trial in the wave starts: the cloned state must be the
+source's snapshot at the wave boundary, not mid-training.
+"""
+from __future__ import annotations
+
+import concurrent.futures as cf
+from typing import List, Sequence, Tuple
+
+from repro.core.schedulers import TrialProposal
+
+__all__ = ["SerialTrialExecutor", "ParallelTrialExecutor", "make_executor"]
+
+
+def _apply_clones(runner, proposals: Sequence[TrialProposal]) -> None:
+    for p in proposals:
+        if p.clone_from is not None:
+            runner.clone_trial(p.trial_id, p.clone_from)
+
+
+def _score(runner, workload: str, p: TrialProposal) -> float:
+    rec = runner.run_trial(workload, p.trial_id, p.hparams, p.epochs)
+    return rec.score(runner.objective)
+
+
+class SerialTrialExecutor:
+    """Default executor: trials of a wave run one after another in order."""
+
+    parallelism = 1
+
+    def run_wave(self, runner, workload: str,
+                 proposals: Sequence[TrialProposal]
+                 ) -> List[Tuple[TrialProposal, float]]:
+        _apply_clones(runner, proposals)
+        return [(p, _score(runner, workload, p)) for p in proposals]
+
+
+class ParallelTrialExecutor:
+    """Thread-pool executor over a wave's independent proposals.
+
+    Threads (not processes) because trial epochs release the GIL inside
+    jitted XLA computations, and because runner/backend state (step caches,
+    ground-truth store) is shared; runner bookkeeping is serialized by the
+    runner's own hook lock. Results are merged back in proposal order —
+    deterministic regardless of which trial finishes first.
+    """
+
+    def __init__(self, parallelism: int = 4):
+        if parallelism < 1:
+            raise ValueError(f"parallelism must be >= 1, got {parallelism}")
+        self.parallelism = parallelism
+
+    def run_wave(self, runner, workload: str,
+                 proposals: Sequence[TrialProposal]
+                 ) -> List[Tuple[TrialProposal, float]]:
+        _apply_clones(runner, proposals)
+        if len(proposals) <= 1:
+            return [(p, _score(runner, workload, p)) for p in proposals]
+        with cf.ThreadPoolExecutor(
+                max_workers=min(self.parallelism, len(proposals))) as pool:
+            futures = [pool.submit(_score, runner, workload, p)
+                       for p in proposals]
+            return [(p, f.result()) for p, f in zip(proposals, futures)]
+
+
+def make_executor(parallelism: int = 1):
+    """Serial executor for parallelism<=1, thread-pool otherwise."""
+    if parallelism <= 1:
+        return SerialTrialExecutor()
+    return ParallelTrialExecutor(parallelism)

@@ -15,7 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import energy as energy_lib
-from repro.core.backends import EpochResult, TrialState
+from repro.core.backends import BackendCapabilities, EpochResult, TrialState
 from repro.core.profiler import Profiler
 from repro.models import numeric
 
@@ -24,6 +24,10 @@ class NumericBackend:
     def __init__(self):
         self.profiler = Profiler()
         self._cache: Dict[tuple, object] = {}
+
+    def capabilities(self) -> BackendCapabilities:
+        return BackendCapabilities(async_precompile=False, simulated=False,
+                                   deterministic=False)
 
     def init_trial(self, workload: str, hparams: dict, seed: int = 0
                    ) -> TrialState:

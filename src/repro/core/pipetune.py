@@ -16,18 +16,21 @@ a backend; PipeTune additionally takes a GroundTruth store and SystemSpace.
 """
 from __future__ import annotations
 
+import copy
 import dataclasses
+import threading
 import time
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple, Union
 
 import jax
 import numpy as np
 
 from repro.core import probing
-from repro.core.backends import EpochResult, RealBackend, SYS_DEFAULT, TrialState
+from repro.core.backends import (BackendCapabilities, EpochResult, RealBackend,
+                                 SYS_DEFAULT, TrialState, backend_capabilities)
 from repro.core.groundtruth import GroundTruth
 from repro.core.job import HPTJob, SystemSpace
-from repro.core.schedulers import GridSearch, HyperBand, PBT, RandomSearch
+from repro.core.schedulers import AskTellScheduler
 
 
 @dataclasses.dataclass
@@ -85,10 +88,15 @@ class TrialRunner:
 
     def __init__(self, backend, objective: str = "accuracy", seed: int = 0):
         self.backend = backend
+        self.capabilities: BackendCapabilities = backend_capabilities(backend)
         self.objective = objective
         self.seed = seed
         self.states: Dict[str, TrialState] = {}
         self.records: Dict[str, TrialRecord] = {}
+        # serializes runner bookkeeping (record/state dicts, policy hooks,
+        # ground-truth store) when an executor runs trials concurrently;
+        # backend.run_epoch — the expensive part — stays outside the lock
+        self._hook_lock = threading.RLock()
 
     # -- per-trial system-config policy; overridden by PipeTune -------------
     def sys_for_epoch(self, record: TrialRecord, state: TrialState,
@@ -104,42 +112,65 @@ class TrialRunner:
 
     def run_trial(self, workload: str, trial_id: str, hparams: dict,
                   total_epochs: int) -> TrialRecord:
-        state = self.states.get(trial_id)
-        if state is None:
-            state = self.backend.init_trial(workload, hparams, seed=self.seed)
-            self.states[trial_id] = state
-            self.records[trial_id] = TrialRecord(trial_id, dict(hparams))
-        elif state.hparams != dict(hparams):
-            # PBT explore: continue the same state under perturbed hparams
-            # (exact for SimBackend; RealBackend would re-build its step fns)
-            state.hparams = dict(hparams)
-            self.records[trial_id].hparams = dict(hparams)
-        record = self.records[trial_id]
+        with self._hook_lock:
+            state = self.states.get(trial_id)
+            if state is None:
+                state = self.backend.init_trial(workload, hparams,
+                                                seed=self.seed)
+                self.states[trial_id] = state
+                self.records[trial_id] = TrialRecord(trial_id, dict(hparams))
+            elif state.hparams != dict(hparams):
+                # PBT explore: continue the same state under perturbed hparams
+                # (exact for SimBackend; RealBackend would re-build its step
+                # fns)
+                state.hparams = dict(hparams)
+                self.records[trial_id].hparams = dict(hparams)
+            record = self.records[trial_id]
         prev = record.epochs[-1] if record.epochs else None
         while state.epoch < total_epochs:
-            sys_cfg = self.sys_for_epoch(record, state, state.epoch, prev)
-            record.sys_history.append(dict(sys_cfg))
+            with self._hook_lock:
+                sys_cfg = self.sys_for_epoch(record, state, state.epoch, prev)
+                record.sys_history.append(dict(sys_cfg))
             state, res = self.backend.run_epoch(state, sys_cfg)
-            record.epochs.append(res)
-            self.after_epoch(record, state, res)
+            with self._hook_lock:
+                record.epochs.append(res)
+                self.after_epoch(record, state, res)
             prev = res
-        self.finish_trial(record, state)
+        with self._hook_lock:
+            self.finish_trial(record, state)
         return record
 
     # -- job level -----------------------------------------------------------
-    def run_job(self, job: HPTJob, scheduler: str = "hyperband",
-                **sched_kw) -> JobResult:
+    def run_job(self, job: HPTJob,
+                scheduler: Union[str, AskTellScheduler] = "hyperband",
+                executor=None, parallelism: int = 1, **sched_kw) -> JobResult:
+        """Drive one HPT job: suggest a wave, execute it, report the scores.
+
+        ``scheduler`` is a registry name (with ``sched_kw`` forwarded to its
+        factory) or an AskTellScheduler instance. ``executor`` runs each
+        wave; by default a serial executor, or a thread-pool one when
+        ``parallelism > 1`` (proposals within a wave are independent by the
+        scheduler contract, so this is the paper's trial-level parallelism).
+        """
         t0 = time.time()
-
-        def evaluate(trial_id: str, hparams: dict, epochs: int) -> float:
-            rec = self.run_trial(job.workload, trial_id, hparams, epochs)
-            return rec.score(self.objective)
-
-        sched = self._make_scheduler(job, scheduler, **sched_kw)
-        if scheduler == "pbt":
-            best_hp, best_score = sched.run(evaluate, clone=self.clone_trial)
+        from repro.core.executor import make_executor
+        if isinstance(scheduler, str):
+            # name resolution is the one service core takes from the api
+            # layer, pulled lazily at call time so module imports stay
+            # strictly downward (api -> core)
+            from repro.api.registry import make_scheduler
+            sched = make_scheduler(scheduler, job, **sched_kw)
         else:
-            best_hp, best_score = sched.run(evaluate)
+            sched = scheduler
+        executor = executor if executor is not None \
+            else make_executor(parallelism)
+        while True:
+            wave = sched.suggest()
+            if not wave:
+                break
+            for proposal, score in executor.run_wave(self, job.workload, wave):
+                sched.report(proposal.trial_id, score)
+        best_hp, best_score = sched.best()
         best_rec = max(self.records.values(),
                        key=lambda r: r.score(self.objective), default=None)
         gt = getattr(self, "groundtruth", None)
@@ -153,31 +184,33 @@ class TrialRunner:
             gt_hits=gt.hits if gt else 0, gt_misses=gt.misses if gt else 0)
 
     def clone_trial(self, dst_id: str, src_id: str):
-        """PBT exploit: copy trial state (params/opt/epoch) src -> dst."""
-        import copy
-        src_state = self.states.get(src_id)
-        if src_state is None:
-            return
-        st = copy.copy(src_state)
-        st.params = jax.tree.map(lambda a: a, src_state.params) \
-            if src_state.params is not None else None
-        self.states[dst_id] = st
-        rec = self.records.get(src_id)
-        if rec is not None:
-            self.records[dst_id] = TrialRecord(
-                dst_id, dict(rec.hparams),
-                epochs=list(rec.epochs), sys_history=list(rec.sys_history))
+        """PBT exploit: copy trial state (params/opt/epoch) src -> dst.
 
-    def _make_scheduler(self, job: HPTJob, scheduler: str, **kw):
-        if scheduler == "grid":
-            return GridSearch(job.space, epochs=job.max_epochs, **kw)
-        if scheduler == "random":
-            return RandomSearch(job.space, epochs=job.max_epochs,
-                                seed=job.seed, **kw)
-        if scheduler == "pbt":
-            return PBT(job.space, total_epochs=job.max_epochs,
-                       seed=job.seed, **kw)
-        return HyperBand(job.space, R=job.max_epochs, seed=job.seed, **kw)
+        Buffers are materially copied, not aliased: RealBackend's train step
+        donates params AND opt_state, so a shared buffer would be invalidated
+        for the source trial the first time the clone trains.
+        """
+        def tree_copy(tree):
+            if tree is None:
+                return None
+            return jax.tree.map(
+                lambda a: a.copy() if hasattr(a, "copy") else a, tree)
+
+        with self._hook_lock:
+            src_state = self.states.get(src_id)
+            if src_state is None:
+                return
+            st = copy.copy(src_state)
+            st.hparams = dict(src_state.hparams)
+            st.params = tree_copy(src_state.params)
+            st.opt_state = tree_copy(src_state.opt_state)
+            self.states[dst_id] = st
+            rec = self.records.get(src_id)
+            if rec is not None:
+                self.records[dst_id] = TrialRecord(
+                    dst_id, dict(rec.hparams),
+                    epochs=list(rec.epochs),
+                    sys_history=list(rec.sys_history))
 
 
 class TuneV1(TrialRunner):
@@ -240,7 +273,7 @@ class PipeTune(TrialRunner):
         if plan is not None and not plan.done:
             cfg = plan.next_config()
             # async-compile the next candidate off the critical path
-            if not plan.done and hasattr(self.backend, "precompile_async"):
+            if not plan.done and self.capabilities.async_precompile:
                 self.backend.precompile_async(
                     state, plan.configs[plan.next_idx])
             return dict(cfg)
@@ -266,7 +299,7 @@ class PipeTune(TrialRunner):
                     duration_s=result.duration_s, energy_j=result.energy_j,
                     accuracy=result.accuracy, loss=result.loss))
                 self._plans[tid] = plan
-                if hasattr(self.backend, "precompile_async") and plan.configs:
+                if self.capabilities.async_precompile and plan.configs:
                     self.backend.precompile_async(state, plan.configs[0])
             return
         plan = self._plans.get(tid)

@@ -12,6 +12,8 @@ from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
+from repro.core.seeding import stable_hash
+
 
 @dataclasses.dataclass
 class ProbeResult:
@@ -81,7 +83,7 @@ def plan_diverse(sys_configs: List[dict], max_probes: Optional[int] = None,
             elif isinstance(v, (int, float)):
                 out.append(float(np.log1p(v)))
             else:
-                out.append(float(hash(str(v)) % 97) / 97.0)
+                out.append(float(stable_hash(str(v)) % 97) / 97.0)
         return np.asarray(out)
 
     X = np.stack([vec(c) for c in cfgs])

@@ -1,0 +1,31 @@
+"""Shared CLI wiring for the execution-system knobs (SystemConfig).
+
+Every training entry point used to re-declare the same
+``--microbatches/--remat/--precision`` flags and hand-build a
+``SystemConfig``; this is the single place that mapping lives now.
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.models.transformer import SystemConfig
+
+SYSTEM_ARG_NAMES = ("microbatches", "remat", "precision")
+
+
+def add_system_args(ap: argparse.ArgumentParser,
+                    microbatches: int = 1, remat: str = "none",
+                    precision: str = "fp32") -> argparse.ArgumentParser:
+    ap.add_argument("--microbatches", type=int, default=microbatches)
+    ap.add_argument("--remat", default=remat,
+                    choices=["none", "block", "dots"])
+    ap.add_argument("--precision", default=precision,
+                    choices=["fp32", "bf16"])
+    return ap
+
+
+def system_config_from_args(args: argparse.Namespace,
+                            **overrides) -> SystemConfig:
+    kw = {name: getattr(args, name) for name in SYSTEM_ARG_NAMES}
+    kw.update(overrides)
+    return SystemConfig(**kw)

@@ -17,7 +17,7 @@ from repro import configs
 from repro.checkpoint import CheckpointManager
 from repro.data import synthetic
 from repro.launch import steps as steps_lib
-from repro.models.transformer import SystemConfig
+from repro.launch.sysargs import add_system_args, system_config_from_args
 from repro.optim import optimizers
 
 
@@ -29,9 +29,7 @@ def main():
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--lr", type=float, default=3e-4)
-    ap.add_argument("--microbatches", type=int, default=1)
-    ap.add_argument("--remat", default="none")
-    ap.add_argument("--precision", default="fp32")
+    add_system_args(ap)
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--ckpt-every", type=int, default=25)
     ap.add_argument("--resume", action="store_true")
@@ -41,8 +39,7 @@ def main():
         else configs.get_config(args.arch)
     if steps_lib.is_encdec(cfg):
         raise SystemExit("use whisper paths via examples; train.py covers LM")
-    sys = SystemConfig(microbatches=args.microbatches, remat=args.remat,
-                       precision=args.precision)
+    sys = system_config_from_args(args)
     opt = optimizers.adamw(
         optimizers.warmup_cosine(args.lr, 10, args.steps), weight_decay=0.01)
     step_fn = jax.jit(steps_lib.make_train_step(cfg, sys, opt),

@@ -1,33 +1,46 @@
 """HPT-job launcher: run a full PipeTune (or baseline) tuning job.
 
     PYTHONPATH=src python -m repro.launch.tune --workload lenet-mnist \
-        --system pipetune --scheduler hyperband --epochs 9
+        --system pipetune --scheduler hyperband --epochs 9 --parallelism 4
+
+Tuners, backends, and schedulers resolve through the ``repro.api``
+registries — ``--system``/``--backend``/``--scheduler`` accept anything
+registered there, including third-party plugins imported via ``--plugin``.
 """
 from __future__ import annotations
 
 import argparse
+import importlib
 import json
 
-from repro.cluster.sim import SimBackend, SimSystemSpace
-from repro.core import (GroundTruth, HPTJob, PipeTune, SearchSpace,
-                        SystemSpace, TuneV1, TuneV2)
-from repro.core.backends import RealBackend
-from repro.core.job import Param
+from repro.api import (Experiment, available_backends, available_schedulers,
+                       available_tuners)
+from repro.core import GroundTruth, SearchSpace
+from repro.core.job import HPTJob, Param
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--workload", default="lenet-mnist")
     ap.add_argument("--system", default="pipetune",
-                    choices=["pipetune", "v1", "v2"])
+                    help=f"tuner name; registered: {available_tuners()}")
     ap.add_argument("--scheduler", default="hyperband",
-                    choices=["hyperband", "random", "grid"])
+                    help="scheduler name; registered: "
+                         f"{available_schedulers()}")
     ap.add_argument("--epochs", type=int, default=6)
-    ap.add_argument("--backend", default="real", choices=["real", "sim"])
+    ap.add_argument("--backend", default="real",
+                    help=f"backend name; registered: {available_backends()}")
+    ap.add_argument("--parallelism", type=int, default=1,
+                    help="trials per scheduler wave to run concurrently")
+    ap.add_argument("--plugin", action="append", default=[],
+                    help="module to import for register_* side effects")
     ap.add_argument("--gt-store", default=None,
                     help="path for the persistent ground-truth store")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
+
+    for mod in args.plugin:
+        importlib.import_module(mod)
 
     space = SearchSpace([
         Param("batch_size", "choice", choices=(32, 64, 128)),
@@ -36,25 +49,18 @@ def main():
     ])
     job = HPTJob(workload=args.workload, space=space, max_epochs=args.epochs)
 
-    if args.backend == "real":
-        backend = RealBackend(n_train=1024, n_eval=256, steps_per_epoch=8)
-        sys_space = SystemSpace(remat=("none", "block"),
-                                microbatches=(1, 2, 4),
-                                precision=("fp32", "bf16"))
-    else:
-        backend = SimBackend()
-        sys_space = SimSystemSpace()
+    backend_kw = {"n_train": 1024, "n_eval": 256, "steps_per_epoch": 8} \
+        if args.backend == "real" else {}
+    tuner_kw = {"max_probes": 4} if args.system == "pipetune" else {}
+    sched_kw = {"n_trials": 6} if args.scheduler == "random" else {}
 
-    gt = GroundTruth(path=args.gt_store)
-    if args.system == "pipetune":
-        runner = PipeTune(backend, sys_space, groundtruth=gt, max_probes=4)
-    elif args.system == "v2":
-        runner = TuneV2(backend, sys_space)
-    else:
-        runner = TuneV1(backend)
+    res = (Experiment(job)
+           .with_tuner(args.system, **tuner_kw)
+           .with_backend(args.backend, **backend_kw)
+           .with_scheduler(args.scheduler, **sched_kw)
+           .with_groundtruth(GroundTruth(path=args.gt_store))
+           .run(parallelism=args.parallelism))
 
-    kw = {"n_trials": 6} if args.scheduler == "random" else {}
-    res = runner.run_job(job, scheduler=args.scheduler, **kw)
     print(f"workload={args.workload} system={args.system} "
           f"scheduler={args.scheduler}")
     print(f"  best accuracy : {res.best_accuracy:.4f}")

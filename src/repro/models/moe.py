@@ -1,7 +1,21 @@
-"""Mixture-of-Experts FFN: top-k router + capacity-based einsum dispatch.
+"""Mixture-of-Experts FFN: top-k router + GShard-style einsum dispatch.
 
-GShard-style dispatch/combine so the FLOP count matches *active* experts
-(top_k x capacity_factor), not E x dense — this keeps roofline numbers honest.
+Two dispatch modes:
+
+* ``dropless=True`` (the model default, see ``ModelConfig.moe_cfg``): expert
+  capacity equals the token count, so no token is ever dropped. This is the
+  only mode that keeps the FFN a *per-token* function — capacity overflow
+  makes token A's keep/drop depend on how tokens before it routed, which
+  leaks content across positions (breaking sliding-window receptive-field
+  guarantees and parallel-forward/decode agreement).
+* ``dropless=False``: finite capacity C = ceil(top_k*T*capacity_factor/E)
+  with position-priority overflow drops (the residual carries dropped
+  tokens). This is the training-efficiency approximation whose FLOP count
+  matches *active* experts (top_k x capacity_factor), not E x dense; use it
+  for throughput experiments, never where the receptive field matters.
+  (Roofline/param accounting is analytic — ``analysis.roofline`` — and does
+  not depend on which mode executes.)
+
 Supports DeepSeek/Qwen-MoE shared experts (always-on dense branch).
 
 Expert tensors are (E, d_model, d_ff); sharding rules live in
@@ -28,6 +42,7 @@ class MoEConfig:
     shared_d_ff: Optional[int] = None
     capacity_factor: float = 1.25
     router_aux_weight: float = 0.01
+    dropless: bool = False       # capacity = T: exact per-token routing
 
 
 def init_moe(key, cfg: MoEConfig, dtype=jnp.float32):
@@ -61,9 +76,12 @@ def _top_k_gating(logits, cfg: MoEConfig):
 def apply_moe(params, x, cfg: MoEConfig, token_chunk: int = 8192):
     """x: (B, S, d) -> (B, S, d), aux_loss scalar.
 
-    Dispatch: each token is routed to top_k experts; experts have capacity
-    C = ceil(top_k * S * capacity_factor / E) per batch row. Overflow drops
-    (residual connection carries the token through unchanged).
+    Dispatch: each token is routed to top_k experts. With ``cfg.dropless``
+    capacity is T (top_k experts are distinct, so an expert receives at most
+    T (token, choice) pairs — no overflow is possible and routing stays a
+    per-token function). Otherwise experts have capacity
+    C = ceil(top_k * S * capacity_factor / E) per batch row and overflow
+    drops (residual connection carries the token through unchanged).
 
     Long sequences are routed in ``token_chunk`` segments (capacity per
     segment) — bounds the (B,E,C,d) dispatch buffers for 32k+ prefill.
@@ -77,7 +95,8 @@ def apply_moe(params, x, cfg: MoEConfig, token_chunk: int = 8192):
         return ys.swapaxes(0, 1).reshape(B, S, d), auxs.mean()
     E, k = cfg.n_experts, cfg.top_k
     T = S
-    C = max(1, int(-(-k * T * cfg.capacity_factor // E)))
+    C = T if cfg.dropless else \
+        max(1, int(-(-k * T * cfg.capacity_factor // E)))
 
     xf = x.reshape(B, T, d)
     logits = jnp.einsum("btd,de->bte", xf.astype(jnp.float32), params["router"])

@@ -51,6 +51,11 @@ class ModelConfig:
     top_k: int = 0
     n_shared: int = 0
     capacity_factor: float = 1.25
+    # exact per-token routing: capacity drops couple token outputs across
+    # positions, which would break SWA receptive-field guarantees and
+    # forward/decode agreement (set False only for capacity-drop
+    # throughput experiments)
+    moe_dropless: bool = True
     # --- hybrid (Griffin) ---
     rec_per_attn: int = 2                 # recurrent layers per attention layer
     d_rnn: Optional[int] = None
@@ -84,7 +89,8 @@ class ModelConfig:
         return moe_lib.MoEConfig(
             d_model=self.d_model, d_ff=self.d_ff, n_experts=self.n_experts,
             top_k=self.top_k, n_shared=self.n_shared,
-            capacity_factor=self.capacity_factor)
+            capacity_factor=self.capacity_factor,
+            dropless=self.moe_dropless)
 
     def rec_cfg(self) -> rec_lib.RecurrentConfig:
         return rec_lib.RecurrentConfig(d_model=self.d_model,

@@ -1,0 +1,277 @@
+"""Unified experiment API: ask/tell protocol, registries, executors, facade."""
+import math
+
+import pytest
+
+from repro.api import (Backend, Experiment, ParallelTrialExecutor,
+                       SerialTrialExecutor, TrialProposal, available_backends,
+                       available_schedulers, available_tuners, make_backend,
+                       make_scheduler, make_tuner)
+from repro.cluster.sim import SimBackend, SimSystemSpace
+from repro.core import GroundTruth, TuneV1
+from repro.core.backends import RealBackend, backend_capabilities
+from repro.core.job import HPTJob, Param, SearchSpace
+from repro.core.schedulers import (ASHA, GridSearch, HyperBand, PBT,
+                                   RandomSearch)
+
+
+def _space():
+    return SearchSpace([Param("x", "float", 0.0, 1.0),
+                        Param("lr", "log", 0.001, 0.1)])
+
+
+def _planted(x_opt=0.7):
+    def evaluate(tid, hp, epochs):
+        return ((1.0 - (hp["x"] - x_opt) ** 2) * (1 - math.exp(-epochs))
+                + 0.01 * hp["lr"])
+    return evaluate
+
+
+def _sched_pairs():
+    mk = [
+        lambda: GridSearch(_space(), per_dim=3, epochs=5),
+        lambda: RandomSearch(_space(), n_trials=10, epochs=5, seed=3),
+        lambda: HyperBand(_space(), R=9, eta=3, seed=2),
+        lambda: ASHA(_space(), max_epochs=9, n_trials=12, seed=1),
+        lambda: PBT(_space(), population=6, total_epochs=9, interval=3,
+                    seed=4),
+    ]
+    return [(m(), m()) for m in mk]
+
+
+# ---------------------------------------------------------------- protocol
+
+def test_ask_tell_matches_legacy_run():
+    """Driving suggest/report by hand gives the same winner as the run()
+    shim for a fixed seed, for every scheduler."""
+    ev = _planted()
+    for manual, legacy in _sched_pairs():
+        name = type(manual).__name__
+        while True:
+            wave = manual.suggest()
+            if not wave:
+                break
+            ids = [p.trial_id for p in wave]
+            assert len(set(ids)) == len(ids), f"{name}: duplicate ids in wave"
+            for p in wave:
+                manual.report(p.trial_id, ev(p.trial_id, p.hparams, p.epochs))
+        assert manual.done, name
+        assert manual.suggest() == [], name
+        assert manual.best() == legacy.run(ev), name
+
+
+def test_proposals_resume_with_growing_budgets():
+    """HyperBand re-proposes surviving trials with larger epoch targets."""
+    hb = HyperBand(_space(), R=9, eta=3, seed=0)
+    ev = _planted()
+    budgets = {}
+    while True:
+        wave = hb.suggest()
+        if not wave:
+            break
+        for p in wave:
+            assert p.epochs >= budgets.get(p.trial_id, 0)
+            budgets[p.trial_id] = p.epochs
+            hb.report(p.trial_id, ev(p.trial_id, p.hparams, p.epochs))
+    assert max(budgets.values()) == 9
+    assert any(v < 9 for v in budgets.values())     # pruned early rungs
+
+
+def test_pbt_waves_carry_clone_requests():
+    pbt = PBT(_space(), population=4, total_epochs=9, interval=3, seed=0)
+    ev = _planted()
+    clones = []
+    while True:
+        wave = pbt.suggest()
+        if not wave:
+            break
+        clones += [(p.trial_id, p.clone_from) for p in wave
+                   if p.clone_from is not None]
+        for p in wave:
+            pbt.report(p.trial_id, ev(p.trial_id, p.hparams, p.epochs))
+    assert pbt.clone_events > 0
+    assert len(clones) == pbt.clone_events
+    assert all(dst != src for dst, src in clones)
+
+
+# --------------------------------------------------------------- registries
+
+def test_registry_lists_builtins():
+    assert {"grid", "random", "hyperband", "asha", "pbt"} <= \
+        set(available_schedulers())
+    assert {"sim", "real", "numeric"} <= set(available_backends())
+    assert {"v1", "v2", "pipetune"} <= set(available_tuners())
+
+
+def test_registry_unknown_names_raise_with_available():
+    job = HPTJob(workload="lenet-mnist", space=_space())
+    with pytest.raises(KeyError, match=r"unknown scheduler 'bo'.*available"):
+        make_scheduler("bo", job)
+    with pytest.raises(KeyError, match=r"unknown backend 'tpu'.*available"):
+        make_backend("tpu")
+    with pytest.raises(KeyError, match=r"unknown tuner 'bohb'.*available"):
+        make_tuner("bohb", SimBackend())
+    with pytest.raises(ValueError, match="sys_space"):
+        make_tuner("pipetune", SimBackend())    # needs a system space
+
+
+def test_backend_protocol_and_capabilities():
+    sim, real = SimBackend(), RealBackend()
+    assert isinstance(sim, Backend) and isinstance(real, Backend)
+    assert sim.capabilities().deterministic
+    assert sim.capabilities().simulated
+    assert real.capabilities().async_precompile
+    assert not real.capabilities().deterministic
+
+    class LegacyDuck:                       # pre-protocol third-party backend
+        def precompile_async(self, *a):
+            pass
+    assert backend_capabilities(LegacyDuck()).async_precompile
+
+
+# ------------------------------------------------------------------ facade
+
+def _job(seed=0, epochs=9):
+    space = SearchSpace([
+        Param("batch_size", "choice", choices=(32, 64, 256)),
+        Param("learning_rate", "log", 0.001, 0.1),
+    ])
+    return HPTJob(workload="lenet-mnist", space=space, max_epochs=epochs,
+                  seed=seed)
+
+
+@pytest.mark.parametrize("tuner", ["v1", "v2", "pipetune"])
+def test_facade_drives_every_tuner_on_sim(tuner):
+    res = (Experiment(_job())
+           .with_tuner(tuner)
+           .with_backend("sim")
+           .with_scheduler("random", n_trials=4)
+           .run())
+    assert res.best_record is not None
+    assert len(res.records) == 4
+    assert res.best_accuracy > 0
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("tuner", ["v1", "v2", "pipetune"])
+def test_facade_drives_every_tuner_on_real(tuner):
+    job = HPTJob(workload="lenet-mnist",
+                 space=SearchSpace([Param("learning_rate", "log", 0.005,
+                                          0.05)]),
+                 max_epochs=2)
+    res = (Experiment(job)
+           .with_tuner(tuner, **({"max_probes": 2} if tuner == "pipetune"
+                                 else {}))
+           .with_backend("real", n_train=128, n_eval=64, steps_per_epoch=2)
+           .with_scheduler("random", n_trials=2)
+           .run())
+    assert res.best_record is not None and len(res.records) == 2
+
+
+def test_facade_rejects_ignored_config_on_tuner_instance():
+    runner = TuneV1(SimBackend())
+    with pytest.raises(ValueError, match="with_backend"):
+        (Experiment(_job()).with_tuner(runner)
+         .with_backend("real", n_train=128).run())
+    # a bare tuner instance (nothing to ignore) is fine
+    res = (Experiment(_job()).with_tuner(runner)
+           .with_scheduler("random", n_trials=2).run())
+    assert len(res.records) == 2
+
+
+def test_facade_rejects_exhausted_scheduler_instance():
+    sched = RandomSearch(_job().space, n_trials=2, epochs=3)
+    exp = Experiment(_job()).with_scheduler(sched)
+    exp.run()
+    with pytest.raises(ValueError, match="exhausted"):
+        exp.run()
+
+
+def test_facade_matches_legacy_run_job():
+    res_f = (Experiment(_job()).with_tuner("v1").with_backend("sim")
+             .with_scheduler("hyperband").run())
+    res_l = TuneV1(SimBackend()).run_job(_job(), scheduler="hyperband")
+    assert res_f.best_hparams == res_l.best_hparams
+    assert res_f.best_score == res_l.best_score
+    assert len(res_f.records) == len(res_l.records)
+
+
+# --------------------------------------------------------------- executors
+
+@pytest.mark.parametrize("scheduler,kw", [
+    ("random", {"n_trials": 8}),
+    ("hyperband", {}),
+    ("pbt", {"population": 4, "interval": 3}),
+])
+def test_parallel_executor_is_bit_identical_to_serial(scheduler, kw):
+    """Acceptance: parallelism=4 on SimBackend == serial, bit for bit."""
+    def result(parallelism):
+        return (Experiment(_job())
+                .with_tuner("v1").with_backend("sim")
+                .with_scheduler(scheduler, **kw)
+                .run(parallelism=parallelism))
+    serial, parallel = result(1), result(4)
+    assert serial.best_hparams == parallel.best_hparams
+    assert serial.best_score == parallel.best_score
+    assert sorted(serial.records) == sorted(parallel.records)
+    for tid in serial.records:
+        assert [e.accuracy for e in serial.records[tid].epochs] == \
+            [e.accuracy for e in parallel.records[tid].epochs], tid
+
+
+def test_parallel_executor_runs_pipetune_with_shared_groundtruth():
+    gt = GroundTruth()
+    res = (Experiment(_job())
+           .with_tuner("pipetune", max_probes=4)
+           .with_backend("sim")
+           .with_groundtruth(gt)
+           .with_scheduler("random", n_trials=6)
+           .run(parallelism=4))
+    assert res.gt_hits + res.gt_misses > 0
+    assert res.best_accuracy > 0
+
+
+def test_executor_merge_order_is_wave_order():
+    class SlowFirstRunner:
+        objective = "accuracy"
+
+        def run_trial(self, workload, tid, hp, epochs):
+            import time
+            if tid == "t0":
+                time.sleep(0.05)        # t0 finishes last
+
+            class R:
+                def score(self, _, v=hp["v"]):
+                    return v
+            return R()
+
+        def clone_trial(self, dst, src):
+            raise AssertionError("no clones expected")
+
+    wave = [TrialProposal(f"t{i}", {"v": float(i)}, 1) for i in range(4)]
+    for ex in (SerialTrialExecutor(), ParallelTrialExecutor(4)):
+        out = ex.run_wave(SlowFirstRunner(), "wl", wave)
+        assert [p.trial_id for p, _ in out] == ["t0", "t1", "t2", "t3"]
+        assert [s for _, s in out] == [0.0, 1.0, 2.0, 3.0]
+
+
+# ------------------------------------------------------------- clone safety
+
+def test_clone_trial_copies_params_and_opt_state():
+    """PBT exploit must not alias buffers: RealBackend's step donates both
+    params and opt_state, so aliasing corrupts the source trial."""
+    backend = RealBackend(n_train=128, n_eval=64, steps_per_epoch=2)
+    runner = TuneV1(backend)
+    runner.run_trial("lenet-mnist", "src", {"learning_rate": 0.01}, 1)
+    runner.clone_trial("dst", "src")
+    src, dst = runner.states["src"], runner.states["dst"]
+    import jax
+    for a, b in zip(jax.tree.leaves(src.params), jax.tree.leaves(dst.params)):
+        assert a is not b
+    for a, b in zip(jax.tree.leaves(src.opt_state),
+                    jax.tree.leaves(dst.opt_state)):
+        assert a is not b
+    # both trials keep training independently (donation-safe)
+    runner.run_trial("lenet-mnist", "dst", {"learning_rate": 0.02}, 2)
+    runner.run_trial("lenet-mnist", "src", {"learning_rate": 0.01}, 2)
+    assert runner.states["src"].epoch == runner.states["dst"].epoch == 2

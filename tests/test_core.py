@@ -1,6 +1,8 @@
 """PipeTune core: kmeans properties, ground truth, probing, profiler."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis",
+                    reason="property tests need hypothesis (requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import GroundTruth, KMeans, PROFILE_EVENTS, Profiler
