@@ -1,6 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
 """§Perf hillclimb driver: run system-config variants of the three target
 cells and print before/after roofline terms.
 
@@ -10,7 +7,10 @@ Targets (picked per the methodology from the baseline table):
   * xlstm-350m x train_4k      — worst roofline fraction
 
 Each variant encodes a hypothesis; see EXPERIMENTS.md §Perf for the napkin
-math and verdicts.
+math and verdicts. ``run(quick=True)`` compiles reduced-config variants of
+one target on a 1x1 mesh — the smoke path ``benchmarks/run.py`` drives.
+(The 512-device XLA flag the production path needs is set when
+``repro.launch.dryrun`` is imported.)
 """
 import argparse
 import json
@@ -51,6 +51,29 @@ VARIANTS = {
         ("micro=1+remat=none", {"microbatches": 1, "remat": "none"}),
     ],
 }
+
+
+QUICK_VARIANTS = [
+    ("baseline", {}),
+    ("micro=1", {"microbatches": 1}),
+    ("remat=none", {"remat": "none"}),
+]
+
+
+def run(quick=True, arch="xlstm-350m"):
+    """Smoke-scale hillclimb: reduced config, tiny train shape, 1x1 mesh.
+    Returns the dry-run records (one per variant) with ``variant`` set."""
+    from repro import configs
+    mesh = mesh_lib.make_mesh(1, 1)
+    shape = configs.ShapeSpec("train_smoke", "train", 128, 8)
+    records = []
+    for name, overrides in QUICK_VARIANTS:
+        r = dryrun.run_cell(arch, "train_smoke", mesh=mesh, reduced=True,
+                            shape=shape, sys_overrides=overrides,
+                            verbose=False)
+        r["variant"] = name
+        records.append(r)
+    return records
 
 
 def main():

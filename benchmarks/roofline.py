@@ -46,6 +46,23 @@ def pick_targets(recs: List[dict]):
             "representative": rep}
 
 
+def run(records=None):
+    """Roofline summary over in-process records (the smoke path
+    ``benchmarks/run.py`` drives): dry-runs the quick hillclimb variants
+    when none are given, prints the table, and returns the headline terms."""
+    if records is None:
+        from benchmarks import hillclimb
+        records = hillclimb.run(quick=True)
+    recs = [r for r in records if r.get("status") == "ok"]
+    if not recs:
+        raise RuntimeError("no ok dry-run records to summarize")
+    table(recs)
+    by_mfu = max(recs, key=lambda r: r["roofline"]["mfu"])
+    doms = sorted({r["roofline"]["dominant"] for r in recs})
+    return {"n": len(recs), "dominant": "/".join(doms),
+            "mfu_max": by_mfu["roofline"]["mfu"]}
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("path", nargs="?", default="dryrun_single.json")

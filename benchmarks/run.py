@@ -81,6 +81,19 @@ def bench_fig13_14_multi_tenancy():
     return f"response_reduction_vs_v1={100*(1-pt/v1):.1f}%"
 
 
+def bench_async_vs_barrier():
+    """AsyncASHA vs HyperBand on the event-driven cluster executor: simulated
+    time to the first final-rung completion under 30% stragglers."""
+    from benchmarks import multi_tenancy
+    out = multi_tenancy.async_vs_barrier()
+    a = out["asha-async"]["final_rung_s"]
+    h = out["hyperband"]["final_rung_s"]
+    ma = out["asha-async"]["makespan_s"]
+    mh = out["hyperband"]["makespan_s"]
+    return (f"final_rung_speedup={h/a:.2f}x;"
+            f"makespan_speedup={mh/ma:.2f}x")
+
+
 def bench_fig1_tuning_cost():
     from benchmarks import tuning_cost
     rows = tuning_cost.run(max_params=3, epochs=3)
@@ -113,17 +126,50 @@ def bench_kernels():
     return f"fa_max_err={err:.1e}"
 
 
+_HILLCLIMB_RECORDS = None       # shared with bench_roofline (one compile)
+
+
+def bench_hillclimb():
+    """§Perf hillclimb smoke: reduced-config variants on a 1x1 mesh."""
+    global _HILLCLIMB_RECORDS
+    from benchmarks import hillclimb
+    _HILLCLIMB_RECORDS = hillclimb.run(quick=True)
+    ok = [r for r in _HILLCLIMB_RECORDS if r["status"] == "ok"]
+    if len(ok) != len(_HILLCLIMB_RECORDS):
+        bad = [r["variant"] for r in _HILLCLIMB_RECORDS
+               if r["status"] != "ok"]
+        raise RuntimeError(f"hillclimb variants failed to compile: {bad}")
+    base = next(r for r in ok if r["variant"] == "baseline")
+    best = min(ok, key=lambda r: r["roofline"]["step_time_s"])
+    return (f"variants={len(ok)};best={best['variant']};step_ratio="
+            f"{best['roofline']['step_time_s']/base['roofline']['step_time_s']:.2f}")
+
+
+def bench_roofline():
+    """Roofline terms over the hillclimb dry-run records."""
+    from benchmarks import roofline
+    out = roofline.run(_HILLCLIMB_RECORDS)     # reuses compiles when present
+    return f"n={out['n']};dom={out['dominant']};mfu_max={out['mfu_max']:.1e}"
+
+
 def main() -> None:
+    # every bench here already runs its module's quick mode (the scaffold
+    # contract: full/slow versions live behind each module's own --full)
     _timed("table2", bench_table2)
     _timed("fig9_10_convergence", bench_fig9_10_convergence)
     _timed("fig11_single_tenancy", bench_fig11_single_tenancy)
     _timed("fig12_typeIII", bench_fig12_typeIII)
     _timed("fig12_real_typeIII", bench_fig12_real_typeIII)
     _timed("fig13_14_multi_tenancy", bench_fig13_14_multi_tenancy)
+    _timed("async_vs_barrier", bench_async_vs_barrier)
     _timed("fig1_tuning_cost", bench_fig1_tuning_cost)
     _timed("fig2_profiling_stability", bench_fig2_profiling_stability)
     _timed("fig8_clustering", bench_fig8_clustering)
+    # kernels initializes the jax CPU backend before the dryrun import below
+    # can request 512 host devices, keeping the compile cells single-device
     _timed("kernels", bench_kernels)
+    _timed("hillclimb", bench_hillclimb)
+    _timed("roofline", bench_roofline)
 
 
 if __name__ == "__main__":

@@ -21,11 +21,12 @@ Quickstart::
 from repro.api.backend import (  # noqa: F401
     Backend, BackendCapabilities, backend_capabilities)
 from repro.api.executor import (  # noqa: F401
-    ParallelTrialExecutor, SerialTrialExecutor, make_executor)
+    ClusterTrialExecutor, ParallelTrialExecutor, SerialTrialExecutor)
 from repro.api.experiment import Experiment  # noqa: F401
 from repro.api.registry import (  # noqa: F401
-    available_backends, available_schedulers, available_tuners,
-    default_sys_space, make_backend, make_scheduler, make_tuner,
-    register_backend, register_scheduler, register_tuner)
+    available_backends, available_executors, available_schedulers,
+    available_tuners, default_sys_space, make_backend, make_executor,
+    make_scheduler, make_tuner, register_backend, register_executor,
+    register_scheduler, register_tuner)
 from repro.core.schedulers import (  # noqa: F401
     AskTellScheduler, TrialProposal)

@@ -1,6 +1,13 @@
-"""Public re-export of the trial executors (implementation lives in
-``repro.core.executor`` so the core drive loop has no upward dependency)."""
+"""Public re-export of the trial executors. Serial/parallel implementations
+live in ``repro.core.executor`` (the core drive loop has no upward
+dependency); the event-driven cluster executor lives in
+``repro.cluster.executor``. ``make_executor`` here is the registry resolver
+("serial" / "parallel" / "cluster" / plugin names, or an int parallelism
+count for compatibility)."""
+from repro.api.registry import make_executor  # noqa: F401
+from repro.cluster.executor import ClusterTrialExecutor  # noqa: F401
 from repro.core.executor import (  # noqa: F401
-    ParallelTrialExecutor, SerialTrialExecutor, make_executor)
+    ParallelTrialExecutor, SerialTrialExecutor)
 
-__all__ = ["SerialTrialExecutor", "ParallelTrialExecutor", "make_executor"]
+__all__ = ["SerialTrialExecutor", "ParallelTrialExecutor",
+           "ClusterTrialExecutor", "make_executor"]

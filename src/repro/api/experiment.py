@@ -21,7 +21,6 @@ from __future__ import annotations
 from typing import Any, Dict, Optional, Tuple, Union
 
 from repro.api import registry
-from repro.api.executor import make_executor
 from repro.core.job import HPTJob, SystemSpace
 from repro.core.pipetune import JobResult, TrialRunner
 from repro.core.schedulers import AskTellScheduler
@@ -43,6 +42,8 @@ class Experiment:
         self._backend: Tuple[Union[str, Any], Dict[str, Any]] = ("sim", {})
         self._scheduler: Tuple[Union[str, AskTellScheduler],
                                Dict[str, Any]] = ("hyperband", {})
+        self._executor: Optional[Tuple[Union[str, Any], Dict[str, Any]]] = \
+            None
         self._sys_space: Optional[SystemSpace] = None
         self._groundtruth = None
         self._runner_config_set: list = []   # with_* calls a tuner instance
@@ -69,6 +70,13 @@ class Experiment:
         AskTellScheduler instance; `kw` forwards to the scheduler factory
         (e.g. n_trials)."""
         self._scheduler = (scheduler, kw)
+        return self
+
+    def with_executor(self, executor: Union[str, Any], **kw) -> "Experiment":
+        """Registry name ('serial'/'parallel'/'cluster'/...) or an executor
+        instance; `kw` forwards to the executor factory (e.g. parallelism,
+        n_nodes, straggler_prob)."""
+        self._executor = (executor, kw)
         return self
 
     def with_sys_space(self, sys_space: SystemSpace) -> "Experiment":
@@ -119,14 +127,30 @@ class Experiment:
                                    sys_space=self.resolved_sys_space(),
                                    groundtruth=self._groundtruth, **kw)
 
+    def build_executor(self, parallelism: int = 1):
+        """Resolve the configured executor: ``with_executor`` name/instance,
+        falling back to serial (or thread-pool for `parallelism` > 1)."""
+        if self._executor is None:
+            return registry.make_executor(parallelism)
+        executor, kw = self._executor
+        if isinstance(executor, str):
+            return registry.make_executor(executor, **kw)
+        if kw:
+            raise ValueError("executor kwargs require a registry name, "
+                             "not an instance")
+        return executor
+
     # -- execution ---------------------------------------------------------
     def run(self, parallelism: int = 1, executor=None) -> JobResult:
         """Execute the experiment; `parallelism` > 1 runs each scheduler
-        wave through a ParallelTrialExecutor. Scores merge in wave order, so
-        on a deterministic backend results are bit-identical to serial for
-        runners without cross-trial shared state (TuneV1/TuneV2); PipeTune's
-        shared ground-truth store makes its gt hit counts and locked system
-        configs timing-dependent (see ``repro.core.executor``)."""
+        wave through a ParallelTrialExecutor, and ``with_executor`` (or the
+        `executor` argument — a registry name or instance) picks any other
+        execution substrate, e.g. "cluster" for the discrete-event simulated
+        cluster. Scores merge in wave order, so on a deterministic backend
+        results are bit-identical to serial for runners without cross-trial
+        shared state (TuneV1/TuneV2); PipeTune's shared ground-truth store
+        makes its gt hit counts and locked system configs timing-dependent
+        (see ``repro.core.executor``)."""
         runner = self.build_runner()
         scheduler, kw = self._scheduler
         if not isinstance(scheduler, str):
@@ -138,7 +162,9 @@ class Experiment:
                     "scheduler instance is already exhausted (a previous "
                     "run() consumed it) — pass a fresh instance or use a "
                     "registry name, which rebuilds per run")
-        executor = executor if executor is not None \
-            else make_executor(parallelism)
+        if executor is None:
+            executor = self.build_executor(parallelism)
+        elif isinstance(executor, str):
+            executor = registry.make_executor(executor)
         return runner.run_job(self.job, scheduler=scheduler,
                               executor=executor, **kw)

@@ -1,4 +1,4 @@
-"""Name-based registries for schedulers, backends, and tuners.
+"""Name-based registries for schedulers, backends, tuners, and executors.
 
 Every entry point (launcher, benchmarks, examples) used to hand-wire the
 same if/elif blocks mapping strings to constructors; these registries are
@@ -14,29 +14,36 @@ scheduler factory(job: HPTJob, **kw) -> AskTellScheduler
 backend   factory(**kw)              -> Backend
 tuner     factory(backend, sys_space=None, groundtruth=None, **kw)
                                      -> TrialRunner
+executor  factory(**kw)              -> object with run_wave (and optionally
+                                        drive, for event-driven execution)
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict, Optional, Union
 
-from repro.cluster.sim import SimBackend, SimSystemSpace
+from repro.cluster.executor import ClusterTrialExecutor
+from repro.cluster.sim import SIM_SYS_DEFAULT, SimBackend, SimSystemSpace
 from repro.core.backends import RealBackend
+from repro.core.executor import ParallelTrialExecutor, SerialTrialExecutor
+from repro.core.executor import make_executor as _executor_for_parallelism
 from repro.core.job import HPTJob, SystemSpace
 from repro.core.numeric_backend import NumericBackend
 from repro.core.pipetune import PipeTune, TrialRunner, TuneV1, TuneV2
-from repro.core.schedulers import (ASHA, AskTellScheduler, GridSearch,
-                                   HyperBand, PBT, RandomSearch)
+from repro.core.schedulers import (ASHA, AskTellScheduler, AsyncASHA,
+                                   GridSearch, HyperBand, PBT, RandomSearch)
 
 __all__ = [
     "register_scheduler", "register_backend", "register_tuner",
-    "make_scheduler", "make_backend", "make_tuner",
+    "register_executor",
+    "make_scheduler", "make_backend", "make_tuner", "make_executor",
     "default_sys_space", "available_schedulers", "available_backends",
-    "available_tuners",
+    "available_tuners", "available_executors",
 ]
 
 _SCHEDULERS: Dict[str, Callable[..., AskTellScheduler]] = {}
 _BACKENDS: Dict[str, Dict[str, Any]] = {}
 _TUNERS: Dict[str, Callable[..., TrialRunner]] = {}
+_EXECUTORS: Dict[str, Callable[..., Any]] = {}
 
 
 def _lookup(table: Dict[str, Any], kind: str, name: str):
@@ -67,6 +74,10 @@ def register_tuner(name: str, factory: Callable[..., TrialRunner]) -> None:
     _TUNERS[name] = factory
 
 
+def register_executor(name: str, factory: Callable[..., Any]) -> None:
+    _EXECUTORS[name] = factory
+
+
 # -- resolution ------------------------------------------------------------
 
 def make_scheduler(name: str, job: HPTJob, **kw) -> AskTellScheduler:
@@ -86,6 +97,21 @@ def make_tuner(name: str, backend, sys_space=None, groundtruth=None,
                **kw) -> TrialRunner:
     return _lookup(_TUNERS, "tuner", name)(
         backend, sys_space=sys_space, groundtruth=groundtruth, **kw)
+
+
+def make_executor(name: Union[str, int], **kw):
+    """Resolve an executor the way schedulers/backends resolve: by registry
+    name ("serial" / "parallel" / "cluster" / ...). An int is accepted for
+    compatibility with the original parallelism-count helper."""
+    if isinstance(name, int):
+        if kw:
+            raise ValueError("kwargs require a registry name, not an int")
+        return _executor_for_parallelism(name)
+    return _lookup(_EXECUTORS, "executor", name)(**kw)
+
+
+def available_executors():
+    return sorted(_EXECUTORS)
 
 
 def available_schedulers():
@@ -109,6 +135,8 @@ register_scheduler("random", lambda job, **kw: RandomSearch(
 register_scheduler("hyperband", lambda job, **kw: HyperBand(
     job.space, R=job.max_epochs, seed=job.seed, **kw))
 register_scheduler("asha", lambda job, **kw: ASHA(
+    job.space, max_epochs=job.max_epochs, seed=job.seed, **kw))
+register_scheduler("asha-async", lambda job, **kw: AsyncASHA(
     job.space, max_epochs=job.max_epochs, seed=job.seed, **kw))
 register_scheduler("pbt", lambda job, **kw: PBT(
     job.space, total_epochs=job.max_epochs, seed=job.seed, **kw))
@@ -147,3 +175,19 @@ register_tuner("tunev1", _make_v1)
 register_tuner("v2", _make_v2)
 register_tuner("tunev2", _make_v2)
 register_tuner("pipetune", _make_pipetune)
+
+
+def _make_cluster_executor(cluster=None, default_sys=None, **kw):
+    # trials dispatched onto simulated nodes default to the sim backend's
+    # node shape, so trial-level resource reallocation gets charged; pass
+    # default_sys={} to charge only epoch-boundary switches
+    if default_sys is None:
+        default_sys = SIM_SYS_DEFAULT
+    return ClusterTrialExecutor(cluster=cluster, default_sys=default_sys,
+                                **kw)
+
+
+register_executor("serial", lambda: SerialTrialExecutor())
+register_executor("parallel",
+                  lambda parallelism=4: ParallelTrialExecutor(parallelism))
+register_executor("cluster", _make_cluster_executor)

@@ -1,1 +1,3 @@
-from repro.cluster.sim import ClusterSim, SimBackend, ClusterConfig  # noqa: F401
+from repro.cluster.engine import ClusterConfig, EventEngine  # noqa: F401
+from repro.cluster.executor import ClusterTrialExecutor  # noqa: F401
+from repro.cluster.sim import ClusterSim, SimBackend  # noqa: F401

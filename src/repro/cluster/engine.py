@@ -1,0 +1,246 @@
+"""Reusable discrete-event cluster engine.
+
+The machinery that used to live inside ``ClusterSim`` — an event heap, a
+pool of nodes with FIFO dispatch, and fault injection — extracted so that
+*both* the multi-tenant job simulation (``repro.cluster.sim``) and the
+trial-level executor (``repro.cluster.executor.ClusterTrialExecutor``) run
+on the same clock.
+
+A *task* is a generator yielding base epoch durations (seconds). The engine
+owns time: it assigns each task to the first free node (FIFO queue while all
+nodes are busy), pulls one epoch at a time from the generator, injects
+stragglers and failures into the yielded duration *at execution time*, and
+advances the node's clock by the effective duration. Because faults are
+drawn as epochs execute — not rewritten into a finished trace afterwards —
+anything observing completion times (an asynchronous scheduler, a queueing
+benchmark) sees cluster conditions the way a real tuner would.
+
+Determinism: fault draws come from a per-task RNG stream keyed by
+``(cfg.seed, submission index)``, so they do not depend on how events from
+different tasks interleave on the heap; heap ties break by submission
+sequence. Two runs with the same ``ClusterConfig.seed`` and the same task
+set are identical.
+"""
+from __future__ import annotations
+
+import bisect
+import collections
+import dataclasses
+import heapq
+import itertools
+import math
+from typing import Callable, Dict, Generator, Iterable, Iterator, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class ClusterConfig:
+    n_nodes: int = 4
+    mtbf_s: Optional[float] = None          # mean time between failures/node
+    straggler_prob: float = 0.0             # per-epoch probability
+    straggler_slowdown: float = 4.0
+    mitigate_stragglers: bool = True
+    backup_overhead: float = 0.15           # fraction of epoch for backup
+    restore_s: float = 5.0                  # checkpoint restore time
+    requeue_s: float = 2.0                  # scheduler redispatch latency
+    reconfig_s: float = 8.0                 # resource-reallocation / compile
+    async_overlap: float = 0.85             # fraction hidden when the runner
+    #                                         compiles off the critical path
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class TaskStats:
+    """Execution record of one engine task (a trial dispatch or a whole
+    tuning job, depending on the caller's granularity)."""
+    task_id: str
+    node: int = -1
+    submit_s: float = 0.0
+    start_s: float = 0.0
+    finish_s: float = 0.0
+    service_s: float = 0.0          # sum of effective (post-fault) durations
+    n_epochs: int = 0
+    n_failures: int = 0
+    n_stragglers: int = 0
+
+    @property
+    def queue_s(self) -> float:
+        return self.start_s - self.submit_s
+
+
+class _Task:
+    __slots__ = ("stats", "gen", "rng", "on_done", "base_durations")
+
+    def __init__(self, stats: TaskStats, gen: Iterator[float],
+                 rng: np.random.RandomState, on_done):
+        self.stats = stats
+        self.gen = gen
+        self.rng = rng
+        self.on_done = on_done
+        self.base_durations: List[float] = []   # pre-fault, for mitigation
+
+
+class EventEngine:
+    """Event heap + per-node FIFO dispatch + execution-time fault injection.
+
+    ``submit`` registers a task (generator of base epoch durations); ``run``
+    drains the heap; ``run_next_completion`` advances until exactly one task
+    finishes — the hook an asynchronous driver uses to report results at
+    their simulated completion times.
+    """
+
+    def __init__(self, cfg: ClusterConfig):
+        self.cfg = cfg
+        self.now = 0.0
+        self.completed: List[TaskStats] = []
+        self._heap: List[tuple] = []            # (time, seq, thunk)
+        self._seq = itertools.count()
+        self._free = list(range(cfg.n_nodes))   # sorted free-node ids
+        self._waiting: collections.deque = collections.deque()
+        self._n_submitted = 0
+        self._n_active = 0
+
+    # ------------------------------------------------------------- submit
+    def submit(self, task_id: str, process: Iterator[float],
+               at: Optional[float] = None,
+               on_done: Optional[Callable[[TaskStats], None]] = None
+               ) -> TaskStats:
+        """Schedule `process` (a generator of base epoch durations) to
+        arrive at time `at` (default: now). Returns the live stats object,
+        filled in as the task executes."""
+        at = self.now if at is None else at
+        if at < self.now:
+            raise ValueError(f"cannot submit in the past ({at} < {self.now})")
+        stats = TaskStats(task_id=task_id, submit_s=at)
+        rng = np.random.RandomState(
+            (self.cfg.seed * 1_000_003 + 7919 * self._n_submitted)
+            % (2 ** 31 - 1))
+        task = _Task(stats, iter(process), rng, on_done)
+        self._n_submitted += 1
+        self._n_active += 1
+        self._push(at, lambda: self._arrive(task))
+        return stats
+
+    @property
+    def pending(self) -> int:
+        """Tasks submitted but not yet finished (queued or running)."""
+        return self._n_active
+
+    # ---------------------------------------------------------------- run
+    def run(self) -> None:
+        """Drain the heap (all submitted tasks run to completion)."""
+        while self._heap:
+            self._step()
+
+    def run_next_completion(self) -> Optional[TaskStats]:
+        """Advance the clock until one task finishes; returns its stats
+        (None when nothing is left to run)."""
+        n = len(self.completed)
+        while self._heap and len(self.completed) == n:
+            self._step()
+        return self.completed[n] if len(self.completed) > n else None
+
+    # ------------------------------------------------------------ internals
+    def _push(self, t: float, thunk: Callable[[], None]) -> None:
+        heapq.heappush(self._heap, (t, next(self._seq), thunk))
+
+    def _step(self) -> None:
+        t, _, thunk = heapq.heappop(self._heap)
+        self.now = t
+        thunk()
+
+    def _arrive(self, task: _Task) -> None:
+        if self._free:
+            self._start(task, self._free.pop(0))
+        else:
+            self._waiting.append(task)
+
+    def _start(self, task: _Task, node: int) -> None:
+        task.stats.node = node
+        task.stats.start_s = self.now
+        self._advance(task)
+
+    def _advance(self, task: _Task) -> None:
+        try:
+            base = float(next(task.gen))
+        except StopIteration:
+            self._finish(task)
+            return
+        eff = self._inject_faults(task, base)
+        task.stats.service_s += eff
+        task.stats.n_epochs += 1
+        self._push(self.now + eff, lambda: self._advance(task))
+
+    def _finish(self, task: _Task) -> None:
+        task.stats.finish_s = self.now
+        self.completed.append(task.stats)
+        self._n_active -= 1
+        node = task.stats.node
+        if self._waiting:
+            self._start(self._waiting.popleft(), node)
+        else:
+            bisect.insort(self._free, node)
+        if task.on_done is not None:
+            task.on_done(task.stats)
+
+    def _inject_faults(self, task: _Task, d: float) -> float:
+        """Straggler + failure model applied to one epoch as it executes
+        (same formulas the post-hoc ``ClusterSim._apply_faults`` used, with
+        the mitigation median computed online over the task's own epochs)."""
+        cfg = self.cfg
+        task.base_durations.append(d)
+        eff = d
+        if cfg.straggler_prob and task.rng.rand() < cfg.straggler_prob:
+            task.stats.n_stragglers += 1
+            slow = d * cfg.straggler_slowdown
+            if cfg.mitigate_stragglers:
+                seen = np.asarray(task.base_durations)
+                med = float(np.median(seen))
+                mad = float(np.median(np.abs(seen - med)))
+                # speculative backup capped at median+3*MAD+overhead
+                eff = min(slow, max(d, med + 3 * mad)
+                          + cfg.backup_overhead * d)
+            else:
+                eff = slow
+        if cfg.mtbf_s:
+            # failure arrives within this epoch with p = 1-exp(-eff/mtbf)
+            if task.rng.rand() < 1.0 - math.exp(-eff / cfg.mtbf_s):
+                task.stats.n_failures += 1
+                # lose a uniform fraction of the epoch, restore, redo
+                eff += task.rng.rand() * eff + cfg.restore_s + cfg.requeue_s
+        return eff
+
+
+def reconfig_charge_s(cfg: ClusterConfig, runner) -> float:
+    """Per-switch reconfiguration cost for `runner` on this cluster:
+    PipeTune compiles candidate configs asynchronously (paper §5.2), hiding
+    ``cfg.async_overlap`` of the charge; V1/V2 pay it in full."""
+    overlap = cfg.async_overlap if getattr(runner, "overlap_reconfig",
+                                           False) else 0.0
+    return cfg.reconfig_s * (1.0 - overlap)
+
+
+def charged_epoch_durations(results: Iterable, trial_id: str,
+                            prev_sys: Dict[str, dict], charge: float,
+                            default_sys: Optional[dict] = None
+                            ) -> Generator[float, None, None]:
+    """Map an iterator of ``EpochResult``s to base durations carrying the
+    reconfiguration charge: a trial's very first epoch is charged when its
+    system config deviates from ``default_sys`` (trial-level resource
+    reallocation), later epochs whenever the config switches at an epoch
+    boundary. ``prev_sys`` persists the last-seen config per trial across
+    calls, so rung-resumed trials are only charged on real switches."""
+    for res in results:
+        d = res.duration_s
+        scfg = res.sys_config
+        prev = prev_sys.get(trial_id)
+        if prev is None:
+            nondefault = default_sys is not None and any(
+                scfg.get(k) not in (None, v) for k, v in default_sys.items())
+            if nondefault:
+                d += charge
+        elif scfg != prev:
+            d += charge
+        prev_sys[trial_id] = dict(scfg)
+        yield d

@@ -1,0 +1,134 @@
+"""Trial executor over the discrete-event cluster engine.
+
+``ClusterTrialExecutor`` implements the same ``run_wave`` interface as the
+serial/thread-pool executors, but instead of running trials on host threads
+it dispatches each ``TrialProposal``'s epochs onto simulated cluster nodes:
+a wave's trials queue for ``n_nodes`` workers, every epoch pays the
+straggler/failure/reconfiguration costs *as it executes*, and completion
+order is decided by the engine clock — so queueing delay and faults feed
+back into when the scheduler hears about each score.
+
+Two drive modes:
+
+* ``run_wave`` — barrier semantics, results merged in wave order. With
+  faults disabled this is bit-identical to ``SerialTrialExecutor`` on a
+  deterministic backend (scores never depend on the clock), which is the
+  regression anchor.
+* ``drive`` — the executor owns the whole ask/tell loop: proposals are
+  dispatched the moment the scheduler releases them and every trial is
+  reported at its simulated completion time. Barrier schedulers
+  (``suggest() -> []`` while a wave is outstanding) degrade gracefully to
+  wave-at-a-time; asynchronous schedulers (``AsyncASHA``) promote past
+  straggling wave-mates — the asynchrony the thread-pool executor could
+  never show, because it only returned control at wave boundaries.
+
+The engine clock persists across waves: a multi-wave job accumulates
+simulated time exactly like a tuning job occupying the cluster would.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.cluster.engine import (ClusterConfig, EventEngine,
+                                  charged_epoch_durations, reconfig_charge_s)
+from repro.core.executor import _apply_clones
+from repro.core.schedulers import TrialProposal
+
+__all__ = ["ClusterTrialExecutor", "TrialDispatch"]
+
+
+@dataclasses.dataclass
+class TrialDispatch:
+    """One proposal's trip through the cluster (timing + outcome)."""
+    trial_id: str
+    epochs: int                     # the proposal's total-epoch target
+    score: float = float("nan")
+    node: int = -1
+    submit_s: float = 0.0
+    start_s: float = 0.0
+    finish_s: float = 0.0
+    n_stragglers: int = 0
+    n_failures: int = 0
+
+    @property
+    def queue_s(self) -> float:
+        return self.start_s - self.submit_s
+
+
+class ClusterTrialExecutor:
+    """Executor dispatching scheduler waves onto simulated cluster nodes.
+
+    ``default_sys`` (e.g. ``SIM_SYS_DEFAULT``) is what a trial's first-epoch
+    system config is compared against to charge trial-level resource
+    reallocation; None charges only epoch-boundary switches.
+    """
+
+    def __init__(self, cluster: Optional[ClusterConfig] = None,
+                 default_sys: Optional[dict] = None, **cfg_kw):
+        if cluster is not None and cfg_kw:
+            raise ValueError("pass either a ClusterConfig or field kwargs, "
+                             "not both")
+        self.cfg = cluster if cluster is not None else ClusterConfig(**cfg_kw)
+        self.default_sys = dict(default_sys) if default_sys else None
+        self.engine = EventEngine(self.cfg)
+        self.history: List[TrialDispatch] = []  # every dispatch, finish order
+        self.parallelism = self.cfg.n_nodes
+        self._prev_sys: Dict[str, dict] = {}    # last sys config per trial
+
+    @property
+    def sim_now(self) -> float:
+        """Current simulated time (the job's makespan once it finishes)."""
+        return self.engine.now
+
+    # ---------------------------------------------------------------- wave
+    def run_wave(self, runner, workload: str,
+                 proposals: Sequence[TrialProposal]
+                 ) -> List[Tuple[TrialProposal, float]]:
+        _apply_clones(runner, proposals)
+        dispatches = [self._submit(runner, workload, p) for p in proposals]
+        self.engine.run()
+        return [(p, d.score) for p, d in zip(proposals, dispatches)]
+
+    # --------------------------------------------------------- async drive
+    def drive(self, runner, workload: str, scheduler) -> None:
+        """Event-driven ask/tell loop (see module docstring). Ends when the
+        scheduler has nothing outstanding and releases no further work."""
+        outstanding: Dict[str, TrialDispatch] = {}
+        while True:
+            wave = scheduler.suggest()
+            if wave:
+                # clone sources must be wave-boundary snapshots, so apply
+                # for the whole wave before any of it starts executing
+                _apply_clones(runner, wave)
+                for p in wave:
+                    outstanding[p.trial_id] = self._submit(runner, workload, p)
+                continue
+            if not outstanding:
+                break
+            stats = self.engine.run_next_completion()
+            assert stats is not None, "engine drained with trials outstanding"
+            dispatch = outstanding.pop(stats.task_id)
+            scheduler.report(dispatch.trial_id, dispatch.score)
+
+    # ------------------------------------------------------------ internals
+    def _submit(self, runner, workload: str,
+                p: TrialProposal) -> TrialDispatch:
+        dispatch = TrialDispatch(trial_id=p.trial_id, epochs=p.epochs,
+                                 submit_s=self.engine.now)
+        charge = reconfig_charge_s(self.cfg, runner)
+        process = charged_epoch_durations(
+            runner.trial_epochs(workload, p.trial_id, p.hparams, p.epochs),
+            p.trial_id, self._prev_sys, charge, self.default_sys)
+
+        def on_done(stats):
+            dispatch.score = runner.records[p.trial_id].score(runner.objective)
+            dispatch.node = stats.node
+            dispatch.start_s = stats.start_s
+            dispatch.finish_s = stats.finish_s
+            dispatch.n_stragglers = stats.n_stragglers
+            dispatch.n_failures = stats.n_failures
+            self.history.append(dispatch)
+
+        self.engine.submit(p.trial_id, process, on_done=on_done)
+        return dispatch

@@ -19,19 +19,31 @@ The simulator runs each job's *tuner for real* (PipeTune / TuneV1 / TuneV2
 over SimBackend's modeled epochs), so tuning-policy differences — probing
 epochs, ground-truth hits, system configs chosen — translate directly into
 service times and hence response times.
+
+Two execution modes (``ClusterSim(mode=...)``):
+
+* ``"event"`` (default) — jobs run on the shared ``EventEngine``: each
+  job is a task whose tuner executes epoch-by-epoch on its node, with
+  stragglers/failures/reconfig charges injected *as epochs execute*.
+* ``"legacy"`` — the pre-engine behavior: run the tuner to completion on
+  the host, then rewrite its epoch-duration trace with faults post hoc.
+  Kept as a regression baseline; scores are identical between modes (faults
+  only ever perturb time), only timing differs.
 """
 from __future__ import annotations
 
 import dataclasses
-import heapq
 import math
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.cluster import perfmodel
+from repro.cluster.engine import (ClusterConfig, EventEngine,
+                                  charged_epoch_durations, reconfig_charge_s)
 from repro.core import energy as energy_lib
 from repro.core.backends import BackendCapabilities, EpochResult, TrialState
+from repro.core.executor import _apply_clones
 from repro.core.job import HPTJob, SystemSpace
 from repro.core.profiler import EpochProfile, Profiler
 
@@ -87,11 +99,9 @@ class SimBackend:
         e = energy_lib.power_w(util, cfg["chips"]) * dur
         vec = perfmodel.profile_vector(ts.workload, bs, cfg["chips"],
                                        seed=ts.seed * 1000 + ts.epoch)
-        profile = EpochProfile({f"ev{i}": float(v)
-                                for i, v in enumerate(vec)})
-        # EpochProfile.vector() re-logs; SimBackend vectors are already in
-        # log-ish space, so wrap to return them directly:
-        profile.vector = lambda v=vec: v        # type: ignore[method-assign]
+        # SimBackend vectors are already in log-ish space: raw mode returns
+        # them verbatim instead of re-logging
+        profile = EpochProfile.from_vector(vec)
         ts.epoch += 1
         ts.loss_last = 1.0 - acc
         return ts, EpochResult(
@@ -104,20 +114,8 @@ class SimBackend:
 # discrete-event cluster
 # ---------------------------------------------------------------------------
 
-@dataclasses.dataclass
-class ClusterConfig:
-    n_nodes: int = 4
-    mtbf_s: Optional[float] = None          # mean time between failures/node
-    straggler_prob: float = 0.0             # per-epoch probability
-    straggler_slowdown: float = 4.0
-    mitigate_stragglers: bool = True
-    backup_overhead: float = 0.15           # fraction of epoch for backup
-    restore_s: float = 5.0                  # checkpoint restore time
-    requeue_s: float = 2.0                  # scheduler redispatch latency
-    reconfig_s: float = 8.0                 # resource-reallocation / compile
-    async_overlap: float = 0.85             # fraction hidden when the runner
-    #                                         compiles off the critical path
-    seed: int = 0
+# ClusterConfig moved to repro.cluster.engine (the engine owns the fault
+# model); re-exported here for compatibility.
 
 
 @dataclasses.dataclass
@@ -141,11 +139,17 @@ class JobOutcome:
 
 
 class ClusterSim:
-    def __init__(self, cfg: ClusterConfig, runner_factory: Callable[[], Any]):
+    def __init__(self, cfg: ClusterConfig, runner_factory: Callable[[], Any],
+                 mode: str = "event"):
         """runner_factory builds a fresh TrialRunner per job (they may share
-        a GroundTruth store — that's PipeTune's cross-job learning)."""
+        a GroundTruth store — that's PipeTune's cross-job learning).
+        ``mode`` selects the event engine (default) or the legacy
+        post-hoc-fault path (see module docstring)."""
+        if mode not in ("event", "legacy"):
+            raise ValueError(f"mode must be 'event' or 'legacy', got {mode!r}")
         self.cfg = cfg
         self.runner_factory = runner_factory
+        self.mode = mode
         self.rng = np.random.RandomState(cfg.seed)
 
     # -------------------------------------------------------------- service
@@ -209,6 +213,11 @@ class ClusterSim:
     def run(self, jobs: List[HPTJob], scheduler="hyperband", **kw
             ) -> List[JobOutcome]:
         """FIFO dispatch onto n_nodes; jobs processed in arrival order."""
+        if self.mode == "legacy":
+            return self._run_legacy(jobs, scheduler, **kw)
+        return self._run_event(jobs, scheduler, **kw)
+
+    def _run_legacy(self, jobs, scheduler, **kw) -> List[JobOutcome]:
         free_at = [0.0] * self.cfg.n_nodes      # next-free time per node
         outcomes = []
         for job in sorted(jobs, key=lambda j: j.arrival_time):
@@ -225,6 +234,61 @@ class ClusterSim:
                 n_failures=nfail, n_stragglers=nstrag,
                 best_accuracy=result.best_accuracy, energy_j=result.energy_j))
         return outcomes
+
+    # ----------------------------------------------------------- event mode
+    def _run_event(self, jobs, scheduler, **kw) -> List[JobOutcome]:
+        """Every job is an engine task: its tuner executes epoch-by-epoch on
+        the node that picked it up, and the scheduler inside the job observes
+        epochs that already carry straggler/failure/reconfig costs."""
+        engine = EventEngine(self.cfg)
+        entries = []                            # (job, holder, stats)
+        for job in sorted(jobs, key=lambda j: j.arrival_time):
+            holder: Dict[str, float] = {}
+            process = self._job_process(job, scheduler, holder, kw)
+            stats = engine.submit(job.job_id or job.workload, process,
+                                  at=job.arrival_time)
+            entries.append((job, holder, stats))
+        engine.run()
+        return [JobOutcome(
+            job_id=job.job_id or job.workload, workload=job.workload,
+            jtype=job.jtype, arrival=job.arrival_time, start=stats.start_s,
+            finish=stats.finish_s, service_s=stats.service_s,
+            n_epochs=stats.n_epochs, n_failures=stats.n_failures,
+            n_stragglers=stats.n_stragglers,
+            best_accuracy=holder.get("best_accuracy", 0.0),
+            energy_j=holder.get("energy_j", 0.0))
+            for job, holder, stats in entries]
+
+    def _job_process(self, job: HPTJob, scheduler, holder: Dict[str, float],
+                     sched_kw: dict):
+        """Generator yielding one charged base duration per tuner epoch;
+        the engine injects faults and advances the node clock around it."""
+        runner = self.runner_factory()
+        if isinstance(scheduler, str):
+            from repro.api.registry import make_scheduler
+            sched = make_scheduler(scheduler, job, **sched_kw)
+        else:
+            sched = scheduler
+        charge = reconfig_charge_s(self.cfg, runner)
+        prev_sys: Dict[str, dict] = {}
+        while True:
+            wave = sched.suggest()
+            if not wave:
+                break
+            _apply_clones(runner, wave)
+            for p in wave:
+                yield from charged_epoch_durations(
+                    runner.trial_epochs(job.workload, p.trial_id, p.hparams,
+                                        p.epochs),
+                    p.trial_id, prev_sys, charge, SIM_SYS_DEFAULT)
+                sched.report(p.trial_id,
+                             runner.records[p.trial_id].score(
+                                 runner.objective))
+        records = runner.records.values()
+        best = max(records, key=lambda r: r.score(runner.objective),
+                   default=None)
+        holder["best_accuracy"] = best.accuracy if best else 0.0
+        holder["energy_j"] = float(sum(r.energy for r in records))
 
 
 def make_arrivals(workloads: List[str], n_jobs: int, mean_interarrival_s: float,

@@ -71,6 +71,8 @@ class JobResult:
     records: Dict[str, TrialRecord]
     gt_hits: int = 0
     gt_misses: int = 0
+    sim_time_s: float = 0.0         # simulated makespan when the job ran on
+    #                                 an event-driven executor (0 otherwise)
 
     @property
     def best_accuracy(self):
@@ -110,8 +112,13 @@ class TrialRunner:
     def finish_trial(self, record: TrialRecord, state: TrialState):
         pass
 
-    def run_trial(self, workload: str, trial_id: str, hparams: dict,
-                  total_epochs: int) -> TrialRecord:
+    def trial_epochs(self, workload: str, trial_id: str, hparams: dict,
+                     total_epochs: int):
+        """Generator form of ``run_trial``: runs one backend epoch per
+        iteration and yields its ``EpochResult``, so a discrete-event
+        executor can charge each epoch to a simulated node clock as it
+        happens. ``finish_trial`` fires when the generator is exhausted; the
+        completed record is ``self.records[trial_id]``."""
         with self._hook_lock:
             state = self.states.get(trial_id)
             if state is None:
@@ -136,9 +143,15 @@ class TrialRunner:
                 record.epochs.append(res)
                 self.after_epoch(record, state, res)
             prev = res
+            yield res
         with self._hook_lock:
             self.finish_trial(record, state)
-        return record
+
+    def run_trial(self, workload: str, trial_id: str, hparams: dict,
+                  total_epochs: int) -> TrialRecord:
+        for _ in self.trial_epochs(workload, trial_id, hparams, total_epochs):
+            pass
+        return self.records[trial_id]
 
     # -- job level -----------------------------------------------------------
     def run_job(self, job: HPTJob,
@@ -164,12 +177,21 @@ class TrialRunner:
             sched = scheduler
         executor = executor if executor is not None \
             else make_executor(parallelism)
-        while True:
-            wave = sched.suggest()
-            if not wave:
-                break
-            for proposal, score in executor.run_wave(self, job.workload, wave):
-                sched.report(proposal.trial_id, score)
+        drive = getattr(executor, "drive", None)
+        if drive is not None:
+            # event-driven executors own the ask/tell loop: they dispatch
+            # proposals the moment the scheduler releases them and report
+            # each trial at its *simulated* completion time, which is what
+            # lets AsyncASHA promote past straggling wave-mates
+            drive(self, job.workload, sched)
+        else:
+            while True:
+                wave = sched.suggest()
+                if not wave:
+                    break
+                for proposal, score in executor.run_wave(self, job.workload,
+                                                         wave):
+                    sched.report(proposal.trial_id, score)
         best_hp, best_score = sched.best()
         best_rec = max(self.records.values(),
                        key=lambda r: r.score(self.objective), default=None)
@@ -181,7 +203,8 @@ class TrialRunner:
             wall_time_s=time.time() - t0,
             energy_j=sum(r.energy for r in self.records.values()),
             records=dict(self.records),
-            gt_hits=gt.hits if gt else 0, gt_misses=gt.misses if gt else 0)
+            gt_hits=gt.hits if gt else 0, gt_misses=gt.misses if gt else 0,
+            sim_time_s=float(getattr(executor, "sim_now", 0.0)))
 
     def clone_trial(self, dst_id: str, src_id: str):
         """PBT exploit: copy trial state (params/opt/epoch) src -> dst.

@@ -48,9 +48,21 @@ assert len(PROFILE_EVENTS) == 58
 
 @dataclasses.dataclass
 class EpochProfile:
+    """``raw=True`` marks events that are already in compressed (log-ish)
+    space — e.g. SimBackend's modeled vectors — so ``vector()`` returns
+    them verbatim, in insertion order, instead of re-logging."""
+
     events: Dict[str, float]
+    raw: bool = False
+
+    @classmethod
+    def from_vector(cls, vec) -> "EpochProfile":
+        """Wrap an already-compressed profile vector (raw mode)."""
+        return cls({f"ev{i}": float(v) for i, v in enumerate(vec)}, raw=True)
 
     def vector(self) -> np.ndarray:
+        if self.raw:
+            return np.asarray(list(self.events.values()), np.float64)
         v = np.zeros(len(PROFILE_EVENTS), np.float64)
         for i, name in enumerate(PROFILE_EVENTS):
             x = float(self.events.get(name, 0.0))

@@ -364,3 +364,87 @@ class ASHA(AskTellScheduler):
     def done(self) -> bool:
         return (self._i >= self.n and self._cur is None
                 and self._outstanding is None)
+
+
+class AsyncASHA(AskTellScheduler):
+    """Truly asynchronous successive halving (the ASHA of Li et al.,
+    MLSys'20): all ``n_trials`` start at the bottom rung as one
+    rung-parallel wave, and *every* report re-ranks that trial's rung —
+    any trial now in the top ``1/eta`` of its rung is immediately proposed
+    for promotion, without waiting for wave-mates. A straggling trial
+    therefore never blocks a promotion, which is the property the
+    sequential legacy ``ASHA`` (one outstanding proposal at a time) cannot
+    express and a barrier scheduler (HyperBand) pays for in rung-synchronous
+    waits.
+
+    Under a barrier executor the promotions accumulate and ship as the next
+    wave (rung-batched behavior, deterministic); under the event-driven
+    cluster executor each promotion dispatches at the simulated moment its
+    report arrives. Because promotion checks happen per-report as the rung
+    grows, a trial promoted early may later fall out of its rung's top
+    ``1/eta`` — asynchronous halving's documented aggressiveness, traded
+    for never idling a worker.
+
+    ``best()`` tracks the maximum reported score (on monotone-in-epochs
+    surfaces that is a final-rung trial).
+    """
+
+    def __init__(self, space: SearchSpace, max_epochs: int = 9, eta: int = 3,
+                 n_trials: int = 27, seed: int = 0):
+        self.space, self.R, self.eta, self.n = space, max_epochs, eta, n_trials
+        self.seed = seed
+        self._rng = np.random.RandomState(seed)
+        self._levels = self._rung_levels()
+        self.rungs: Dict[int, List[Tuple[float, str]]] = {}
+        self._promoted: Dict[int, set] = {}
+        self._hp: Dict[str, Dict[str, Any]] = {}
+        self._level: Dict[str, int] = {}
+        self._pending: List[TrialProposal] = []
+        self._outstanding: set = set()
+        self._started = False
+
+    def _rung_levels(self):
+        levels, r = [], 1
+        while r < self.R:
+            levels.append(r)
+            r *= self.eta
+        return levels + [self.R]
+
+    def suggest(self) -> List[TrialProposal]:
+        if not self._started:
+            self._started = True
+            wave = []
+            for i in range(self.n):
+                tid = f"asha-{i}"
+                self._hp[tid] = self.space.sample(self._rng)
+                self._level[tid] = 0
+                wave.append(TrialProposal(tid, self._hp[tid], self._levels[0]))
+            self._outstanding = {p.trial_id for p in wave}
+            return wave
+        wave, self._pending = self._pending, []
+        self._outstanding |= {p.trial_id for p in wave}
+        return wave
+
+    def report(self, trial_id: str, score: float) -> None:
+        self._outstanding.discard(trial_id)
+        li = self._level[trial_id]
+        rung = self.rungs.setdefault(li, [])
+        rung.append((score, trial_id))
+        if score > self._best_score:
+            self._best, self._best_score = self._hp[trial_id], score
+        if li >= len(self._levels) - 1:
+            return                              # topped out
+        promoted = self._promoted.setdefault(li, set())
+        ranked = sorted(rung, key=lambda t: -t[0])
+        k = len(rung) // self.eta               # top 1/eta are promotable
+        for s, tid in ranked[:k]:
+            if tid not in promoted:
+                promoted.add(tid)
+                self._level[tid] = li + 1
+                self._pending.append(TrialProposal(
+                    tid, self._hp[tid], self._levels[li + 1]))
+
+    @property
+    def done(self) -> bool:
+        return (self._started and not self._outstanding
+                and not self._pending)

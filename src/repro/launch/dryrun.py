@@ -40,12 +40,19 @@ def _mesh_chips(mesh):
 
 def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
              sys_overrides: Optional[dict] = None, mesh=None,
-             keep_hlo: bool = False, verbose: bool = True) -> dict:
-    """Lower + compile one cell; returns a result record (JSON-serializable)."""
-    cfg = configs.get_config(arch)
-    shape = configs.SHAPES[shape_name]
-    rec = {"arch": arch, "shape": shape_name,
-           "mesh": "2x16x16" if multi_pod else "16x16"}
+             keep_hlo: bool = False, verbose: bool = True,
+             reduced: bool = False, shape=None) -> dict:
+    """Lower + compile one cell; returns a result record (JSON-serializable).
+
+    ``reduced=True`` uses the family-preserving smoke config and ``shape``
+    overrides the registry entry — the benchmark drivers compile small cells
+    on a 1x1 mesh this way instead of the 256-chip production grid."""
+    cfg = configs.get_reduced(arch) if reduced else configs.get_config(arch)
+    shape = shape if shape is not None else configs.SHAPES[shape_name]
+    mesh_label = ("x".join(str(s) for s in mesh.devices.shape)
+                  if mesh is not None
+                  else "2x16x16" if multi_pod else "16x16")
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_label}
     if not configs.shape_applicable(cfg, shape):
         rec.update(status="skipped",
                    reason="full-attention arch; long_500k needs sub-quadratic "
@@ -101,6 +108,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):        # jax returns [dict] on some
+        cost = cost[0] if cost else {}         # versions, dict on others
     hlo = compiled.as_text()
     hcost = hlo_analysis.analyze(hlo)       # loop-aware per-device cost
     chips = _mesh_chips(mesh)

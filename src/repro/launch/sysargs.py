@@ -1,8 +1,12 @@
-"""Shared CLI wiring for the execution-system knobs (SystemConfig).
+"""Shared CLI wiring for the execution-system knobs (SystemConfig) and for
+trial-executor selection.
 
 Every training entry point used to re-declare the same
 ``--microbatches/--remat/--precision`` flags and hand-build a
-``SystemConfig``; this is the single place that mapping lives now.
+``SystemConfig``; this is the single place that mapping lives now. The
+executor flags resolve through ``repro.api.registry`` the same way
+schedulers/backends do, so ``--executor cluster`` drops a tuning job onto
+the discrete-event simulated cluster with no entry-point edits.
 """
 from __future__ import annotations
 
@@ -11,6 +15,39 @@ import argparse
 from repro.models.transformer import SystemConfig
 
 SYSTEM_ARG_NAMES = ("microbatches", "remat", "precision")
+
+
+def add_executor_args(ap: argparse.ArgumentParser, executor: str = "serial",
+                      parallelism: int = 1) -> argparse.ArgumentParser:
+    """``--executor/--parallelism/--cluster-nodes/--straggler-prob``: how a
+    scheduler wave's trials execute (serial, host thread pool, or simulated
+    cluster nodes)."""
+    ap.add_argument("--executor", default=executor,
+                    help="executor registry name (serial / parallel / "
+                         "cluster / plugin-registered)")
+    ap.add_argument("--parallelism", type=int, default=parallelism,
+                    help="trials per scheduler wave to run concurrently "
+                         "(implies --executor parallel when > 1)")
+    ap.add_argument("--cluster-nodes", type=int, default=4,
+                    help="simulated nodes for --executor cluster")
+    ap.add_argument("--straggler-prob", type=float, default=0.0,
+                    help="per-epoch straggler probability for "
+                         "--executor cluster")
+    return ap
+
+
+def executor_from_args(args: argparse.Namespace):
+    """Build the executor the flags describe (resolved via the registry)."""
+    from repro.api import registry
+    name = args.executor
+    if name == "parallel" or (name == "serial" and args.parallelism > 1):
+        return registry.make_executor("parallel",
+                                      parallelism=args.parallelism)
+    if name == "cluster":
+        return registry.make_executor(
+            "cluster", n_nodes=args.cluster_nodes,
+            straggler_prob=args.straggler_prob)
+    return registry.make_executor(name)
 
 
 def add_system_args(ap: argparse.ArgumentParser,

@@ -13,10 +13,11 @@ import argparse
 import importlib
 import json
 
-from repro.api import (Experiment, available_backends, available_schedulers,
-                       available_tuners)
+from repro.api import (Experiment, available_backends, available_executors,
+                       available_schedulers, available_tuners)
 from repro.core import GroundTruth, SearchSpace
 from repro.core.job import HPTJob, Param
+from repro.launch.sysargs import add_executor_args, executor_from_args
 
 
 def main():
@@ -30,8 +31,7 @@ def main():
     ap.add_argument("--epochs", type=int, default=6)
     ap.add_argument("--backend", default="real",
                     help=f"backend name; registered: {available_backends()}")
-    ap.add_argument("--parallelism", type=int, default=1,
-                    help="trials per scheduler wave to run concurrently")
+    add_executor_args(ap)   # --executor / --parallelism / --cluster-nodes
     ap.add_argument("--plugin", action="append", default=[],
                     help="module to import for register_* side effects")
     ap.add_argument("--gt-store", default=None,
@@ -59,14 +59,17 @@ def main():
            .with_backend(args.backend, **backend_kw)
            .with_scheduler(args.scheduler, **sched_kw)
            .with_groundtruth(GroundTruth(path=args.gt_store))
-           .run(parallelism=args.parallelism))
+           .run(executor=executor_from_args(args)))
 
     print(f"workload={args.workload} system={args.system} "
-          f"scheduler={args.scheduler}")
+          f"scheduler={args.scheduler} executor={args.executor} "
+          f"(registered: {available_executors()})")
     print(f"  best accuracy : {res.best_accuracy:.4f}")
     print(f"  best hparams  : {res.best_hparams}")
     print(f"  tuning time   : {res.tuning_time_s:.1f}s "
           f"({len(res.records)} trials)")
+    if res.sim_time_s:
+        print(f"  cluster makespan: {res.sim_time_s:.1f}s simulated")
     print(f"  energy        : {res.energy_j/1e3:.1f} kJ")
     if args.system == "pipetune":
         print(f"  ground truth  : {res.gt_hits} hits / {res.gt_misses} misses")

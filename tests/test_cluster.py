@@ -1,4 +1,6 @@
 """Cluster sim: FIFO, faults, stragglers, perf-model shape (paper Fig 3b)."""
+import dataclasses
+
 import numpy as np
 import pytest
 
@@ -7,6 +9,7 @@ from repro.cluster.sim import (ClusterConfig, ClusterSim, SimBackend,
                                SimSystemSpace, make_arrivals)
 from repro.core import GroundTruth, PipeTune, TuneV1
 from repro.core.job import HPTJob, Param, SearchSpace
+from repro.core.profiler import EpochProfile
 
 
 def _space():
@@ -97,6 +100,55 @@ def test_straggler_mitigation_bounds_slowdown():
                                                    scheduler="random",
                                                    n_trials=2))
     assert t_mit < t_slow
+
+
+@pytest.mark.parametrize("mode", ["event", "legacy"])
+def test_fault_injection_is_deterministic_per_seed(mode):
+    """Two runs with the same ClusterConfig.seed produce identical
+    JobOutcome lists — service times, failure/straggler counts, the lot —
+    on both the event engine and the legacy post-hoc path."""
+    def run_once():
+        sim = ClusterSim(ClusterConfig(n_nodes=2, seed=11, mtbf_s=800.0,
+                                       straggler_prob=0.15),
+                         lambda: TuneV1(SimBackend()), mode=mode)
+        return sim.run(_jobs(4, seed=2), scheduler="random", n_trials=2)
+
+    r1, r2 = run_once(), run_once()
+    assert [dataclasses.asdict(o) for o in r1] == \
+        [dataclasses.asdict(o) for o in r2]
+    assert sum(o.n_failures + o.n_stragglers for o in r1) > 0
+
+
+def test_event_and_legacy_modes_agree_on_scores():
+    """Faults only ever perturb time: accuracies and epoch counts match
+    between the event engine and the legacy path; timing may differ."""
+    jobs = _jobs(3, seed=4)
+    kw = dict(n_nodes=2, seed=5, mtbf_s=1000.0, straggler_prob=0.2)
+    ev = ClusterSim(ClusterConfig(**kw), lambda: TuneV1(SimBackend()),
+                    mode="event").run(jobs, scheduler="random", n_trials=2)
+    lg = ClusterSim(ClusterConfig(**kw), lambda: TuneV1(SimBackend()),
+                    mode="legacy").run(jobs, scheduler="random", n_trials=2)
+    assert [o.best_accuracy for o in ev] == [o.best_accuracy for o in lg]
+    assert [o.n_epochs for o in ev] == [o.n_epochs for o in lg]
+    assert [o.job_id for o in ev] == [o.job_id for o in lg]
+
+
+def test_sim_backend_profile_uses_raw_vector_mode():
+    """The lambda monkey-patch is gone: SimBackend marks its profiles raw
+    and ``vector()`` returns the modeled values verbatim."""
+    be = SimBackend()
+    ts = be.init_trial("lenet-mnist", {"batch_size": 64}, seed=0)
+    _, res = be.run_epoch(ts, {})
+    assert res.profile.raw
+    assert "vector" not in vars(res.profile)        # no instance override
+    expected = perfmodel.profile_vector("lenet-mnist", 64, 16, seed=0)
+    np.testing.assert_array_equal(res.profile.vector(), expected)
+    # round-trip construction
+    v = np.array([1.5, -2.0, 3.25])
+    np.testing.assert_array_equal(EpochProfile.from_vector(v).vector(), v)
+    # non-raw profiles still log-compress
+    assert EpochProfile({"hlo.flops": 1e12}).vector()[0] == \
+        pytest.approx(np.log1p(1e12))
 
 
 def test_pipetune_beats_v1_multi_tenant():
