@@ -3,10 +3,18 @@
 Prints ``name,us_per_call,derived`` CSV per the scaffold contract, where
 us_per_call is the wall time of the benchmark and derived carries its
 headline result. Full (slow) versions: run each module directly with --full.
+
+A machine-readable summary (per-benchmark wall time + headline metric)
+lands in ``BENCH_results.json`` (override with ``$BENCH_OUT``) so CI can
+archive the perf trajectory run over run.
 """
 from __future__ import annotations
 
+import json
+import os
 import time
+
+RESULTS = []                    # [{name, us_per_call, derived}] in run order
 
 
 def _timed(name, fn):
@@ -14,6 +22,19 @@ def _timed(name, fn):
     derived = fn()
     us = (time.time() - t0) * 1e6
     print(f"{name},{us:.0f},{derived}")
+    RESULTS.append({"name": name, "us_per_call": round(us),
+                    "derived": str(derived)})
+
+
+def write_summary(path=None):
+    path = path or os.environ.get("BENCH_OUT", "BENCH_results.json")
+    payload = {"generated_at": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+               "total_wall_s": round(sum(r["us_per_call"]
+                                         for r in RESULTS) / 1e6, 3),
+               "benchmarks": RESULTS}
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"# wrote {path} ({len(RESULTS)} benchmarks)")
 
 
 def bench_table2():
@@ -94,6 +115,17 @@ def bench_async_vs_barrier():
             f"makespan_speedup={mh/ma:.2f}x")
 
 
+def bench_store_service():
+    """Shared-store client cache: hot lookups stay local, socket agrees."""
+    from benchmarks import store_service
+    out = store_service.run(n_lookups=500, quick=True)
+    if not out["socket_agrees"]:
+        raise RuntimeError("socket client diverged from in-proc client")
+    return (f"cache_speedup={out['cache_speedup']:.1f}x;"
+            f"hit_rate={out['hit_rate']:.2f};"
+            f"cached_klookups_per_s={out['cached_lookups_per_s']/1e3:.1f}")
+
+
 def bench_fig1_tuning_cost():
     from benchmarks import tuning_cost
     rows = tuning_cost.run(max_params=3, epochs=3)
@@ -154,7 +186,16 @@ def bench_roofline():
 
 def main() -> None:
     # every bench here already runs its module's quick mode (the scaffold
-    # contract: full/slow versions live behind each module's own --full)
+    # contract: full/slow versions live behind each module's own --full);
+    # the summary is written even when a benchmark dies, so a failing CI
+    # run still archives the partial timings that led up to the failure
+    try:
+        _run_all()
+    finally:
+        write_summary()
+
+
+def _run_all() -> None:
     _timed("table2", bench_table2)
     _timed("fig9_10_convergence", bench_fig9_10_convergence)
     _timed("fig11_single_tenancy", bench_fig11_single_tenancy)
@@ -162,6 +203,7 @@ def main() -> None:
     _timed("fig12_real_typeIII", bench_fig12_real_typeIII)
     _timed("fig13_14_multi_tenancy", bench_fig13_14_multi_tenancy)
     _timed("async_vs_barrier", bench_async_vs_barrier)
+    _timed("store_service", bench_store_service)
     _timed("fig1_tuning_cost", bench_fig1_tuning_cost)
     _timed("fig2_profiling_stability", bench_fig2_profiling_stability)
     _timed("fig8_clustering", bench_fig8_clustering)

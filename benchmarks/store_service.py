@@ -1,0 +1,85 @@
+"""Shared ground-truth service benchmark: what the client-side centroid
+cache buys on the hot lookup path, and that socket and in-proc clients
+agree bit-for-bit on a warm store.
+
+Run directly for the full version:  PYTHONPATH=src python -m benchmarks.store_service
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from repro.service import (GroundTruthService, GroundTruthTCPServer,
+                           InprocTransport, SocketTransport, StoreClient)
+
+
+def _warm_service(path=None, n_workloads=4, per_workload=4):
+    svc = GroundTruthService(path=path)
+    rng = np.random.RandomState(0)
+    for w in range(n_workloads):
+        base = np.zeros(58)
+        base[w * 5:(w + 1) * 5] = 10.0 + 5.0 * w
+        for i in range(per_workload):
+            svc.handle({"op": "add", "profile":
+                        (base + rng.randn(58) * 0.05).tolist(),
+                        "workload": f"wl-{w}", "sys_config": {"chips": 4 + w},
+                        "objective": 0.9})
+    return svc
+
+
+def _probe_set(n, seed=7):
+    rng = np.random.RandomState(seed)
+    out = []
+    for i in range(n):
+        base = np.zeros(58)
+        w = i % 4
+        base[w * 5:(w + 1) * 5] = 10.0 + 5.0 * w
+        out.append(base + rng.randn(58) * 0.05)
+    return out
+
+
+def run(n_lookups: int = 200, quick: bool = True) -> dict:
+    import threading
+
+    svc = _warm_service()
+    probes = _probe_set(n_lookups)
+    server = GroundTruthTCPServer(("127.0.0.1", 0), svc)
+    threading.Thread(target=server.serve_forever, daemon=True).start()
+    addr = ("127.0.0.1", server.server_address[1])
+
+    # naive remote lookups: ship the profile, run the model server-side
+    transport = SocketTransport(*addr)
+    t0 = time.perf_counter()
+    naive = [transport.request({"op": "lookup", "profile": p.tolist()})
+             for p in probes]
+    t_naive = time.perf_counter() - t0
+    transport.close()
+
+    # cached client: tiny version ping + local centroid evaluation
+    sock_client = StoreClient(SocketTransport(*addr))
+    t0 = time.perf_counter()
+    cached = [sock_client.lookup(p) for p in probes]
+    t_cached = time.perf_counter() - t0
+    sock_client.close()
+    server.shutdown()
+
+    # the in-proc client must agree with the socket client bit for bit
+    inproc = StoreClient(InprocTransport(svc))
+    local = [inproc.lookup(p) for p in probes]
+    agree = all(s0 == s1 and c0 == c1 for (s0, c0), (s1, c1)
+                in zip(cached, local))
+    hit_rate = sock_client.hits / max(1, sock_client.hits + sock_client.misses)
+    return {"n_lookups": n_lookups,
+            "cached_lookups_per_s": n_lookups / max(t_cached, 1e-9),
+            "naive_lookups_per_s": n_lookups / max(t_naive, 1e-9),
+            "cache_speedup": t_naive / max(t_cached, 1e-9),
+            "hit_rate": hit_rate, "socket_agrees": agree}
+
+
+if __name__ == "__main__":
+    out = run(n_lookups=2000, quick=False)
+    for k, v in out.items():
+        print(f"{k}: {v}")

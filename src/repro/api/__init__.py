@@ -9,6 +9,8 @@ Layers (module imports go only downward; the one upward edge is
     repro.core        runners (PipeTune / TuneV1 / TuneV2), ask/tell
                       schedulers, backends, ground-truth store
     repro.cluster     SimBackend + discrete-event multi-tenant simulation
+    repro.service     shared ground-truth store service (in-proc / TCP
+                      transports) + the multi-backend sharded executor
 
 Quickstart::
 
@@ -21,7 +23,8 @@ Quickstart::
 from repro.api.backend import (  # noqa: F401
     Backend, BackendCapabilities, backend_capabilities)
 from repro.api.executor import (  # noqa: F401
-    ClusterTrialExecutor, ParallelTrialExecutor, SerialTrialExecutor)
+    ClusterTrialExecutor, ParallelTrialExecutor, SerialTrialExecutor,
+    ShardedTrialExecutor)
 from repro.api.experiment import Experiment  # noqa: F401
 from repro.api.registry import (  # noqa: F401
     available_backends, available_executors, available_schedulers,

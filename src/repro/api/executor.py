@@ -1,13 +1,15 @@
 """Public re-export of the trial executors. Serial/parallel implementations
 live in ``repro.core.executor`` (the core drive loop has no upward
 dependency); the event-driven cluster executor lives in
-``repro.cluster.executor``. ``make_executor`` here is the registry resolver
-("serial" / "parallel" / "cluster" / plugin names, or an int parallelism
-count for compatibility)."""
+``repro.cluster.executor``; the multi-backend sharded executor lives in
+``repro.service.sharded``. ``make_executor`` here is the registry resolver
+("serial" / "parallel" / "cluster" / "sharded" / plugin names, or an int
+parallelism count for compatibility)."""
 from repro.api.registry import make_executor  # noqa: F401
 from repro.cluster.executor import ClusterTrialExecutor  # noqa: F401
 from repro.core.executor import (  # noqa: F401
     ParallelTrialExecutor, SerialTrialExecutor)
+from repro.service.sharded import ShardedTrialExecutor  # noqa: F401
 
 __all__ = ["SerialTrialExecutor", "ParallelTrialExecutor",
-           "ClusterTrialExecutor", "make_executor"]
+           "ClusterTrialExecutor", "ShardedTrialExecutor", "make_executor"]

@@ -187,7 +187,19 @@ def _make_cluster_executor(cluster=None, default_sys=None, **kw):
                                 **kw)
 
 
+def _make_sharded_executor(backends=None, capacity=1, default_sys=None, **kw):
+    # registry-name backends ("sim", "real", ...) resolve through
+    # make_backend inside the executor; same default-config charging
+    # convention as "cluster"
+    from repro.service.sharded import ShardedTrialExecutor
+    if default_sys is None:
+        default_sys = SIM_SYS_DEFAULT
+    return ShardedTrialExecutor(backends=backends, capacity=capacity,
+                                default_sys=default_sys, **kw)
+
+
 register_executor("serial", lambda: SerialTrialExecutor())
 register_executor("parallel",
                   lambda parallelism=4: ParallelTrialExecutor(parallelism))
 register_executor("cluster", _make_cluster_executor)
+register_executor("sharded", _make_sharded_executor)

@@ -29,7 +29,8 @@ import dataclasses
 import heapq
 import itertools
 import math
-from typing import Callable, Dict, Generator, Iterable, Iterator, List, Optional
+from typing import (Callable, Dict, Generator, Iterable, Iterator, List,
+                    Optional, Sequence)
 
 import numpy as np
 
@@ -48,6 +49,16 @@ class ClusterConfig:
     async_overlap: float = 0.85             # fraction hidden when the runner
     #                                         compiles off the critical path
     seed: int = 0
+    # per-node placement tags (len == n_nodes): a task submitted with
+    # tag=T runs only on nodes tagged T; untagged tasks run anywhere.
+    # The sharded executor tags each node with the backend it hosts.
+    node_tags: Optional[Sequence[str]] = None
+
+    def __post_init__(self):
+        if self.node_tags is not None and len(self.node_tags) != self.n_nodes:
+            raise ValueError(
+                f"node_tags has {len(self.node_tags)} entries for "
+                f"{self.n_nodes} nodes")
 
 
 @dataclasses.dataclass
@@ -70,15 +81,17 @@ class TaskStats:
 
 
 class _Task:
-    __slots__ = ("stats", "gen", "rng", "on_done", "base_durations")
+    __slots__ = ("stats", "gen", "rng", "on_done", "base_durations", "tag")
 
     def __init__(self, stats: TaskStats, gen: Iterator[float],
-                 rng: np.random.RandomState, on_done):
+                 rng: np.random.RandomState, on_done,
+                 tag: Optional[str] = None):
         self.stats = stats
         self.gen = gen
         self.rng = rng
         self.on_done = on_done
         self.base_durations: List[float] = []   # pre-fault, for mitigation
+        self.tag = tag                          # placement constraint
 
 
 class EventEngine:
@@ -97,6 +110,8 @@ class EventEngine:
         self._heap: List[tuple] = []            # (time, seq, thunk)
         self._seq = itertools.count()
         self._free = list(range(cfg.n_nodes))   # sorted free-node ids
+        self._tags = (list(cfg.node_tags) if cfg.node_tags is not None
+                      else [None] * cfg.n_nodes)
         self._waiting: collections.deque = collections.deque()
         self._n_submitted = 0
         self._n_active = 0
@@ -104,19 +119,23 @@ class EventEngine:
     # ------------------------------------------------------------- submit
     def submit(self, task_id: str, process: Iterator[float],
                at: Optional[float] = None,
-               on_done: Optional[Callable[[TaskStats], None]] = None
-               ) -> TaskStats:
+               on_done: Optional[Callable[[TaskStats], None]] = None,
+               tag: Optional[str] = None) -> TaskStats:
         """Schedule `process` (a generator of base epoch durations) to
         arrive at time `at` (default: now). Returns the live stats object,
-        filled in as the task executes."""
+        filled in as the task executes. ``tag`` restricts placement to
+        nodes carrying the same ``ClusterConfig.node_tags`` entry."""
         at = self.now if at is None else at
         if at < self.now:
             raise ValueError(f"cannot submit in the past ({at} < {self.now})")
+        if tag is not None and tag not in self._tags:
+            raise ValueError(f"no node tagged {tag!r} "
+                             f"(tags: {sorted(set(self._tags) - {None})})")
         stats = TaskStats(task_id=task_id, submit_s=at)
         rng = np.random.RandomState(
             (self.cfg.seed * 1_000_003 + 7919 * self._n_submitted)
             % (2 ** 31 - 1))
-        task = _Task(stats, iter(process), rng, on_done)
+        task = _Task(stats, iter(process), rng, on_done, tag=tag)
         self._n_submitted += 1
         self._n_active += 1
         self._push(at, lambda: self._arrive(task))
@@ -150,11 +169,15 @@ class EventEngine:
         self.now = t
         thunk()
 
+    def _compatible(self, task: _Task, node: int) -> bool:
+        return task.tag is None or task.tag == self._tags[node]
+
     def _arrive(self, task: _Task) -> None:
-        if self._free:
-            self._start(task, self._free.pop(0))
-        else:
-            self._waiting.append(task)
+        for i, node in enumerate(self._free):   # first compatible free node
+            if self._compatible(task, node):
+                self._start(task, self._free.pop(i))
+                return
+        self._waiting.append(task)
 
     def _start(self, task: _Task, node: int) -> None:
         task.stats.node = node
@@ -177,8 +200,11 @@ class EventEngine:
         self.completed.append(task.stats)
         self._n_active -= 1
         node = task.stats.node
-        if self._waiting:
-            self._start(self._waiting.popleft(), node)
+        for i, waiter in enumerate(self._waiting):  # FIFO among compatible
+            if self._compatible(waiter, node):
+                del self._waiting[i]
+                self._start(waiter, node)
+                break
         else:
             bisect.insort(self._free, node)
         if task.on_done is not None:

@@ -45,6 +45,7 @@ class TrialDispatch:
     epochs: int                     # the proposal's total-epoch target
     score: float = float("nan")
     node: int = -1
+    backend: Optional[str] = None   # shard tag (sharded executor only)
     submit_s: float = 0.0
     start_s: float = 0.0
     finish_s: float = 0.0
@@ -112,15 +113,29 @@ class ClusterTrialExecutor:
             scheduler.report(dispatch.trial_id, dispatch.score)
 
     # ------------------------------------------------------------ internals
+    def _placement(self, runner, p: TrialProposal):
+        """(node tag, backend) for one proposal. The base executor places
+        anywhere and runs on the runner's own backend; the sharded executor
+        (``repro.service.sharded``) overrides this to bind each trial to a
+        backend-tagged node group."""
+        return None, None
+
     def _submit(self, runner, workload: str,
                 p: TrialProposal) -> TrialDispatch:
+        tag, backend = self._placement(runner, p)
         dispatch = TrialDispatch(trial_id=p.trial_id, epochs=p.epochs,
-                                 submit_s=self.engine.now)
+                                 submit_s=self.engine.now, backend=tag)
         charge = reconfig_charge_s(self.cfg, runner)
         process = charged_epoch_durations(
-            runner.trial_epochs(workload, p.trial_id, p.hparams, p.epochs),
+            runner.trial_epochs(workload, p.trial_id, p.hparams, p.epochs,
+                                backend=backend),
             p.trial_id, self._prev_sys, charge, self.default_sys)
 
+        self.engine.submit(p.trial_id, process, on_done=self._finisher(
+            runner, p, dispatch), tag=tag)
+        return dispatch
+
+    def _finisher(self, runner, p: TrialProposal, dispatch: TrialDispatch):
         def on_done(stats):
             dispatch.score = runner.records[p.trial_id].score(runner.objective)
             dispatch.node = stats.node
@@ -129,6 +144,4 @@ class ClusterTrialExecutor:
             dispatch.n_stragglers = stats.n_stragglers
             dispatch.n_failures = stats.n_failures
             self.history.append(dispatch)
-
-        self.engine.submit(p.trial_id, process, on_done=on_done)
-        return dispatch
+        return on_done

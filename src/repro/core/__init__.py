@@ -8,7 +8,8 @@ Public surface:
     HyperBand/ASHA/... — trial schedulers
     SystemSpace        — the system-parameter search space
 """
-from repro.core.groundtruth import GroundTruth, KMeans  # noqa: F401
+from repro.core.groundtruth import (  # noqa: F401
+    CentroidModel, GroundTruth, GroundTruthError, KMeans)
 from repro.core.profiler import Profiler, PROFILE_EVENTS  # noqa: F401
 from repro.core.schedulers import (  # noqa: F401
     AskTellScheduler, GridSearch, RandomSearch, HyperBand, ASHA, PBT,

@@ -75,6 +75,64 @@ class GTEntry:
     objective: float
 
 
+class GroundTruthError(RuntimeError):
+    """A persisted ground-truth store could not be read back."""
+
+
+@dataclasses.dataclass
+class CentroidModel:
+    """The pure, immutable lookup state of a fitted store: everything a
+    ``lookup`` needs and nothing else, so it can be shipped to remote
+    clients (``repro.service``) and evaluated there with *identical*
+    arithmetic to a server-side lookup.
+
+    ``configs[j]`` is the best-objective member config of cluster ``j``.
+    """
+    version: int
+    centroids: np.ndarray                   # (k, d) in normalized space
+    radius: float
+    configs: List[Optional[dict]]
+    mu: Optional[np.ndarray] = None
+    sigma: Optional[np.ndarray] = None
+
+    def evaluate(self, profile: np.ndarray
+                 ) -> Tuple[float, Optional[dict]]:
+        """Same contract as ``GroundTruth.lookup`` minus the hit/miss
+        bookkeeping (callers count on their side of the wire)."""
+        x = np.asarray(profile, np.float64)
+        if self.mu is not None:
+            x = (x - self.mu) / self.sigma
+        d2 = ((self.centroids - x[None]) ** 2).sum(-1)
+        j = int(d2.argmin())
+        dist = float(np.sqrt(d2[j]))
+        r = self.radius
+        if r <= 0 or dist > r or self.configs[j] is None:
+            return 0.0, None
+        return 1.0 - dist / r, dict(self.configs[j])
+
+    def to_payload(self) -> dict:
+        return {"version": self.version,
+                "centroids": self.centroids.tolist(),
+                "radius": self.radius,
+                "configs": [None if c is None else dict(c)
+                            for c in self.configs],
+                "mu": None if self.mu is None else self.mu.tolist(),
+                "sigma": None if self.sigma is None else self.sigma.tolist()}
+
+    @classmethod
+    def from_payload(cls, payload: dict) -> "CentroidModel":
+        return cls(
+            version=int(payload["version"]),
+            centroids=np.asarray(payload["centroids"], np.float64),
+            radius=float(payload["radius"]),
+            configs=[None if c is None else dict(c)
+                     for c in payload["configs"]],
+            mu=None if payload.get("mu") is None
+            else np.asarray(payload["mu"], np.float64),
+            sigma=None if payload.get("sigma") is None
+            else np.asarray(payload["sigma"], np.float64))
+
+
 class GroundTruth:
     """Profile -> known-optimal system config, privacy-preserving (§5.5):
     only low-level profile vectors are stored, never model/dataset identity
@@ -98,6 +156,8 @@ class GroundTruth:
         self.path = path
         self.hits = 0
         self.misses = 0
+        self.version = 0                 # bumped on every refit (monotonic)
+        self._model: Optional[CentroidModel] = None
         if path and os.path.exists(path):
             self.load(path)
 
@@ -107,16 +167,29 @@ class GroundTruth:
             return X
         return (X - self._mu) / self._sigma
 
+    def _fit_kmeans(self) -> Optional[KMeans]:
+        """Fit on the current entries under the *current* normalization
+        (load() restores a saved mu/sigma and must not recompute them)."""
+        if not self.entries:
+            return None
+        X = np.stack([e.profile for e in self.entries])
+        Xn = self._normalize(X)
+        k = min(max(1, self.k), len(self.entries))
+        return KMeans(k=k, seed=self.seed).fit(Xn)
+
+    def _bump(self):
+        self.version += 1
+        self._model = None
+
     def refit(self):
         if not self.entries:
             self.kmeans = None
-            return
-        X = np.stack([e.profile for e in self.entries])
-        self._mu = X.mean(0)
-        self._sigma = np.maximum(X.std(0), self.min_sigma)
-        Xn = self._normalize(X)
-        k = min(max(1, self.k), len(self.entries))
-        self.kmeans = KMeans(k=k, seed=self.seed).fit(Xn)
+        else:
+            X = np.stack([e.profile for e in self.entries])
+            self._mu = X.mean(0)
+            self._sigma = np.maximum(X.std(0), self.min_sigma)
+            self.kmeans = self._fit_kmeans()
+        self._bump()
 
     # --------------------------------------------------------------- queries
     @property
@@ -129,31 +202,43 @@ class GroundTruth:
         return max(self.radius_factor * float(np.sqrt(mean_d2)),
                    self.min_radius)
 
+    def centroid_model(self) -> Optional[CentroidModel]:
+        """The pure lookup state at the current version (None while unfit).
+        Rebuilt lazily after each refit; remote clients cache the payload and
+        re-fetch only when the version bumps."""
+        if self.kmeans is None or not self.entries:
+            return None
+        if self._model is None:
+            labels = self.kmeans.labels_
+            # entries appended with refit=False since the last fit have no
+            # label yet: they are invisible until the next refit (len(labels)
+            # is the fitted prefix — add() only ever appends)
+            n_fit = min(len(labels), len(self.entries))
+            configs: List[Optional[dict]] = []
+            for j in range(len(self.kmeans.centroids)):
+                members = [self.entries[i] for i in range(n_fit)
+                           if labels[i] == j]
+                best = max(members, key=lambda e: e.objective, default=None)
+                configs.append(dict(best.sys_config) if best else None)
+            self._model = CentroidModel(
+                version=self.version, centroids=self.kmeans.centroids,
+                radius=self.radius, configs=configs,
+                mu=self._mu, sigma=self._sigma)
+        return self._model
+
     def lookup(self, profile: np.ndarray) -> Tuple[float, Optional[dict]]:
         """Returns (similarity score in [0,1], config or None).
 
         score > 0 iff the profile sits within the cluster radius; the config
         returned is the best-objective entry of the matched cluster.
         """
-        if self.kmeans is None:
+        model = self.centroid_model()
+        score, cfg = (0.0, None) if model is None else model.evaluate(profile)
+        if cfg is None:
             self.misses += 1
-            return 0.0, None
-        x = self._normalize(np.asarray(profile, np.float64))
-        cluster, dist = self.kmeans.predict(x)
-        r = self.radius
-        if r <= 0 or dist > r:
-            self.misses += 1
-            return 0.0, None
-        X = np.stack([e.profile for e in self.entries])
-        labels = self.kmeans.labels_
-        members = [self.entries[i] for i in range(len(self.entries))
-                   if labels[i] == cluster]
-        if not members:
-            self.misses += 1
-            return 0.0, None
-        best = max(members, key=lambda e: e.objective)
-        self.hits += 1
-        return 1.0 - dist / r, dict(best.sys_config)
+        else:
+            self.hits += 1
+        return score, cfg
 
     def add(self, profile: np.ndarray, workload: str, sys_config: dict,
             objective: float, refit: bool = True):
@@ -166,18 +251,54 @@ class GroundTruth:
 
     # ------------------------------------------------------------------- io
     def save(self, path: str):
-        payload = [{"profile": e.profile.tolist(), "workload": e.workload,
-                    "sys_config": e.sys_config, "objective": e.objective}
-                   for e in self.entries]
+        payload = {
+            "format": 2,
+            "entries": [{"profile": e.profile.tolist(),
+                         "workload": e.workload,
+                         "sys_config": e.sys_config,
+                         "objective": e.objective} for e in self.entries],
+            # hit-rate counters + normalization state ride along so a
+            # reloaded store reports honest statistics and reproduces
+            # lookups exactly without recomputing mu/sigma
+            "hits": self.hits, "misses": self.misses,
+            "version": self.version,
+            "mu": None if self._mu is None else np.asarray(
+                self._mu, np.float64).tolist(),
+            "sigma": None if self._sigma is None else np.asarray(
+                self._sigma, np.float64).tolist(),
+        }
         tmp = path + ".tmp"
         with open(tmp, "w") as f:
             json.dump(payload, f)
         os.replace(tmp, path)
 
     def load(self, path: str):
-        with open(path) as f:
-            payload = json.load(f)
-        self.entries = [GTEntry(np.asarray(p["profile"]), p["workload"],
-                                p["sys_config"], p["objective"])
-                        for p in payload]
-        self.refit()
+        """Restore a saved store. A corrupt/truncated file is a hard error
+        (``GroundTruthError``): silently starting empty would quietly throw
+        away every profiled optimum and re-probe all recurring jobs."""
+        try:
+            with open(path) as f:
+                payload = json.load(f)
+            if isinstance(payload, list):      # format-1 files: entries only
+                payload = {"entries": payload}
+            self.entries = [GTEntry(np.asarray(p["profile"], np.float64),
+                                    p["workload"], dict(p["sys_config"]),
+                                    float(p["objective"]))
+                            for p in payload["entries"]]
+            self.hits = int(payload.get("hits", 0))
+            self.misses = int(payload.get("misses", 0))
+            mu, sigma = payload.get("mu"), payload.get("sigma")
+            if mu is not None and sigma is not None:
+                self._mu = np.asarray(mu, np.float64)
+                self._sigma = np.asarray(sigma, np.float64)
+                self.kmeans = self._fit_kmeans()
+                self._model = None
+                self.version = int(payload.get("version", 0))
+            else:
+                self.refit()                   # format-1: derive everything
+        except (OSError, ValueError, KeyError, TypeError,
+                AttributeError) as e:
+            raise GroundTruthError(
+                f"corrupt ground-truth store at {path!r} ({e}); fix or "
+                "delete the file, or relaunch with --store-reset to start "
+                "from an empty store") from None

@@ -95,6 +95,10 @@ class TrialRunner:
         self.seed = seed
         self.states: Dict[str, TrialState] = {}
         self.records: Dict[str, TrialRecord] = {}
+        # per-trial backend binding: a sharded executor runs each trial on
+        # one of several backends; a trial (and its PBT clones) must keep
+        # returning to the backend that owns its state across rung resumes
+        self._trial_backends: Dict[str, Any] = {}
         # serializes runner bookkeeping (record/state dicts, policy hooks,
         # ground-truth store) when an executor runs trials concurrently;
         # backend.run_epoch — the expensive part — stays outside the lock
@@ -112,18 +116,28 @@ class TrialRunner:
     def finish_trial(self, record: TrialRecord, state: TrialState):
         pass
 
+    def backend_for(self, trial_id: str):
+        """The backend bound to `trial_id` (the runner's own by default)."""
+        return self._trial_backends.get(trial_id, self.backend)
+
     def trial_epochs(self, workload: str, trial_id: str, hparams: dict,
-                     total_epochs: int):
+                     total_epochs: int, backend=None):
         """Generator form of ``run_trial``: runs one backend epoch per
         iteration and yields its ``EpochResult``, so a discrete-event
         executor can charge each epoch to a simulated node clock as it
         happens. ``finish_trial`` fires when the generator is exhausted; the
-        completed record is ``self.records[trial_id]``."""
+        completed record is ``self.records[trial_id]``.
+
+        `backend` pins the trial to a specific backend (sharded execution);
+        the binding sticks, so rung-resumed epochs hit the same backend that
+        holds the trial's state."""
         with self._hook_lock:
+            if backend is not None:
+                self._trial_backends[trial_id] = backend
+            be = self.backend_for(trial_id)
             state = self.states.get(trial_id)
             if state is None:
-                state = self.backend.init_trial(workload, hparams,
-                                                seed=self.seed)
+                state = be.init_trial(workload, hparams, seed=self.seed)
                 self.states[trial_id] = state
                 self.records[trial_id] = TrialRecord(trial_id, dict(hparams))
             elif state.hparams != dict(hparams):
@@ -138,7 +152,7 @@ class TrialRunner:
             with self._hook_lock:
                 sys_cfg = self.sys_for_epoch(record, state, state.epoch, prev)
                 record.sys_history.append(dict(sys_cfg))
-            state, res = self.backend.run_epoch(state, sys_cfg)
+            state, res = be.run_epoch(state, sys_cfg)
             with self._hook_lock:
                 record.epochs.append(res)
                 self.after_epoch(record, state, res)
@@ -228,6 +242,8 @@ class TrialRunner:
             st.params = tree_copy(src_state.params)
             st.opt_state = tree_copy(src_state.opt_state)
             self.states[dst_id] = st
+            if src_id in self._trial_backends:      # stay on the same shard
+                self._trial_backends[dst_id] = self._trial_backends[src_id]
             rec = self.records.get(src_id)
             if rec is not None:
                 self.records[dst_id] = TrialRecord(
@@ -269,6 +285,13 @@ class PipeTune(TrialRunner):
       after epoch 0     ground-truth lookup; hit -> lock known config
       miss              probe one system config per epoch (still training)
       after probing     lock argmin(objective); store profile->config
+
+    ``groundtruth`` is a *store client*: anything implementing the
+    ``lookup``/``add``/``hits``/``misses`` surface. A bare ``GroundTruth``
+    is the zero-cost in-process case; ``repro.service.StoreClient`` reaches
+    a shared ``GroundTruthService`` (in-proc or over TCP), which is what
+    lets concurrent jobs, sharded backends, and whole separate processes
+    tune against one store (paper §5.4-5.5).
     """
 
     def __init__(self, backend, sys_space: SystemSpace,
@@ -297,7 +320,7 @@ class PipeTune(TrialRunner):
             cfg = plan.next_config()
             # async-compile the next candidate off the critical path
             if not plan.done and self.capabilities.async_precompile:
-                self.backend.precompile_async(
+                self.backend_for(tid).precompile_async(
                     state, plan.configs[plan.next_idx])
             return dict(cfg)
         return dict(SYS_DEFAULT)
@@ -323,7 +346,8 @@ class PipeTune(TrialRunner):
                     accuracy=result.accuracy, loss=result.loss))
                 self._plans[tid] = plan
                 if self.capabilities.async_precompile and plan.configs:
-                    self.backend.precompile_async(state, plan.configs[0])
+                    self.backend_for(tid).precompile_async(
+                        state, plan.configs[0])
             return
         plan = self._plans.get(tid)
         if plan is not None and tid not in self._locked:

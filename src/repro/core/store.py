@@ -3,6 +3,12 @@
 Append-only JSONL per measurement with tags + fields + timestamps, and a
 query surface good enough for the benchmarks: filter by measurement, tags,
 time range.
+
+Writes buffer 64 records before touching disk; the tail of the buffer is
+flushed by ``close()`` / the ``with MetricsStore(...) as ms:`` context
+manager, and — as a safety net — by a finalizer when the store is
+garbage-collected or the interpreter exits, so short-lived processes no
+longer lose their last partial batch.
 """
 from __future__ import annotations
 
@@ -10,7 +16,24 @@ import json
 import os
 import threading
 import time
+import weakref
 from typing import Any, Dict, Iterator, List, Optional
+
+
+def _flush_buffers(root: str, buffers: Dict[str, list],
+                   lock: threading.Lock) -> None:
+    """Module-level so the weakref finalizer holds no reference to the
+    store itself (which would keep it alive forever)."""
+    with lock:
+        for measurement in list(buffers):
+            buf = buffers.get(measurement, [])
+            if not buf:
+                continue
+            path = os.path.join(root, f"{measurement}.jsonl")
+            with open(path, "a") as f:
+                for rec in buf:
+                    f.write(json.dumps(rec) + "\n")
+            buffers[measurement] = []
 
 
 class MetricsStore:
@@ -19,6 +42,10 @@ class MetricsStore:
         os.makedirs(root, exist_ok=True)
         self._lock = threading.Lock()
         self._buffers: Dict[str, list] = {}
+        # fires on GC of the store and at interpreter exit (atexit),
+        # whichever comes first — the __del__/atexit flush in one hook
+        self._finalizer = weakref.finalize(
+            self, _flush_buffers, self.root, self._buffers, self._lock)
 
     def _path(self, measurement: str) -> str:
         return os.path.join(self.root, f"{measurement}.jsonl")
@@ -46,6 +73,18 @@ class MetricsStore:
         with self._lock:
             for m in list(self._buffers):
                 self._flush(m)
+
+    def close(self):
+        """Flush and detach the exit-time finalizer."""
+        self.flush()
+        self._finalizer.detach()
+
+    def __enter__(self) -> "MetricsStore":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
 
     def query(self, measurement: str, tags: Optional[Dict[str, str]] = None,
               t0: float = 0.0, t1: float = float("inf")) -> List[dict]:

@@ -32,7 +32,14 @@ def add_executor_args(ap: argparse.ArgumentParser, executor: str = "serial",
                     help="simulated nodes for --executor cluster")
     ap.add_argument("--straggler-prob", type=float, default=0.0,
                     help="per-epoch straggler probability for "
-                         "--executor cluster")
+                         "--executor cluster / sharded")
+    ap.add_argument("--backends", default=None,
+                    help="comma-separated backend registry names for "
+                         "--executor sharded (e.g. 'sim,sim'); each becomes "
+                         "one shard of the wave fan-out")
+    ap.add_argument("--shard-capacity", type=int, default=1,
+                    help="simulated nodes per backend shard for "
+                         "--executor sharded")
     return ap
 
 
@@ -47,7 +54,52 @@ def executor_from_args(args: argparse.Namespace):
         return registry.make_executor(
             "cluster", n_nodes=args.cluster_nodes,
             straggler_prob=args.straggler_prob)
+    if name == "sharded":
+        backends = args.backends.split(",") if args.backends else None
+        return registry.make_executor(
+            "sharded", backends=backends, capacity=args.shard_capacity,
+            straggler_prob=args.straggler_prob)
     return registry.make_executor(name)
+
+
+def add_store_args(ap: argparse.ArgumentParser,
+                   store: str = "inproc") -> argparse.ArgumentParser:
+    """``--store/--gt-store/--store-reset``: where the ground-truth store
+    lives — in this process, or a shared ``python -m repro.service``."""
+    ap.add_argument("--store", default=store,
+                    help="'inproc' (own store, optionally journaled via "
+                         "--gt-store) or tcp://HOST:PORT of a running "
+                         "`python -m repro.service`")
+    ap.add_argument("--gt-store", default=None,
+                    help="JSONL journal path for the in-proc store; persists "
+                         "profile->config optima across runs")
+    ap.add_argument("--store-reset", action="store_true",
+                    help="escape hatch for a corrupt/unwanted journal: "
+                         "delete it and start from an empty store")
+    return ap
+
+
+def store_client_from_args(args: argparse.Namespace):
+    """Build the ground-truth ``StoreClient`` the flags describe."""
+    from repro.service import (GroundTruthService, InprocTransport,
+                               SocketTransport, StoreClient)
+    spec = args.store
+    if spec.startswith("tcp://"):
+        if getattr(args, "store_reset", False):
+            raise ValueError(
+                "--store-reset only applies to the in-proc store; to reset "
+                "a remote one, restart it with `python -m repro.service "
+                "--reset`")
+        host, _, port = spec[len("tcp://"):].rpartition(":")
+        if not port.isdigit():
+            raise ValueError(f"--store {spec!r}: expected tcp://HOST:PORT")
+        return StoreClient(SocketTransport(host or "127.0.0.1", int(port)))
+    if spec != "inproc":
+        raise ValueError(f"--store {spec!r}: expected 'inproc' or "
+                         "tcp://HOST:PORT")
+    service = GroundTruthService(path=args.gt_store,
+                                 reset=args.store_reset)
+    return StoreClient(InprocTransport(service))
 
 
 def add_system_args(ap: argparse.ArgumentParser,

@@ -15,9 +15,10 @@ import json
 
 from repro.api import (Experiment, available_backends, available_executors,
                        available_schedulers, available_tuners)
-from repro.core import GroundTruth, SearchSpace
+from repro.core import SearchSpace
 from repro.core.job import HPTJob, Param
-from repro.launch.sysargs import add_executor_args, executor_from_args
+from repro.launch.sysargs import (add_executor_args, add_store_args,
+                                  executor_from_args, store_client_from_args)
 
 
 def main():
@@ -32,10 +33,9 @@ def main():
     ap.add_argument("--backend", default="real",
                     help=f"backend name; registered: {available_backends()}")
     add_executor_args(ap)   # --executor / --parallelism / --cluster-nodes
+    add_store_args(ap)      # --store / --gt-store / --store-reset
     ap.add_argument("--plugin", action="append", default=[],
                     help="module to import for register_* side effects")
-    ap.add_argument("--gt-store", default=None,
-                    help="path for the persistent ground-truth store")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
@@ -58,7 +58,7 @@ def main():
            .with_tuner(args.system, **tuner_kw)
            .with_backend(args.backend, **backend_kw)
            .with_scheduler(args.scheduler, **sched_kw)
-           .with_groundtruth(GroundTruth(path=args.gt_store))
+           .with_groundtruth(store_client_from_args(args))
            .run(executor=executor_from_args(args)))
 
     print(f"workload={args.workload} system={args.system} "

@@ -1,0 +1,24 @@
+"""Shared tuning service: remote-safe ground-truth store + sharded runs.
+
+The pieces (see each module's docstring):
+
+    GroundTruthService    repro.service.service    store + protocol + journal
+    StoreClient           repro.service.transport  GroundTruth-compatible
+                                                   client, centroid cache
+    InprocTransport       repro.service.transport  zero-copy, same process
+    SocketTransport       repro.service.transport  length-prefixed JSON/TCP
+    GroundTruthTCPServer  repro.service.transport  socketserver host
+    ShardedTrialExecutor  repro.service.sharded    waves across backends
+
+Start a store server:      python -m repro.service --port 7077 --journal gt.jsonl
+Point a job at it:         --store tcp://127.0.0.1:7077  (repro.launch.tune)
+"""
+from repro.service.service import GroundTruthService  # noqa: F401
+from repro.service.sharded import ShardedTrialExecutor  # noqa: F401
+from repro.service.transport import (  # noqa: F401
+    GroundTruthTCPServer, InprocTransport, SocketTransport, StoreClient,
+    StoreError, serve)
+
+__all__ = ["GroundTruthService", "StoreClient", "StoreError",
+           "InprocTransport", "SocketTransport", "GroundTruthTCPServer",
+           "serve", "ShardedTrialExecutor"]

@@ -1,0 +1,50 @@
+"""Run a ground-truth store server:
+
+    PYTHONPATH=src python -m repro.service --port 7077 --journal gt.jsonl
+
+Any number of tuning jobs (same host or remote) then share its state via
+``--store tcp://HOST:PORT`` (see ``repro.launch.tune``) or a
+``repro.service.StoreClient`` built on ``SocketTransport``.
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.service.service import GroundTruthService
+from repro.service.transport import GroundTruthTCPServer
+
+
+def main():
+    ap = argparse.ArgumentParser(
+        description="serve a shared PipeTune ground-truth store over TCP")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=7077,
+                    help="TCP port (0 binds an ephemeral one)")
+    ap.add_argument("--journal", default=None,
+                    help="JSONL journal path for crash-safe persistence")
+    ap.add_argument("--reset", action="store_true",
+                    help="discard an existing journal and start empty")
+    ap.add_argument("--k", type=int, default=2,
+                    help="k-means cluster count of the store")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    service = GroundTruthService(path=args.journal, reset=args.reset,
+                                 k=args.k, seed=args.seed)
+    server = GroundTruthTCPServer((args.host, args.port), service)
+    host, port = server.server_address[:2]
+    n = len(service.store.entries)
+    print(f"ground-truth service on {host}:{port} "
+          f"({n} entries{', journal ' + args.journal if args.journal else ''})",
+          flush=True)
+    try:
+        server.serve_forever()
+    except KeyboardInterrupt:
+        pass
+    finally:
+        server.shutdown()
+        service.close()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,173 @@
+"""GroundTruthService: the shared tuning store behind a wire protocol.
+
+Wraps a ``repro.core.GroundTruth`` behind a small request/response protocol
+so tuning state can be shared by concurrent trials, sharded backends, and
+whole separate processes (the paper's §5.4-5.5 sharing economy; in the
+spirit of MLtuner's shared tuning state and the self-tuning parameter
+server). Every request is a JSON-serializable dict ``{"op": ...}``; every
+response carries ``ok`` plus op-specific fields and the current store
+``version``:
+
+    version   -> {ok, version}
+    lookup    -> {ok, version, score, config}      (counts a server-side
+                                                    hit/miss)
+    add       -> {ok, version, n_entries}          (journaled, then refit)
+    refit     -> {ok, version}
+    snapshot  -> {ok, version, n_entries, hits, misses, model}
+
+``model`` is the ``CentroidModel`` payload — the pure lookup state —
+which is what lets clients cache it and serve hot-path lookups locally,
+re-fetching only when ``version`` bumps (every refit is monotonically
+versioned).
+
+Persistence is a JSONL *journal*: each accepted ``add`` is appended (and
+flushed) before it mutates the store, so a crashed service recovers by
+replay. A partially-written final line — the signature of a crash mid
+append — is tolerated and dropped; any other malformed line raises
+``GroundTruthError`` (truncating someone's store silently would re-probe
+every recurring job).
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+from repro.core.groundtruth import GroundTruth, GroundTruthError
+
+__all__ = ["GroundTruthService"]
+
+_OPS = ("version", "lookup", "add", "refit", "snapshot")
+
+
+class GroundTruthService:
+    """Request/response façade over one ``GroundTruth`` + its journal.
+
+    ``handle`` is the whole protocol: transports (in-proc, TCP) differ only
+    in how a request dict reaches it. All ops run under one lock; the store
+    itself is never touched concurrently.
+    """
+
+    def __init__(self, store: Optional[GroundTruth] = None,
+                 path: Optional[str] = None, reset: bool = False, **gt_kw):
+        self.store = store if store is not None else GroundTruth(**gt_kw)
+        self.path = path
+        self._lock = threading.RLock()
+        self._journal = None
+        if path:
+            if reset and os.path.exists(path):
+                os.remove(path)
+            if os.path.exists(path):
+                self._replay(path)
+            self._journal = open(path, "a")
+
+    # ------------------------------------------------------------- protocol
+    def handle(self, request: Dict[str, Any]) -> Dict[str, Any]:
+        try:
+            op = request.get("op")
+            if op not in _OPS:
+                raise ValueError(f"unknown op {op!r}; supported: {_OPS}")
+            with self._lock:
+                out = getattr(self, "_op_" + op)(request)
+                out["ok"] = True
+                out["version"] = self.store.version
+                return out
+        except Exception as e:                  # noqa: BLE001 — wire boundary
+            return {"ok": False, "error": f"{type(e).__name__}: {e}"}
+
+    def _op_version(self, req) -> dict:
+        return {}
+
+    def _op_lookup(self, req) -> dict:
+        score, cfg = self.store.lookup(
+            np.asarray(req["profile"], np.float64))
+        return {"score": score, "config": cfg}
+
+    def _op_add(self, req) -> dict:
+        profile = np.asarray(req["profile"], np.float64)
+        rec = {"op": "add", "profile": profile.tolist(),
+               "workload": str(req["workload"]),
+               "sys_config": dict(req["sys_config"]),
+               "objective": float(req["objective"])}
+        if self._journal is not None:           # write-ahead, then apply
+            self._journal.write(json.dumps(rec) + "\n")
+            self._journal.flush()
+        self.store.add(profile, rec["workload"], rec["sys_config"],
+                       rec["objective"], refit=bool(req.get("refit", True)))
+        return {"n_entries": len(self.store.entries)}
+
+    def _op_refit(self, req) -> dict:
+        self.store.refit()
+        return {}
+
+    def _op_snapshot(self, req) -> dict:
+        model = self.store.centroid_model()
+        return {"n_entries": len(self.store.entries),
+                "hits": self.store.hits, "misses": self.store.misses,
+                "model": None if model is None else model.to_payload()}
+
+    # -------------------------------------------------------------- journal
+    def _replay(self, path: str):
+        with open(path) as f:
+            raw = f.read()
+        tail_open = not raw.endswith("\n")      # crash mid-append
+        records = [line for line in raw.split("\n") if line.strip()]
+        applied = []
+
+        def corrupt(i, why, hint=""):
+            return GroundTruthError(
+                f"corrupt ground-truth journal at {path!r} (record "
+                f"{i + 1}: {why}){hint}; fix or delete the file, or "
+                "relaunch with --store-reset to start from an empty store")
+
+        for i, line in enumerate(records):
+            try:
+                rec = json.loads(line)
+            except ValueError as e:
+                # a record that is not even JSON is either a torn final
+                # append (tolerated, dropped) or real corruption; a record
+                # that *parses* but has the wrong shape is never torn and
+                # always a hard error — e.g. a GroundTruth.save() store
+                # pointed at the journal flag must not be "recovered" into
+                # an empty store
+                if i == len(records) - 1 and tail_open:
+                    break
+                raise corrupt(i, e) from None
+            try:
+                if not isinstance(rec, dict) or rec.get("op") != "add":
+                    looks_like_save = isinstance(rec, list) or (
+                        isinstance(rec, dict) and "entries" in rec)
+                    raise corrupt(
+                        i, f"unexpected record of type "
+                        f"{type(rec).__name__}",
+                        " — this looks like a GroundTruth.save() store "
+                        "file, not a service journal; load it into a "
+                        "GroundTruth and re-add through the service"
+                        if looks_like_save else "")
+                self.store.add(np.asarray(rec["profile"], np.float64),
+                               rec["workload"], dict(rec["sys_config"]),
+                               float(rec["objective"]), refit=False)
+                applied.append(line)
+            except GroundTruthError:
+                raise
+            except (ValueError, KeyError, TypeError, AttributeError) as e:
+                raise corrupt(i, e) from None
+        if tail_open:
+            # repair before we append again: without the trailing newline
+            # the next record would concatenate onto the torn/unterminated
+            # line and corrupt the journal for the *next* recovery
+            tmp = path + ".tmp"
+            with open(tmp, "w") as f:
+                f.write("".join(line + "\n" for line in applied))
+            os.replace(tmp, path)
+        if applied:
+            self.store.refit()
+
+    def close(self):
+        with self._lock:
+            if self._journal is not None:
+                self._journal.close()
+                self._journal = None

@@ -1,0 +1,226 @@
+"""Transports for ``GroundTruthService`` + the ``StoreClient`` facade.
+
+``StoreClient`` exposes the same surface PipeTune already speaks to a bare
+``GroundTruth`` — ``lookup`` / ``add`` / ``hits`` / ``misses`` — over any
+transport:
+
+* ``InprocTransport`` — request dicts go straight into
+  ``GroundTruthService.handle`` (zero serialization; the default for sim
+  runs and tests).
+* ``SocketTransport`` — length-prefixed JSON over TCP (4-byte big-endian
+  length + UTF-8 payload) to a ``GroundTruthTCPServer`` (launch one with
+  ``python -m repro.service``).
+
+Hot-path lookups stay local: the client caches the store's
+``CentroidModel`` (centroids + normalization + radius + per-cluster best
+configs) and evaluates profiles against it with the *same* arithmetic the
+server would use; each lookup only pays a tiny ``version`` ping, and the
+cache is re-fetched when a refit bumps the version. Floats survive the
+JSON round-trip exactly (``repr``-based encoding), so a socket client's
+hit/miss pattern is bit-identical to an in-process run — the acceptance
+property the tests assert.
+"""
+from __future__ import annotations
+
+import json
+import socket
+import socketserver
+import struct
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core.groundtruth import CentroidModel
+from repro.service.service import GroundTruthService
+
+__all__ = ["StoreClient", "StoreError", "InprocTransport", "SocketTransport",
+           "GroundTruthTCPServer", "serve"]
+
+
+class StoreError(RuntimeError):
+    """A store request failed (server error or broken transport)."""
+
+
+# ---------------------------------------------------------------------------
+# transports: anything with request(dict) -> dict and close()
+# ---------------------------------------------------------------------------
+
+class InprocTransport:
+    """Direct dispatch into a service living in this process."""
+
+    def __init__(self, service: GroundTruthService):
+        self.service = service
+
+    def request(self, req: Dict[str, Any]) -> Dict[str, Any]:
+        return self.service.handle(req)
+
+    def close(self):
+        pass
+
+
+def _send_msg(sock: socket.socket, payload: dict) -> None:
+    data = json.dumps(payload).encode("utf-8")
+    sock.sendall(struct.pack(">I", len(data)) + data)
+
+
+def _recv_exact(sock: socket.socket, n: int) -> bytes:
+    buf = b""
+    while len(buf) < n:
+        chunk = sock.recv(n - len(buf))
+        if not chunk:
+            raise ConnectionError("store connection closed")
+        buf += chunk
+    return buf
+
+
+def _recv_msg(sock: socket.socket) -> dict:
+    (n,) = struct.unpack(">I", _recv_exact(sock, 4))
+    return json.loads(_recv_exact(sock, n).decode("utf-8"))
+
+
+class SocketTransport:
+    """One persistent length-prefixed-JSON connection; thread-safe."""
+
+    def __init__(self, host: str = "127.0.0.1", port: int = 7077,
+                 timeout: float = 30.0):
+        self.addr = (host, port)
+        self._sock = socket.create_connection(self.addr, timeout=timeout)
+        # request/response over tiny messages: Nagle only adds latency
+        self._sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        self._lock = threading.Lock()
+
+    def request(self, req: Dict[str, Any]) -> Dict[str, Any]:
+        try:
+            with self._lock:
+                _send_msg(self._sock, req)
+                return _recv_msg(self._sock)
+        except (OSError, ConnectionError) as e:
+            raise StoreError(
+                f"store at {self.addr[0]}:{self.addr[1]} unreachable: {e}"
+            ) from None
+
+    def close(self):
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+
+
+# ---------------------------------------------------------------------------
+# client
+# ---------------------------------------------------------------------------
+
+class StoreClient:
+    """GroundTruth-compatible client over a transport (see module doc).
+
+    ``hits``/``misses`` count this client's own lookups — what a
+    ``JobResult`` reports for the job that used this client; the server
+    keeps aggregate counters across all clients (``snapshot()``).
+    """
+
+    def __init__(self, transport):
+        self.transport = transport
+        self._lock = threading.Lock()
+        self._model: Optional[CentroidModel] = None
+        self._model_version: Optional[int] = None
+        self.hits = 0
+        self.misses = 0
+
+    # -------------------------------------------------------------- plumbing
+    def _request(self, req: Dict[str, Any]) -> Dict[str, Any]:
+        resp = self.transport.request(req)
+        if not resp.get("ok"):
+            raise StoreError(resp.get("error", "store request failed"))
+        return resp
+
+    def version(self) -> int:
+        return self._request({"op": "version"})["version"]
+
+    def _model_at_version(self, version: int) -> Optional[CentroidModel]:
+        """The cached centroid model, re-fetched iff `version` moved past
+        the cache."""
+        with self._lock:
+            if self._model_version == version:
+                return self._model
+        snap = self._request({"op": "snapshot"})
+        with self._lock:
+            self._model = (None if snap["model"] is None
+                           else CentroidModel.from_payload(snap["model"]))
+            self._model_version = snap["version"]
+            return self._model
+
+    # ------------------------------------------------------- store interface
+    def lookup(self, profile: np.ndarray) -> Tuple[float, Optional[dict]]:
+        model = self._model_at_version(self.version())
+        score, cfg = (0.0, None) if model is None else model.evaluate(profile)
+        with self._lock:
+            if cfg is None:
+                self.misses += 1
+            else:
+                self.hits += 1
+        return score, cfg
+
+    def add(self, profile: np.ndarray, workload: str, sys_config: dict,
+            objective: float, refit: bool = True) -> int:
+        resp = self._request({
+            "op": "add",
+            "profile": np.asarray(profile, np.float64).tolist(),
+            "workload": workload, "sys_config": dict(sys_config),
+            "objective": float(objective), "refit": refit})
+        return resp["version"]
+
+    def refit(self) -> int:
+        return self._request({"op": "refit"})["version"]
+
+    def snapshot(self) -> Dict[str, Any]:
+        return self._request({"op": "snapshot"})
+
+    def close(self):
+        self.transport.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+
+# ---------------------------------------------------------------------------
+# TCP server
+# ---------------------------------------------------------------------------
+
+class _StoreRequestHandler(socketserver.BaseRequestHandler):
+    def handle(self):
+        while True:
+            try:
+                req = _recv_msg(self.request)
+            except (ConnectionError, OSError, ValueError):
+                return                           # client went away
+            _send_msg(self.request, self.server.service.handle(req))
+
+
+class GroundTruthTCPServer(socketserver.ThreadingTCPServer):
+    """Serve one ``GroundTruthService`` to many socket clients. Port 0
+    binds an ephemeral port (read it back from ``server_address``)."""
+
+    allow_reuse_address = True
+    daemon_threads = True
+    disable_nagle_algorithm = True
+
+    def __init__(self, address: Tuple[str, int], service: GroundTruthService):
+        super().__init__(address, _StoreRequestHandler)
+        self.service = service
+
+
+def serve(service: GroundTruthService, host: str = "127.0.0.1",
+          port: int = 7077, background: bool = False) -> GroundTruthTCPServer:
+    """Run a TCP store server; ``background=True`` serves from a daemon
+    thread and returns immediately (tests, co-located services)."""
+    server = GroundTruthTCPServer((host, port), service)
+    if background:
+        threading.Thread(target=server.serve_forever, daemon=True).start()
+    else:
+        server.serve_forever()
+    return server
