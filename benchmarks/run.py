@@ -6,10 +6,16 @@ headline result. Full (slow) versions: run each module directly with --full.
 
 A machine-readable summary (per-benchmark wall time + headline metric)
 lands in ``BENCH_results.json`` (override with ``$BENCH_OUT``) so CI can
-archive the perf trajectory run over run.
+archive the perf trajectory run over run. ``--baseline PATH`` compares this
+run's per-bench wall times against a previous summary (e.g. the committed
+``BENCH_results.json``) and prints a delta table, flagging anything slower
+than ``--regress-threshold`` (default 1.5x); add ``--fail-on-regress`` to
+turn flags into a nonzero exit (off by default — CI wall clocks are noisy,
+the table in the job log is the signal).
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import time
@@ -184,7 +190,65 @@ def bench_roofline():
     return f"n={out['n']};dom={out['dominant']};mfu_max={out['mfu_max']:.1e}"
 
 
-def main() -> None:
+def load_baseline(path):
+    # the comparison is advisory: a missing or mangled baseline must not
+    # stop the benchmarks from running
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except FileNotFoundError:
+        print(f"# no baseline at {path}; skipping comparison")
+    except (OSError, ValueError) as e:
+        print(f"# unreadable baseline at {path} ({e}); skipping comparison")
+    return None
+
+
+def compare_to_baseline(baseline, results, threshold=1.5):
+    """Per-bench wall-time delta table vs. a previous summary; returns the
+    names regressing past `threshold` (new benchmarks and removed ones are
+    reported but never flagged)."""
+    base = {r["name"]: r["us_per_call"] for r in baseline.get("benchmarks",
+                                                              [])}
+    regressions = []
+    print(f"# baseline comparison (flag at >{threshold:.2f}x):")
+    print(f"# {'benchmark':<24} {'base_ms':>10} {'now_ms':>10} "
+          f"{'ratio':>7}  flag")
+    for r in results:
+        b = base.pop(r["name"], None)
+        if b is None or b <= 0:
+            print(f"# {r['name']:<24} {'-':>10} "
+                  f"{r['us_per_call'] / 1e3:>10.1f} {'-':>7}  new")
+            continue
+        ratio = r["us_per_call"] / b
+        flag = ""
+        if ratio > threshold:
+            flag = "REGRESSION"
+            regressions.append(r["name"])
+        print(f"# {r['name']:<24} {b / 1e3:>10.1f} "
+              f"{r['us_per_call'] / 1e3:>10.1f} {ratio:>6.2f}x  {flag}")
+    for name, b in base.items():
+        print(f"# {name:<24} {b / 1e3:>10.1f} {'-':>10} {'-':>7}  removed")
+    if regressions:
+        print(f"# {len(regressions)} benchmark(s) regressed "
+              f">{threshold:.2f}x: {', '.join(regressions)}")
+    else:
+        print("# no wall-time regressions vs baseline")
+    return regressions
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", default=None,
+                    help="previous BENCH_results.json to diff wall times "
+                         "against (read before this run overwrites it)")
+    ap.add_argument("--regress-threshold", type=float, default=1.5,
+                    help="flag benchmarks slower than this ratio")
+    ap.add_argument("--fail-on-regress", action="store_true",
+                    help="exit nonzero when any benchmark is flagged")
+    args = ap.parse_args(argv)
+    # read the baseline up front: BENCH_OUT may point at the same file
+    baseline = load_baseline(args.baseline) if args.baseline else None
+
     # every bench here already runs its module's quick mode (the scaffold
     # contract: full/slow versions live behind each module's own --full);
     # the summary is written even when a benchmark dies, so a failing CI
@@ -193,6 +257,11 @@ def main() -> None:
         _run_all()
     finally:
         write_summary()
+    if baseline is not None:
+        regressions = compare_to_baseline(baseline, RESULTS,
+                                          threshold=args.regress_threshold)
+        if regressions and args.fail_on_regress:
+            raise SystemExit(1)
 
 
 def _run_all() -> None:

@@ -4,13 +4,16 @@ Layers (module imports go only downward; the one upward edge is
 ``TrialRunner.run_job`` lazily resolving scheduler *names* through
 ``repro.api.registry`` at call time — scheduler instances need no api):
 
-    repro.api         Experiment facade, registries, executors, Backend
-                      protocol — the public surface every entry point uses
+    repro.api         Experiment facade, registries, executors, Backend +
+                      Worker protocols — the public surface every entry
+                      point uses
     repro.core        runners (PipeTune / TuneV1 / TuneV2), ask/tell
-                      schedulers, backends, ground-truth store
+                      schedulers, backends, ground-truth store, the
+                      Worker protocol + pool drive loop
     repro.cluster     SimBackend + discrete-event multi-tenant simulation
     repro.service     shared ground-truth store service (in-proc / TCP
-                      transports) + the multi-backend sharded executor
+                      transports), the multi-backend sharded executor, and
+                      the remote trial worker (python -m repro.worker)
 
 Quickstart::
 
@@ -24,8 +27,11 @@ from repro.api.backend import (  # noqa: F401
     Backend, BackendCapabilities, backend_capabilities)
 from repro.api.executor import (  # noqa: F401
     ClusterTrialExecutor, ParallelTrialExecutor, SerialTrialExecutor,
-    ShardedTrialExecutor)
+    ShardedTrialExecutor, WorkerPoolExecutor)
 from repro.api.experiment import Experiment  # noqa: F401
+from repro.api.worker import (  # noqa: F401
+    EngineWorker, InprocWorker, RemoteWorker, ThreadWorker, TrialCompletion,
+    Worker, WorkerCapabilities, WorkerPool)
 from repro.api.registry import (  # noqa: F401
     available_backends, available_executors, available_schedulers,
     available_tuners, default_sys_space, make_backend, make_executor,

@@ -2,14 +2,20 @@
 live in ``repro.core.executor`` (the core drive loop has no upward
 dependency); the event-driven cluster executor lives in
 ``repro.cluster.executor``; the multi-backend sharded executor lives in
-``repro.service.sharded``. ``make_executor`` here is the registry resolver
-("serial" / "parallel" / "cluster" / "sharded" / plugin names, or an int
-parallelism count for compatibility)."""
+``repro.service.sharded``; the composable worker-pool executor (remote
+workers + local shards) lives in ``repro.core.worker``. All of them are
+thin placement policies over the one ``WorkerPool`` drive loop — see
+``repro.api.worker`` for the protocol. ``make_executor`` here is the
+registry resolver ("serial" / "parallel" / "cluster" / "sharded" /
+"workers" / plugin names, or an int parallelism count for compatibility).
+"""
 from repro.api.registry import make_executor  # noqa: F401
 from repro.cluster.executor import ClusterTrialExecutor  # noqa: F401
 from repro.core.executor import (  # noqa: F401
     ParallelTrialExecutor, SerialTrialExecutor)
+from repro.core.worker import WorkerPoolExecutor  # noqa: F401
 from repro.service.sharded import ShardedTrialExecutor  # noqa: F401
 
 __all__ = ["SerialTrialExecutor", "ParallelTrialExecutor",
-           "ClusterTrialExecutor", "ShardedTrialExecutor", "make_executor"]
+           "ClusterTrialExecutor", "ShardedTrialExecutor",
+           "WorkerPoolExecutor", "make_executor"]

@@ -127,6 +127,34 @@ class Experiment:
                                    sys_space=self.resolved_sys_space(),
                                    groundtruth=self._groundtruth, **kw)
 
+    def remote_runner_spec(self) -> Optional[Dict[str, Any]]:
+        """The recipe remote workers use to mirror this experiment's runner
+        (tuner/backend registry names + kwargs). None when the tuner or
+        backend is an instance, or a custom system space is set — none of
+        those can travel over the wire, and a worker quietly substituting
+        its own defaults would merge wrong scores (the executor raises
+        instead). When the ground-truth client reaches a TCP store, its
+        address rides along so every worker shares the same
+        ``GroundTruthService``."""
+        tuner, tuner_kw = self._tuner
+        backend, backend_kw = self._backend
+        if not isinstance(tuner, str) or not isinstance(backend, str) or \
+                self._sys_space is not None:
+            return None
+        addr = getattr(getattr(self._groundtruth, "transport", None),
+                       "addr", None)
+        if self._groundtruth is not None and addr is None:
+            # an in-proc store (or bare GroundTruth) cannot be reached from
+            # another process: shipping the spec without it would quietly
+            # split the tuning state between local and remote stores
+            return None
+        spec: Dict[str, Any] = {"tuner": tuner, "tuner_kw": dict(tuner_kw),
+                                "backend": backend,
+                                "backend_kw": dict(backend_kw)}
+        if addr is not None:
+            spec["store"] = f"tcp://{addr[0]}:{addr[1]}"
+        return spec
+
     def build_executor(self, parallelism: int = 1):
         """Resolve the configured executor: ``with_executor`` name/instance,
         falling back to serial (or thread-pool for `parallelism` > 1)."""
@@ -134,6 +162,8 @@ class Experiment:
             return registry.make_executor(parallelism)
         executor, kw = self._executor
         if isinstance(executor, str):
+            # executors needing the remote runner recipe get it uniformly
+            # through the configure_runner_spec hook in run()
             return registry.make_executor(executor, **kw)
         if kw:
             raise ValueError("executor kwargs require a registry name, "
@@ -162,9 +192,23 @@ class Experiment:
                     "scheduler instance is already exhausted (a previous "
                     "run() consumed it) — pass a fresh instance or use a "
                     "registry name, which rebuilds per run")
+        owned = False       # close executors nobody else holds a handle to
         if executor is None:
+            owned = self._executor is None or \
+                isinstance(self._executor[0], str)
             executor = self.build_executor(parallelism)
         elif isinstance(executor, str):
             executor = registry.make_executor(executor)
-        return runner.run_job(self.job, scheduler=scheduler,
-                              executor=executor, **kw)
+            owned = True
+        # executors carrying remote workers mirror the runner out of process:
+        # hand them the recipe unless they were built with an explicit one
+        configure = getattr(executor, "configure_runner_spec", None)
+        if configure is not None:
+            configure(self.remote_runner_spec())
+        try:
+            return runner.run_job(self.job, scheduler=scheduler,
+                                  executor=executor, **kw)
+        finally:
+            close = getattr(executor, "close", None)
+            if owned and close is not None:
+                close()

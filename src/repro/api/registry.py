@@ -198,8 +198,33 @@ def _make_sharded_executor(backends=None, capacity=1, default_sys=None, **kw):
                                 default_sys=default_sys, **kw)
 
 
+def _make_workers_executor(workers=None, runner_spec=None, sticky=True,
+                           **worker_kw):
+    """Composable worker pool: each entry of `workers` is a Worker
+    instance, ``tcp://HOST:PORT`` of a running ``python -m repro.worker``,
+    ``"inproc"``, or a backend registry name (a local in-process shard
+    pinned to that backend). `worker_kw` (connect_timeout, connect_retries,
+    retry_backoff_s) passes through to remote workers."""
+    from repro.core.worker import InprocWorker, WorkerPoolExecutor
+    resolved = []
+    for spec in (workers or ["inproc"]):
+        if not isinstance(spec, str):
+            resolved.append(spec)                       # a Worker instance
+        elif spec.startswith("tcp://"):
+            from repro.service.dispatch import RemoteWorker
+            resolved.append(RemoteWorker(spec, runner_spec=runner_spec,
+                                         **worker_kw))
+        elif spec == "inproc":
+            resolved.append(InprocWorker())
+        else:
+            resolved.append(InprocWorker(backend=make_backend(spec),
+                                         tag=spec))
+    return WorkerPoolExecutor(resolved, sticky=sticky)
+
+
 register_executor("serial", lambda: SerialTrialExecutor())
 register_executor("parallel",
                   lambda parallelism=4: ParallelTrialExecutor(parallelism))
 register_executor("cluster", _make_cluster_executor)
 register_executor("sharded", _make_sharded_executor)
+register_executor("workers", _make_workers_executor)

@@ -1,0 +1,19 @@
+"""Public re-export of the Worker protocol behind every executor.
+
+The protocol and local workers live in ``repro.core.worker`` (the core
+drive loop has no upward dependency); the simulated-node worker lives in
+``repro.cluster.worker``; the remote worker + wire protocol live in
+``repro.service.dispatch`` (server: ``python -m repro.worker``). Every
+executor — serial, parallel, cluster, sharded, and the composable
+``"workers"`` pool — is a placement policy over a ``WorkerPool`` of these.
+"""
+from repro.cluster.worker import EngineWorker, TrialDispatch  # noqa: F401
+from repro.core.worker import (  # noqa: F401
+    InprocWorker, ThreadWorker, TrialCompletion, Worker, WorkerCapabilities,
+    WorkerPool, WorkerPoolExecutor)
+from repro.service.dispatch import RemoteWorker, WorkerError  # noqa: F401
+
+__all__ = ["Worker", "WorkerCapabilities", "WorkerPool",
+           "WorkerPoolExecutor", "TrialCompletion", "TrialDispatch",
+           "InprocWorker", "ThreadWorker", "EngineWorker", "RemoteWorker",
+           "WorkerError"]

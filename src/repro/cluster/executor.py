@@ -8,7 +8,10 @@ straggler/failure/reconfiguration costs *as it executes*, and completion
 order is decided by the engine clock — so queueing delay and faults feed
 back into when the scheduler hears about each score.
 
-Two drive modes:
+Like every executor it is a thin placement policy over a worker pool — here
+a pool of exactly one ``repro.cluster.worker.EngineWorker`` whose capacity
+is the node count, with ``_placement`` as the policy hook the sharded
+executor overrides. The pool supplies both drive modes:
 
 * ``run_wave`` — barrier semantics, results merged in wave order. With
   faults disabled this is bit-identical to ``SerialTrialExecutor`` on a
@@ -21,40 +24,17 @@ Two drive modes:
   wave-at-a-time; asynchronous schedulers (``AsyncASHA``) promote past
   straggling wave-mates — the asynchrony the thread-pool executor could
   never show, because it only returned control at wave boundaries.
-
-The engine clock persists across waves: a multi-wave job accumulates
-simulated time exactly like a tuning job occupying the cluster would.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
-from repro.cluster.engine import (ClusterConfig, EventEngine,
-                                  charged_epoch_durations, reconfig_charge_s)
-from repro.core.executor import _apply_clones
+from repro.cluster.engine import ClusterConfig
+from repro.cluster.worker import EngineWorker, TrialDispatch  # noqa: F401
 from repro.core.schedulers import TrialProposal
+from repro.core.worker import WorkerPool
 
 __all__ = ["ClusterTrialExecutor", "TrialDispatch"]
-
-
-@dataclasses.dataclass
-class TrialDispatch:
-    """One proposal's trip through the cluster (timing + outcome)."""
-    trial_id: str
-    epochs: int                     # the proposal's total-epoch target
-    score: float = float("nan")
-    node: int = -1
-    backend: Optional[str] = None   # shard tag (sharded executor only)
-    submit_s: float = 0.0
-    start_s: float = 0.0
-    finish_s: float = 0.0
-    n_stragglers: int = 0
-    n_failures: int = 0
-
-    @property
-    def queue_s(self) -> float:
-        return self.start_s - self.submit_s
 
 
 class ClusterTrialExecutor:
@@ -71,77 +51,48 @@ class ClusterTrialExecutor:
             raise ValueError("pass either a ClusterConfig or field kwargs, "
                              "not both")
         self.cfg = cluster if cluster is not None else ClusterConfig(**cfg_kw)
-        self.default_sys = dict(default_sys) if default_sys else None
-        self.engine = EventEngine(self.cfg)
-        self.history: List[TrialDispatch] = []  # every dispatch, finish order
+        # self._placement resolves to the subclass override (sharding) at
+        # call time — the worker only holds the bound method
+        self.worker = EngineWorker(self.cfg, default_sys=default_sys,
+                                   placement=self._placement)
+        self.pool = WorkerPool([self.worker])
         self.parallelism = self.cfg.n_nodes
-        self._prev_sys: Dict[str, dict] = {}    # last sys config per trial
+
+    @property
+    def engine(self):
+        return self.worker.engine
+
+    @property
+    def history(self) -> List[TrialDispatch]:
+        return self.worker.history
+
+    @property
+    def default_sys(self) -> Optional[dict]:
+        return self.worker.default_sys
 
     @property
     def sim_now(self) -> float:
         """Current simulated time (the job's makespan once it finishes)."""
         return self.engine.now
 
-    # ---------------------------------------------------------------- wave
+    # ---------------------------------------------------------- drive loops
     def run_wave(self, runner, workload: str,
                  proposals: Sequence[TrialProposal]
                  ) -> List[Tuple[TrialProposal, float]]:
-        _apply_clones(runner, proposals)
-        dispatches = [self._submit(runner, workload, p) for p in proposals]
-        self.engine.run()
-        return [(p, d.score) for p, d in zip(proposals, dispatches)]
+        return self.pool.run_wave(runner, workload, proposals)
 
-    # --------------------------------------------------------- async drive
     def drive(self, runner, workload: str, scheduler) -> None:
         """Event-driven ask/tell loop (see module docstring). Ends when the
         scheduler has nothing outstanding and releases no further work."""
-        outstanding: Dict[str, TrialDispatch] = {}
-        while True:
-            wave = scheduler.suggest()
-            if wave:
-                # clone sources must be wave-boundary snapshots, so apply
-                # for the whole wave before any of it starts executing
-                _apply_clones(runner, wave)
-                for p in wave:
-                    outstanding[p.trial_id] = self._submit(runner, workload, p)
-                continue
-            if not outstanding:
-                break
-            stats = self.engine.run_next_completion()
-            assert stats is not None, "engine drained with trials outstanding"
-            dispatch = outstanding.pop(stats.task_id)
-            scheduler.report(dispatch.trial_id, dispatch.score)
+        self.pool.drive(runner, workload, scheduler)
 
-    # ------------------------------------------------------------ internals
+    def close(self) -> None:
+        self.pool.close()
+
+    # ------------------------------------------------------------ placement
     def _placement(self, runner, p: TrialProposal):
         """(node tag, backend) for one proposal. The base executor places
         anywhere and runs on the runner's own backend; the sharded executor
         (``repro.service.sharded``) overrides this to bind each trial to a
         backend-tagged node group."""
         return None, None
-
-    def _submit(self, runner, workload: str,
-                p: TrialProposal) -> TrialDispatch:
-        tag, backend = self._placement(runner, p)
-        dispatch = TrialDispatch(trial_id=p.trial_id, epochs=p.epochs,
-                                 submit_s=self.engine.now, backend=tag)
-        charge = reconfig_charge_s(self.cfg, runner)
-        process = charged_epoch_durations(
-            runner.trial_epochs(workload, p.trial_id, p.hparams, p.epochs,
-                                backend=backend),
-            p.trial_id, self._prev_sys, charge, self.default_sys)
-
-        self.engine.submit(p.trial_id, process, on_done=self._finisher(
-            runner, p, dispatch), tag=tag)
-        return dispatch
-
-    def _finisher(self, runner, p: TrialProposal, dispatch: TrialDispatch):
-        def on_done(stats):
-            dispatch.score = runner.records[p.trial_id].score(runner.objective)
-            dispatch.node = stats.node
-            dispatch.start_s = stats.start_s
-            dispatch.finish_s = stats.finish_s
-            dispatch.n_stragglers = stats.n_stragglers
-            dispatch.n_failures = stats.n_failures
-            self.history.append(dispatch)
-        return on_done

@@ -6,6 +6,13 @@ independent ``TrialProposal``s. Executors return ``[(proposal, score), ...]``
 (rung promotion, PBT exploit, best tracking) never depend on scheduling
 noise.
 
+Since the worker-dispatch redesign these executors are thin placement
+policies over a ``repro.core.worker.WorkerPool``: serial is a pool of one
+``InprocWorker`` (bit-identical to the historical inline loop), parallel a
+pool of one ``ThreadWorker`` with N lanes. The pool owns the drive loop;
+see ``repro.core.worker`` for the protocol and the other worker families
+(simulated nodes, remote processes).
+
 Reproducibility: on a backend whose capabilities declare ``deterministic``
 and a runner without cross-trial shared state (TuneV1/TuneV2),
 ``parallelism=N`` is bit-identical to serial execution. PipeTune couples
@@ -21,39 +28,42 @@ source's snapshot at the wave boundary, not mid-training.
 """
 from __future__ import annotations
 
-import concurrent.futures as cf
 from typing import List, Sequence, Tuple
 
 from repro.core.schedulers import TrialProposal
+from repro.core.worker import InprocWorker, ThreadWorker, WorkerPool
 
 __all__ = ["SerialTrialExecutor", "ParallelTrialExecutor", "make_executor"]
 
 
 def _apply_clones(runner, proposals: Sequence[TrialProposal]) -> None:
+    """Wave-boundary clone application (kept for callers that drive trials
+    without a pool, e.g. the legacy ClusterSim path)."""
     for p in proposals:
         if p.clone_from is not None:
             runner.clone_trial(p.trial_id, p.clone_from)
 
 
-def _score(runner, workload: str, p: TrialProposal) -> float:
-    rec = runner.run_trial(workload, p.trial_id, p.hparams, p.epochs)
-    return rec.score(runner.objective)
-
-
 class SerialTrialExecutor:
-    """Default executor: trials of a wave run one after another in order."""
+    """Default executor: trials of a wave run one after another in order
+    (a pool of one synchronous in-process worker)."""
 
     parallelism = 1
+
+    def __init__(self):
+        self.pool = WorkerPool([InprocWorker()])
 
     def run_wave(self, runner, workload: str,
                  proposals: Sequence[TrialProposal]
                  ) -> List[Tuple[TrialProposal, float]]:
-        _apply_clones(runner, proposals)
-        return [(p, _score(runner, workload, p)) for p in proposals]
+        return self.pool.run_wave(runner, workload, proposals)
+
+    def close(self) -> None:
+        self.pool.close()
 
 
 class ParallelTrialExecutor:
-    """Thread-pool executor over a wave's independent proposals.
+    """Thread-lane executor over a wave's independent proposals.
 
     Threads (not processes) because trial epochs release the GIL inside
     jitted XLA computations, and because runner/backend state (step caches,
@@ -66,18 +76,15 @@ class ParallelTrialExecutor:
         if parallelism < 1:
             raise ValueError(f"parallelism must be >= 1, got {parallelism}")
         self.parallelism = parallelism
+        self.pool = WorkerPool([ThreadWorker(capacity=parallelism)])
 
     def run_wave(self, runner, workload: str,
                  proposals: Sequence[TrialProposal]
                  ) -> List[Tuple[TrialProposal, float]]:
-        _apply_clones(runner, proposals)
-        if len(proposals) <= 1:
-            return [(p, _score(runner, workload, p)) for p in proposals]
-        with cf.ThreadPoolExecutor(
-                max_workers=min(self.parallelism, len(proposals))) as pool:
-            futures = [pool.submit(_score, runner, workload, p)
-                       for p in proposals]
-            return [(p, f.result()) for p, f in zip(proposals, futures)]
+        return self.pool.run_wave(runner, workload, proposals)
+
+    def close(self) -> None:
+        self.pool.close()
 
 
 def make_executor(parallelism: int = 1):

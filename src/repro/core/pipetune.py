@@ -41,6 +41,7 @@ class TrialRecord:
     sys_history: List[dict] = dataclasses.field(default_factory=list)
     gt_hit: bool = False
     probe_epochs: int = 0
+    remote: bool = False        # epochs ran on a remote worker's runner
 
     @property
     def accuracy(self) -> float:
@@ -167,6 +168,15 @@ class TrialRunner:
             pass
         return self.records[trial_id]
 
+    def install_record(self, record: TrialRecord) -> None:
+        """Adopt a trial record produced elsewhere (a remote worker ran the
+        epochs on its own runner); job-level bookkeeping — best trial,
+        tuning time, energy, ground-truth counters — then sees it like any
+        locally-run trial."""
+        record.remote = True
+        with self._hook_lock:
+            self.records[record.trial_id] = record
+
     # -- job level -----------------------------------------------------------
     def run_job(self, job: HPTJob,
                 scheduler: Union[str, AskTellScheduler] = "hyperband",
@@ -189,36 +199,58 @@ class TrialRunner:
             sched = make_scheduler(scheduler, job, **sched_kw)
         else:
             sched = scheduler
+        executor_owned = executor is None
         executor = executor if executor is not None \
             else make_executor(parallelism)
-        drive = getattr(executor, "drive", None)
-        if drive is not None:
-            # event-driven executors own the ask/tell loop: they dispatch
-            # proposals the moment the scheduler releases them and report
-            # each trial at its *simulated* completion time, which is what
-            # lets AsyncASHA promote past straggling wave-mates
-            drive(self, job.workload, sched)
-        else:
-            while True:
-                wave = sched.suggest()
-                if not wave:
-                    break
-                for proposal, score in executor.run_wave(self, job.workload,
-                                                         wave):
-                    sched.report(proposal.trial_id, score)
-        best_hp, best_score = sched.best()
-        best_rec = max(self.records.values(),
-                       key=lambda r: r.score(self.objective), default=None)
-        gt = getattr(self, "groundtruth", None)
-        return JobResult(
-            best_hparams=best_hp or {}, best_score=best_score,
-            best_record=best_rec,
-            tuning_time_s=sum(r.train_time for r in self.records.values()),
-            wall_time_s=time.time() - t0,
-            energy_j=sum(r.energy for r in self.records.values()),
-            records=dict(self.records),
-            gt_hits=gt.hits if gt else 0, gt_misses=gt.misses if gt else 0,
-            sim_time_s=float(getattr(executor, "sim_now", 0.0)))
+        try:
+            drive = getattr(executor, "drive", None)
+            if drive is not None:
+                # event-driven executors own the ask/tell loop: they dispatch
+                # proposals the moment the scheduler releases them and report
+                # each trial at its *simulated* completion time, which is
+                # what lets AsyncASHA promote past straggling wave-mates
+                drive(self, job.workload, sched)
+            else:
+                while True:
+                    wave = sched.suggest()
+                    if not wave:
+                        break
+                    for proposal, score in executor.run_wave(
+                            self, job.workload, wave):
+                        sched.report(proposal.trial_id, score)
+            best_hp, best_score = sched.best()
+            best_rec = max(self.records.values(),
+                           key=lambda r: r.score(self.objective),
+                           default=None)
+            gt = getattr(self, "groundtruth", None)
+            gt_hits = gt.hits if gt else 0
+            gt_misses = gt.misses if gt else 0
+            if gt is not None:
+                # trials that ran on remote workers did their store lookups
+                # out of process (one per trial, after its profiling epoch),
+                # so the local client never saw them; their records carry
+                # the outcome home — add them to the local counters (a
+                # mixed local+remote pool contributes to both)
+                remote = [r for r in self.records.values()
+                          if r.remote and r.epochs]
+                hits = sum(1 for r in remote if r.gt_hit)
+                gt_hits += hits
+                gt_misses += len(remote) - hits
+            return JobResult(
+                best_hparams=best_hp or {}, best_score=best_score,
+                best_record=best_rec,
+                tuning_time_s=sum(r.train_time
+                                  for r in self.records.values()),
+                wall_time_s=time.time() - t0,
+                energy_j=sum(r.energy for r in self.records.values()),
+                records=dict(self.records),
+                gt_hits=gt_hits, gt_misses=gt_misses,
+                sim_time_s=float(getattr(executor, "sim_now", 0.0)))
+        finally:
+            if executor_owned:
+                close = getattr(executor, "close", None)
+                if close is not None:
+                    close()
 
     def clone_trial(self, dst_id: str, src_id: str):
         """PBT exploit: copy trial state (params/opt/epoch) src -> dst.

@@ -1,0 +1,418 @@
+"""The ``Worker`` protocol and the one drive loop behind every executor.
+
+Before this module the execution layer was four bespoke executors
+(serial / parallel / cluster / sharded), each owning its own loop over a
+scheduler wave. Now a *worker* is the unit of trial execution —
+
+    submit(trial, epochs)   accept one TrialProposal (non-blocking)
+    poll(timeout)           completions since the last poll; a positive
+                            timeout may block (thread/remote workers) or
+                            advance simulated time (engine workers)
+    capabilities()          kind / capacity / simulated / remote
+    close()                 release threads, sockets, subprocess handles
+
+— and every executor is a thin *placement policy* over a ``WorkerPool``:
+which worker gets the next proposal. The pool owns the two drive loops all
+executors share: ``run_wave`` (barrier semantics, results merged in wave
+order — the determinism anchor) and ``drive`` (event-driven ask/tell:
+dispatch proposals the moment the scheduler releases them, report each at
+completion — what lets AsyncASHA promote past stragglers on the engine).
+
+Worker families:
+
+* ``InprocWorker`` — runs the trial synchronously at ``submit`` on the
+  shared runner. A pool of exactly one is bit-identical to the historical
+  serial executor. An optional pinned ``backend`` makes it a local shard.
+* ``ThreadWorker`` — a host thread pool of ``capacity`` lanes; the
+  parallel executor is a pool of one of these.
+* ``EngineWorker`` (``repro.cluster.worker``) — dispatches epochs onto
+  simulated cluster nodes on the discrete-event clock.
+* ``RemoteWorker`` (``repro.service.dispatch``) — speaks the trial-dispatch
+  wire protocol to a ``python -m repro.worker`` process.
+
+Clone requests (``proposal.clone_from``, the PBT exploit) are applied at
+the wave boundary, before any trial of the wave starts, routed to the
+worker that holds the source trial's state (sticky pools bind the clone to
+that same worker).
+"""
+from __future__ import annotations
+
+import concurrent.futures as cf
+import dataclasses
+import queue
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.schedulers import TrialProposal
+
+__all__ = ["WorkerCapabilities", "TrialCompletion", "Worker",
+           "InprocWorker", "ThreadWorker", "WorkerPool",
+           "WorkerPoolExecutor"]
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkerCapabilities:
+    """What one worker is: declared, like ``BackendCapabilities``."""
+    kind: str                    # "inproc" | "thread" | "sim" | "remote"
+    capacity: int = 1            # trials the worker can hold concurrently
+    simulated: bool = False      # completions carry simulated, not wall time
+    remote: bool = False         # trials execute in another process
+
+
+@dataclasses.dataclass
+class TrialCompletion:
+    """One finished trial, as reported by ``Worker.poll``."""
+    trial_id: str
+    score: float
+    dispatch: Any = None         # engine workers attach their TrialDispatch
+    error: Optional[BaseException] = None
+
+
+class Worker:
+    """Base implementation of the worker protocol (see module docstring).
+
+    ``bind`` attaches the runner + workload before any submits; the pool
+    re-binds when either changes (remote workers reset their mirror runner
+    on re-bind). ``clone`` applies a PBT exploit on whatever holds the
+    source trial's state — the shared runner for local workers.
+    """
+
+    kind = "worker"
+
+    def __init__(self):
+        self.runner = None
+        self.workload: Optional[str] = None
+
+    def bind(self, runner, workload: str) -> None:
+        self.runner, self.workload = runner, workload
+
+    def capabilities(self) -> WorkerCapabilities:
+        return WorkerCapabilities(kind=self.kind)
+
+    def clone(self, dst_id: str, src_id: str) -> None:
+        self.runner.clone_trial(dst_id, src_id)
+
+    @property
+    def outstanding(self) -> int:
+        return 0
+
+    def submit(self, trial: TrialProposal,
+               epochs: Optional[int] = None) -> None:
+        raise NotImplementedError
+
+    def poll(self, timeout: float = 0.0) -> List[TrialCompletion]:
+        return []
+
+    def close(self) -> None:
+        pass
+
+    def _poll_queue(self, completions: "queue.Queue[TrialCompletion]",
+                    timeout: float) -> List[TrialCompletion]:
+        """Shared poll body for workers that complete asynchronously into a
+        queue: block up to `timeout` for the first completion when work is
+        outstanding, then drain whatever else is ready."""
+        out: List[TrialCompletion] = []
+        try:
+            if timeout > 0 and self.outstanding and completions.empty():
+                out.append(completions.get(timeout=timeout))
+            while True:
+                out.append(completions.get_nowait())
+        except queue.Empty:
+            pass
+        return out
+
+
+def _run_on(runner, workload: str, trial: TrialProposal, epochs: int,
+            backend=None) -> float:
+    """Execute one proposal on `runner` and return its score. With no
+    pinned backend this is exactly the historical serial executor's
+    ``run_trial`` path (kept so minimal duck-typed runners keep working);
+    a pinned backend routes through ``trial_epochs(backend=...)`` so the
+    trial (and its rung resumes) stick to that backend."""
+    if backend is None:
+        rec = runner.run_trial(workload, trial.trial_id, trial.hparams,
+                               epochs)
+    else:
+        for _ in runner.trial_epochs(workload, trial.trial_id, trial.hparams,
+                                     epochs, backend=backend):
+            pass
+        rec = runner.records[trial.trial_id]
+    return rec.score(runner.objective)
+
+
+class InprocWorker(Worker):
+    """In-process worker on the caller's thread: ``submit`` queues, the
+    next ``poll`` runs the queued trials to completion in submission order
+    (submit stays non-blocking, so a mixed pool hands the whole wave to its
+    remote/thread workers before local trials start burning the caller's
+    thread). ``backend`` pins the worker's trials to a specific backend (a
+    local shard in a mixed pool); ``tag`` is a display name for such
+    shards."""
+
+    kind = "inproc"
+
+    def __init__(self, backend=None, tag: Optional[str] = None):
+        super().__init__()
+        self.backend = backend
+        self.tag = tag
+        self._pending: List[Tuple[TrialProposal, int]] = []
+
+    @property
+    def outstanding(self) -> int:
+        return len(self._pending)
+
+    def submit(self, trial: TrialProposal,
+               epochs: Optional[int] = None) -> None:
+        self._pending.append((trial,
+                              trial.epochs if epochs is None else epochs))
+
+    def poll(self, timeout: float = 0.0) -> List[TrialCompletion]:
+        out: List[TrialCompletion] = []
+        while self._pending:
+            trial, epochs = self._pending.pop(0)
+            score = _run_on(self.runner, self.workload, trial, epochs,
+                            backend=self.backend)
+            out.append(TrialCompletion(trial.trial_id, score))
+        return out
+
+
+class ThreadWorker(Worker):
+    """``capacity`` host-thread lanes over the shared runner. Threads (not
+    processes) because trial epochs release the GIL inside jitted XLA
+    computations and runner/backend state is shared; runner bookkeeping is
+    serialized by the runner's own hook lock."""
+
+    kind = "thread"
+
+    def __init__(self, capacity: int = 4):
+        super().__init__()
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = capacity
+        self._pool = cf.ThreadPoolExecutor(max_workers=capacity)
+        self._completions: "queue.Queue[TrialCompletion]" = queue.Queue()
+        self._outstanding = 0
+
+    def capabilities(self) -> WorkerCapabilities:
+        return WorkerCapabilities(kind=self.kind, capacity=self.capacity)
+
+    @property
+    def outstanding(self) -> int:
+        return self._outstanding
+
+    def submit(self, trial: TrialProposal,
+               epochs: Optional[int] = None) -> None:
+        epochs = trial.epochs if epochs is None else epochs
+        self._outstanding += 1
+        self._pool.submit(self._run, self.runner, self.workload, trial,
+                          epochs)
+
+    def _run(self, runner, workload, trial, epochs):
+        try:
+            score = _run_on(runner, workload, trial, epochs)
+            self._completions.put(TrialCompletion(trial.trial_id, score))
+        except BaseException as e:                      # noqa: BLE001
+            self._completions.put(
+                TrialCompletion(trial.trial_id, float("nan"), error=e))
+
+    def poll(self, timeout: float = 0.0) -> List[TrialCompletion]:
+        out = self._poll_queue(self._completions, timeout)
+        self._outstanding -= len(out)
+        return out
+
+    def close(self) -> None:
+        # wait: on an error path the wave's surviving trials are still
+        # mutating the shared runner from these threads — callers must not
+        # observe the runner while they race (the pre-pool per-wave
+        # `with ThreadPoolExecutor` block gave the same guarantee)
+        self._pool.shutdown(wait=True)
+
+
+class WorkerPool:
+    """A set of workers + placement + the two drive loops (module doc).
+
+    ``sticky=True`` binds each trial to one worker for its whole life —
+    required whenever workers hold private trial state (remote workers,
+    pinned-backend shards): rung-resumed epochs and PBT clones must return
+    to the worker that owns their state. Non-sticky pools place on the
+    least-loaded worker (ties by pool order).
+    """
+
+    def __init__(self, workers: Sequence[Worker], sticky: bool = False):
+        if not workers:
+            raise ValueError("need at least one worker")
+        self.workers: List[Worker] = list(workers)
+        self.sticky = sticky
+        self._bindings: Dict[str, Worker] = {}
+        self._rr = 0
+        self._bound_key: Optional[Tuple[int, str]] = None
+
+    # ------------------------------------------------------------- binding
+    def bind(self, runner, workload: str) -> None:
+        key = (id(runner), workload)
+        if self._bound_key != key:
+            for w in self.workers:
+                w.bind(runner, workload)
+            self._bindings.clear()
+            self._bound_key = key
+
+    def place(self, p: TrialProposal) -> Worker:
+        """The worker that executes `p` (the executor's placement policy)."""
+        if not self.sticky:
+            # ties break to the first worker: min returns the earliest
+            return min(self.workers, key=lambda w: w.outstanding)
+        w = None
+        if p.clone_from is not None:
+            # a PBT exploit discards the destination's own state for a copy
+            # of the source's, which lives on the source's worker — so the
+            # destination re-binds there even if it ran elsewhere before
+            w = self._bindings.get(p.clone_from)
+        if w is None:
+            w = self._bindings.get(p.trial_id)
+        if w is None:
+            w = self.workers[self._rr % len(self.workers)]
+            self._rr += 1
+        self._bindings[p.trial_id] = w
+        return w
+
+    def worker_of(self, trial_id: str) -> Optional[Worker]:
+        return self._bindings.get(trial_id)
+
+    # ---------------------------------------------------------- drive loops
+    def run_wave(self, runner, workload: str,
+                 proposals: Sequence[TrialProposal]
+                 ) -> List[Tuple[TrialProposal, float]]:
+        """Barrier semantics: execute a wave, merge results in wave order
+        regardless of completion order (scheduler decisions never depend on
+        scheduling noise)."""
+        self.bind(runner, workload)
+        self._apply_wave_clones(proposals)
+        for p in proposals:
+            self.place(p).submit(p, p.epochs)
+        want = {p.trial_id for p in proposals}
+        done: Dict[str, TrialCompletion] = {}
+        while want - done.keys():
+            for c in self._poll_once(block=True):
+                done[c.trial_id] = c
+        return [(p, done[p.trial_id].score) for p in proposals]
+
+    def drive(self, runner, workload: str, scheduler) -> None:
+        """Event-driven ask/tell loop: proposals dispatch the moment the
+        scheduler releases them; every completion is reported as it lands
+        (at its simulated completion time on engine workers). Ends when the
+        scheduler has nothing outstanding and releases no further work."""
+        self.bind(runner, workload)
+        outstanding: set = set()
+        while True:
+            wave = scheduler.suggest()
+            if wave:
+                self._apply_wave_clones(wave)
+                for p in wave:
+                    self.place(p).submit(p, p.epochs)
+                    outstanding.add(p.trial_id)
+                continue
+            if not outstanding:
+                break
+            completions = self._poll_once(block=True)
+            while not completions:
+                completions = self._poll_once(block=True)
+            for c in completions:
+                outstanding.discard(c.trial_id)
+                scheduler.report(c.trial_id, c.score)
+
+    def close(self) -> None:
+        for w in self.workers:
+            w.close()
+
+    # ------------------------------------------------------------ internals
+    def _apply_wave_clones(self, proposals: Sequence[TrialProposal]) -> None:
+        # clone sources must be wave-boundary snapshots, so apply for the
+        # whole wave before any of it starts executing
+        for p in proposals:
+            if p.clone_from is not None:
+                self.place(p).clone(p.trial_id, p.clone_from)
+
+    def _poll_once(self, block: bool) -> List[TrialCompletion]:
+        out: List[TrialCompletion] = []
+        for w in self.workers:
+            out.extend(w.poll())
+        if not out and block:
+            busy = [w for w in self.workers if w.outstanding]
+            if not busy:
+                raise RuntimeError(
+                    "worker pool stalled: trials outstanding but no worker "
+                    "reports work in flight")
+            out.extend(busy[0].poll(timeout=0.05))
+        for c in out:
+            if c.error is not None:
+                raise c.error
+        return out
+
+
+class WorkerPoolExecutor:
+    """Executor over an explicit worker list — the composition point for
+    remote workers and local shards (``--workers tcp://H1:P1,sim``).
+
+    Placement is sticky (see ``WorkerPool``): trials round-robin onto
+    workers at first sight and stay there across rung resumes; clones
+    follow their source. Results merge in wave order, so with deterministic
+    workers a single-worker pool is bit-identical to the serial executor.
+    """
+
+    def __init__(self, workers: Sequence[Worker], sticky: bool = True):
+        self.pool = WorkerPool(workers, sticky=sticky)
+        self.workers = self.pool.workers
+        self.parallelism = sum(max(1, w.capabilities().capacity)
+                               for w in self.workers)
+
+    def configure_runner_spec(self, spec: Optional[dict]) -> None:
+        """Hand workers that mirror the runner remotely the recipe for
+        building it (``Experiment`` calls this with its tuner/backend
+        names); workers constructed with an explicit spec keep theirs.
+        Remote workers left without any spec are a hard error — they would
+        silently run their process's own default tuner/backend and merge
+        wrong scores."""
+        needy = [w for w in self.workers
+                 if getattr(w, "accepts_runner_spec", False) and
+                 w.runner_spec is None]
+        if spec:
+            store = spec.get("store") or ""
+            store_host = store[len("tcp://"):].rsplit(":", 1)[0] \
+                if store.startswith("tcp://") else ""
+            loopback = ("127.0.0.1", "localhost", "::1")
+            for w in needy:
+                if store_host in loopback and \
+                        getattr(w, "address", ("",))[0] not in loopback:
+                    raise ValueError(
+                        f"the ground-truth store is dialed at {store!r} "
+                        f"(loopback), which remote worker "
+                        f"{w.address[0]}:{w.address[1]} cannot reach — "
+                        "point --store at an address routable from the "
+                        "workers")
+                w.runner_spec = dict(spec)
+        elif needy:
+            raise ValueError(
+                "remote workers need a runner spec (tuner/backend registry "
+                "names) to mirror the experiment's runner, and none could "
+                "be derived: the experiment's tuner, backend, or sys_space "
+                "is an instance, or its ground-truth store is not reachable "
+                "over TCP — none of which can travel over the wire. "
+                "Configure tuner/backend by registry name, share state via "
+                "a TCP store (--store tcp://HOST:PORT of a running "
+                "`python -m repro.service`), or build RemoteWorker(..., "
+                "runner_spec=...) explicitly (runner_spec={} opts into the "
+                "worker process's own CLI defaults).")
+
+    def run_wave(self, runner, workload: str,
+                 proposals: Sequence[TrialProposal]
+                 ) -> List[Tuple[TrialProposal, float]]:
+        return self.pool.run_wave(runner, workload, proposals)
+
+    def close(self) -> None:
+        self.pool.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False

@@ -24,7 +24,7 @@ def add_executor_args(ap: argparse.ArgumentParser, executor: str = "serial",
     cluster nodes)."""
     ap.add_argument("--executor", default=executor,
                     help="executor registry name (serial / parallel / "
-                         "cluster / plugin-registered)")
+                         "cluster / sharded / workers / plugin-registered)")
     ap.add_argument("--parallelism", type=int, default=parallelism,
                     help="trials per scheduler wave to run concurrently "
                          "(implies --executor parallel when > 1)")
@@ -40,13 +40,47 @@ def add_executor_args(ap: argparse.ArgumentParser, executor: str = "serial",
     ap.add_argument("--shard-capacity", type=int, default=1,
                     help="simulated nodes per backend shard for "
                          "--executor sharded")
+    ap.add_argument("--workers", default=None,
+                    help="comma-separated trial workers for --executor "
+                         "workers (implied when set): tcp://HOST:PORT of a "
+                         "running `python -m repro.worker`, or a backend "
+                         "registry name for a local in-process shard "
+                         "(e.g. 'tcp://10.0.0.1:7078,sim')")
     return ap
 
 
 def executor_from_args(args: argparse.Namespace):
-    """Build the executor the flags describe (resolved via the registry)."""
+    """Build the executor the flags describe (resolved via the registry).
+
+    Flag combinations that an executor would silently ignore are hard
+    errors: ``--parallelism`` belongs to serial/parallel (use
+    ``--cluster-nodes`` / ``--shard-capacity`` / more ``--workers`` for the
+    others), ``--backends`` to sharded, ``--workers`` to workers (which it
+    implies when the executor is left at the default).
+    """
     from repro.api import registry
     name = args.executor
+    workers = [w.strip() for w in args.workers.split(",") if w.strip()] \
+        if getattr(args, "workers", None) else None
+    if workers and name == "serial":
+        name = "workers"                # --workers implies the pool executor
+    if args.parallelism > 1 and name not in ("serial", "parallel"):
+        raise ValueError(
+            f"--parallelism {args.parallelism} conflicts with --executor "
+            f"{name}: thread parallelism only applies to serial/parallel "
+            "executors and would be silently ignored — use --cluster-nodes "
+            "(cluster), --shard-capacity (sharded), or more --workers "
+            "(workers) instead")
+    if getattr(args, "backends", None) and name != "sharded":
+        raise ValueError(
+            f"--backends {args.backends!r} conflicts with --executor "
+            f"{name}: only the sharded executor fans waves across backend "
+            "shards; the flag would be silently ignored")
+    if workers and name != "workers":
+        raise ValueError(
+            f"--workers conflicts with --executor {name}: worker lists "
+            "only apply to the workers executor (or the default serial, "
+            "which --workers upgrades); the flag would be silently ignored")
     if name == "parallel" or (name == "serial" and args.parallelism > 1):
         return registry.make_executor("parallel",
                                       parallelism=args.parallelism)
@@ -59,6 +93,13 @@ def executor_from_args(args: argparse.Namespace):
         return registry.make_executor(
             "sharded", backends=backends, capacity=args.shard_capacity,
             straggler_prob=args.straggler_prob)
+    if name == "workers":
+        if not workers:
+            raise ValueError("--executor workers needs --workers "
+                             "tcp://HOST:PORT[,...] (or local shard names)")
+        # the runner spec (tuner/backend/store recipe for the remote ends)
+        # is filled in by Experiment.run via configure_runner_spec
+        return registry.make_executor("workers", workers=workers)
     return registry.make_executor(name)
 
 
@@ -90,10 +131,9 @@ def store_client_from_args(args: argparse.Namespace):
                 "--store-reset only applies to the in-proc store; to reset "
                 "a remote one, restart it with `python -m repro.service "
                 "--reset`")
-        host, _, port = spec[len("tcp://"):].rpartition(":")
-        if not port.isdigit():
-            raise ValueError(f"--store {spec!r}: expected tcp://HOST:PORT")
-        return StoreClient(SocketTransport(host or "127.0.0.1", int(port)))
+        from repro.service.dispatch import parse_tcp_address
+        host, port = parse_tcp_address(spec)
+        return StoreClient(SocketTransport(host, port))
     if spec != "inproc":
         raise ValueError(f"--store {spec!r}: expected 'inproc' or "
                          "tcp://HOST:PORT")

@@ -54,12 +54,17 @@ def main():
     tuner_kw = {"max_probes": 4} if args.system == "pipetune" else {}
     sched_kw = {"n_trials": 6} if args.scheduler == "random" else {}
 
-    res = (Experiment(job)
+    exp = (Experiment(job)
            .with_tuner(args.system, **tuner_kw)
            .with_backend(args.backend, **backend_kw)
-           .with_scheduler(args.scheduler, **sched_kw)
-           .with_groundtruth(store_client_from_args(args))
-           .run(executor=executor_from_args(args)))
+           .with_scheduler(args.scheduler, **sched_kw))
+    if args.system == "pipetune" or args.store != "inproc" or \
+            args.gt_store or args.store_reset:
+        # only attach a store client when the tuner consumes one (or the
+        # user asked for a specific store): a v1 job with remote workers
+        # must not trip over a ground-truth client it would never use
+        exp = exp.with_groundtruth(store_client_from_args(args))
+    res = exp.run(executor=executor_from_args(args))
 
     print(f"workload={args.workload} system={args.system} "
           f"scheduler={args.scheduler} executor={args.executor} "

@@ -1,4 +1,5 @@
-"""Shared tuning service: remote-safe ground-truth store + sharded runs.
+"""Shared tuning service: remote-safe ground-truth store, remote trial
+workers, and sharded execution.
 
 The pieces (see each module's docstring):
 
@@ -7,18 +8,30 @@ The pieces (see each module's docstring):
                                                    client, centroid cache
     InprocTransport       repro.service.transport  zero-copy, same process
     SocketTransport       repro.service.transport  length-prefixed JSON/TCP
-    GroundTruthTCPServer  repro.service.transport  socketserver host
+                                                   (retrying connect)
+    JsonRPCServer         repro.service.transport  shared TCP framing host
+    GroundTruthTCPServer  repro.service.transport  store server
     ShardedTrialExecutor  repro.service.sharded    waves across backends
+    RemoteWorker          repro.service.dispatch   trial-dispatch client
+    TrialWorkerService    repro.service.worker     trial-dispatch server
+                                                   (python -m repro.worker)
 
 Start a store server:      python -m repro.service --port 7077 --journal gt.jsonl
-Point a job at it:         --store tcp://127.0.0.1:7077  (repro.launch.tune)
+Start a trial worker:      python -m repro.worker --port 7078 --store tcp://H:7077
+Point a job at them:       --store tcp://H:7077 --workers tcp://H:7078
+                           (repro.launch.tune)
 """
+from repro.service.dispatch import RemoteWorker, WorkerError  # noqa: F401
 from repro.service.service import GroundTruthService  # noqa: F401
 from repro.service.sharded import ShardedTrialExecutor  # noqa: F401
 from repro.service.transport import (  # noqa: F401
-    GroundTruthTCPServer, InprocTransport, SocketTransport, StoreClient,
-    StoreError, serve)
+    GroundTruthTCPServer, InprocTransport, JsonRPCServer, SocketTransport,
+    StoreClient, StoreError, TransportError, serve)
+from repro.service.worker import (  # noqa: F401
+    TrialWorkerService, TrialWorkerTCPServer, serve_worker)
 
 __all__ = ["GroundTruthService", "StoreClient", "StoreError",
-           "InprocTransport", "SocketTransport", "GroundTruthTCPServer",
-           "serve", "ShardedTrialExecutor"]
+           "TransportError", "InprocTransport", "SocketTransport",
+           "JsonRPCServer", "GroundTruthTCPServer", "serve",
+           "ShardedTrialExecutor", "RemoteWorker", "WorkerError",
+           "TrialWorkerService", "TrialWorkerTCPServer", "serve_worker"]

@@ -1,0 +1,232 @@
+"""Trial-dispatch wire protocol: remote workers next to the store's wire.
+
+The shared ground-truth store (PR 3) let separate processes *learn*
+together; this module lets them *execute* together. A ``RemoteWorker`` is
+the client side of a small request/response protocol — the same
+length-prefixed JSON framing ``repro.service.transport`` already speaks —
+served by a ``python -m repro.worker`` process (``repro.service.worker``):
+
+    hello                      -> {ok, kind, capacity, defaults}
+    bind  {spec}               -> build the worker's runner (tuner/backend/
+                                  seed/store registry names; CLI defaults
+                                  fill whatever the spec omits)
+    clone {dst, src}           -> PBT exploit on the worker's runner
+    run   {workload, trial_id,
+           hparams, epochs}    -> {record}: the completed TrialRecord
+
+The worker process owns the trial state (rung resumes and clones must keep
+landing on the same worker — sticky pool placement guarantees that) and
+runs each trial on its *own* runner; the completed record is serialized
+back and installed into the local runner, so job-level bookkeeping
+(best trial, tuning time, energy) is oblivious to where epochs ran. Floats
+survive the JSON round trip exactly (repr-based encoding), so a remote run
+on a deterministic backend is bit-identical to an in-process one — the
+acceptance property the tests assert. Cross-worker tuning state is the
+PR 3 store: point every worker at one ``python -m repro.service`` via the
+spec's ``store`` field and their PipeTune runners share ground truth.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.core.backends import EpochResult
+from repro.core.pipetune import TrialRecord
+from repro.core.profiler import EpochProfile
+from repro.core.schedulers import TrialProposal
+from repro.core.worker import TrialCompletion, Worker, WorkerCapabilities
+from repro.service.transport import SocketTransport
+
+__all__ = ["RemoteWorker", "WorkerError", "parse_tcp_address",
+           "record_to_payload", "record_from_payload"]
+
+
+class WorkerError(RuntimeError):
+    """A remote worker request failed (server error or broken transport)."""
+
+
+def parse_tcp_address(spec: str) -> Tuple[str, int]:
+    """``tcp://HOST:PORT`` -> ``(host, port)``; host defaults to loopback."""
+    if not spec.startswith("tcp://"):
+        raise ValueError(f"expected tcp://HOST:PORT, got {spec!r}")
+    host, _, port = spec[len("tcp://"):].rpartition(":")
+    if not port.isdigit():
+        raise ValueError(f"{spec!r}: expected tcp://HOST:PORT")
+    return host or "127.0.0.1", int(port)
+
+
+# ---------------------------------------------------------------------------
+# record serialization (the wire format of a completed trial)
+# ---------------------------------------------------------------------------
+
+def _epoch_to_payload(e: EpochResult) -> Dict[str, Any]:
+    return {
+        "duration_s": float(e.duration_s), "energy_j": float(e.energy_j),
+        "loss": float(e.loss), "accuracy": float(e.accuracy),
+        "profile": {"events": {k: float(v)
+                               for k, v in e.profile.events.items()},
+                    "raw": bool(e.profile.raw)},
+        "sys_config": dict(e.sys_config),
+        "step_times": [float(t) for t in e.step_times],
+        "compile_s": float(e.compile_s),
+    }
+
+
+def _epoch_from_payload(d: Dict[str, Any]) -> EpochResult:
+    prof = d.get("profile") or {"events": {}, "raw": False}
+    return EpochResult(
+        duration_s=d["duration_s"], energy_j=d["energy_j"], loss=d["loss"],
+        accuracy=d["accuracy"],
+        profile=EpochProfile(dict(prof["events"]), raw=bool(prof["raw"])),
+        sys_config=dict(d["sys_config"]),
+        step_times=list(d["step_times"]), compile_s=d.get("compile_s", 0.0))
+
+
+def record_to_payload(rec: TrialRecord) -> Dict[str, Any]:
+    return {"trial_id": rec.trial_id, "hparams": dict(rec.hparams),
+            "epochs": [_epoch_to_payload(e) for e in rec.epochs],
+            "sys_history": [dict(s) for s in rec.sys_history],
+            "gt_hit": bool(rec.gt_hit),
+            "probe_epochs": int(rec.probe_epochs)}
+
+
+def record_from_payload(d: Dict[str, Any]) -> TrialRecord:
+    return TrialRecord(
+        trial_id=str(d["trial_id"]), hparams=dict(d["hparams"]),
+        epochs=[_epoch_from_payload(e) for e in d["epochs"]],
+        sys_history=[dict(s) for s in d["sys_history"]],
+        gt_hit=bool(d["gt_hit"]), probe_epochs=int(d["probe_epochs"]))
+
+
+# ---------------------------------------------------------------------------
+# the remote worker (client side)
+# ---------------------------------------------------------------------------
+
+class RemoteWorker(Worker):
+    """Worker-protocol client of one ``python -m repro.worker`` process.
+
+    ``runner_spec`` is the recipe the worker uses to mirror the local
+    runner: ``{"tuner", "tuner_kw", "backend", "backend_kw", "seed",
+    "store"}`` — all registry names / JSON values, all optional (the worker
+    process's CLI defaults fill the gaps). ``Experiment`` derives it
+    automatically from its own tuner/backend configuration via
+    ``WorkerPoolExecutor.configure_runner_spec``.
+
+    Requests are serialized over one persistent connection; ``submit`` is
+    non-blocking (a dispatcher thread issues the ``run`` request), trial
+    results land in a completion queue drained by ``poll``.
+    """
+
+    kind = "remote"
+    accepts_runner_spec = True
+
+    def __init__(self, address: str, runner_spec: Optional[dict] = None,
+                 connect_timeout: float = 30.0, connect_retries: int = 5,
+                 retry_backoff_s: float = 0.2):
+        super().__init__()
+        host, port = parse_tcp_address(address)
+        self.address = (host, port)
+        # {} is a meaningful spec (use the worker process's CLI defaults),
+        # distinct from None (no spec yet — Experiment may fill it in)
+        self.runner_spec = dict(runner_spec) if runner_spec is not None \
+            else None
+        # request_timeout=None: a remote trial legitimately runs longer
+        # than any sane connect timeout
+        self.transport = SocketTransport(
+            host, port, timeout=connect_timeout,
+            connect_retries=connect_retries,
+            retry_backoff_s=retry_backoff_s, request_timeout=None)
+        self._request({"op": "hello"})       # fail fast on a non-worker peer
+        # one connection executes one trial at a time (requests are
+        # serialized, the server locks its runner per trial), so advertise
+        # capacity 1 regardless of what the server claims; scale by adding
+        # workers, not by inflating one
+        self._caps = WorkerCapabilities(kind=self.kind, capacity=1,
+                                        remote=True)
+        self._inbox: "queue.Queue" = queue.Queue()
+        self._completions: "queue.Queue[TrialCompletion]" = queue.Queue()
+        self._outstanding = 0
+        self._thread = threading.Thread(
+            target=self._loop, daemon=True,
+            name=f"remote-worker-{host}:{port}")
+        self._thread.start()
+
+    # -------------------------------------------------------------- protocol
+    def capabilities(self) -> WorkerCapabilities:
+        return self._caps
+
+    @property
+    def outstanding(self) -> int:
+        return self._outstanding
+
+    def bind(self, runner, workload: str) -> None:
+        super().bind(runner, workload)
+        if self.runner_spec is None:
+            # never fall back silently: a worker running its own default
+            # tuner/backend would merge wrong scores without a trace
+            raise ValueError(
+                f"remote worker {self.address[0]}:{self.address[1]} has no "
+                "runner spec — Experiment derives one from registry names, "
+                "or pass runner_spec= explicitly (runner_spec={} opts into "
+                "the worker process's own CLI defaults)")
+        # (re)build the worker's mirror runner; fresh trial state per job
+        self._request({"op": "bind", "spec": dict(self.runner_spec)})
+
+    def clone(self, dst_id: str, src_id: str) -> None:
+        # wave-boundary semantics hold because the pool only clones while
+        # the worker is idle (between waves), so this request cannot
+        # interleave with an in-flight run
+        self._request({"op": "clone", "dst": dst_id, "src": src_id})
+
+    def submit(self, trial: TrialProposal,
+               epochs: Optional[int] = None) -> None:
+        self._outstanding += 1
+        self._inbox.put((trial, trial.epochs if epochs is None else epochs))
+
+    def poll(self, timeout: float = 0.0) -> List[TrialCompletion]:
+        out = self._poll_queue(self._completions, timeout)
+        self._outstanding -= len(out)
+        return out
+
+    def close(self) -> None:
+        # abandon queued-but-undispatched trials so the shutdown sentinel
+        # is next in line; an in-flight trial finishes server-side and its
+        # unread completion is dropped with the connection
+        try:
+            while True:
+                self._inbox.get_nowait()
+        except queue.Empty:
+            pass
+        self._inbox.put(None)
+        self._thread.join(timeout=2.0)
+        self.transport.close()
+
+    # ------------------------------------------------------------ internals
+    def _request(self, req: Dict[str, Any]) -> Dict[str, Any]:
+        resp = self.transport.request(req)
+        if not resp.get("ok"):
+            raise WorkerError(
+                f"worker {self.address[0]}:{self.address[1]} rejected "
+                f"{req.get('op')!r}: {resp.get('error', 'unknown error')}")
+        return resp
+
+    def _loop(self) -> None:
+        while True:
+            item = self._inbox.get()
+            if item is None:
+                return
+            trial, epochs = item
+            try:
+                resp = self._request({
+                    "op": "run", "workload": self.workload,
+                    "trial_id": trial.trial_id,
+                    "hparams": dict(trial.hparams), "epochs": int(epochs)})
+                rec = record_from_payload(resp["record"])
+                runner = self.runner
+                runner.install_record(rec)
+                self._completions.put(TrialCompletion(
+                    rec.trial_id, rec.score(runner.objective)))
+            except BaseException as e:                  # noqa: BLE001
+                self._completions.put(TrialCompletion(
+                    trial.trial_id, float("nan"), error=e))

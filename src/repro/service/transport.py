@@ -27,6 +27,7 @@ import socket
 import socketserver
 import struct
 import threading
+import time
 from typing import Any, Dict, Optional, Tuple
 
 import numpy as np
@@ -34,11 +35,16 @@ import numpy as np
 from repro.core.groundtruth import CentroidModel
 from repro.service.service import GroundTruthService
 
-__all__ = ["StoreClient", "StoreError", "InprocTransport", "SocketTransport",
-           "GroundTruthTCPServer", "serve"]
+__all__ = ["StoreClient", "StoreError", "TransportError", "InprocTransport",
+           "SocketTransport", "JsonRPCServer", "GroundTruthTCPServer",
+           "serve"]
 
 
-class StoreError(RuntimeError):
+class TransportError(RuntimeError):
+    """A transport-level failure (connect, send, receive)."""
+
+
+class StoreError(TransportError):
     """A store request failed (server error or broken transport)."""
 
 
@@ -79,16 +85,46 @@ def _recv_msg(sock: socket.socket) -> dict:
     return json.loads(_recv_exact(sock, n).decode("utf-8"))
 
 
+_SAME_AS_CONNECT = object()
+
+
 class SocketTransport:
-    """One persistent length-prefixed-JSON connection; thread-safe."""
+    """One persistent length-prefixed-JSON connection; thread-safe.
+
+    ``timeout`` bounds the connect (and, by default, every request);
+    ``request_timeout`` overrides the per-request bound — pass ``None`` for
+    fully blocking requests (remote workers: a trial legitimately takes
+    longer than any sane connect timeout). A refused/failed connect is
+    retried ``connect_retries`` times with exponential backoff starting at
+    ``retry_backoff_s``, so servers that come up a moment after their
+    clients don't kill the run.
+    """
 
     def __init__(self, host: str = "127.0.0.1", port: int = 7077,
-                 timeout: float = 30.0):
+                 timeout: float = 30.0, connect_retries: int = 3,
+                 retry_backoff_s: float = 0.2,
+                 request_timeout: Any = _SAME_AS_CONNECT):
         self.addr = (host, port)
-        self._sock = socket.create_connection(self.addr, timeout=timeout)
+        self._sock = self._connect(timeout, connect_retries, retry_backoff_s)
+        if request_timeout is not _SAME_AS_CONNECT:
+            self._sock.settimeout(request_timeout)
         # request/response over tiny messages: Nagle only adds latency
         self._sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
         self._lock = threading.Lock()
+
+    def _connect(self, timeout: float, retries: int,
+                 backoff_s: float) -> socket.socket:
+        delay = backoff_s
+        for attempt in range(retries + 1):
+            try:
+                return socket.create_connection(self.addr, timeout=timeout)
+            except OSError as e:
+                if attempt == retries:
+                    raise TransportError(
+                        f"could not connect to {self.addr[0]}:{self.addr[1]} "
+                        f"after {retries + 1} attempt(s): {e}") from None
+                time.sleep(delay)
+                delay *= 2
 
     def request(self, req: Dict[str, Any]) -> Dict[str, Any]:
         try:
@@ -97,7 +133,7 @@ class SocketTransport:
                 return _recv_msg(self._sock)
         except (OSError, ConnectionError) as e:
             raise StoreError(
-                f"store at {self.addr[0]}:{self.addr[1]} unreachable: {e}"
+                f"peer at {self.addr[0]}:{self.addr[1]} unreachable: {e}"
             ) from None
 
     def close(self):
@@ -191,26 +227,36 @@ class StoreClient:
 # TCP server
 # ---------------------------------------------------------------------------
 
-class _StoreRequestHandler(socketserver.BaseRequestHandler):
+class _RPCRequestHandler(socketserver.BaseRequestHandler):
     def handle(self):
         while True:
             try:
                 req = _recv_msg(self.request)
             except (ConnectionError, OSError, ValueError):
                 return                           # client went away
-            _send_msg(self.request, self.server.service.handle(req))
+            _send_msg(self.request, self.server.rpc_handle(req))
 
 
-class GroundTruthTCPServer(socketserver.ThreadingTCPServer):
-    """Serve one ``GroundTruthService`` to many socket clients. Port 0
-    binds an ephemeral port (read it back from ``server_address``)."""
+class JsonRPCServer(socketserver.ThreadingTCPServer):
+    """Serve any ``handle(dict) -> dict`` callable over the length-prefixed
+    JSON framing — the shared substrate under the ground-truth store server
+    and the trial worker server (``repro.service.worker``). Port 0 binds an
+    ephemeral port (read it back from ``server_address``)."""
 
     allow_reuse_address = True
     daemon_threads = True
     disable_nagle_algorithm = True
 
+    def __init__(self, address: Tuple[str, int], rpc_handle):
+        super().__init__(address, _RPCRequestHandler)
+        self.rpc_handle = rpc_handle
+
+
+class GroundTruthTCPServer(JsonRPCServer):
+    """Serve one ``GroundTruthService`` to many socket clients."""
+
     def __init__(self, address: Tuple[str, int], service: GroundTruthService):
-        super().__init__(address, _StoreRequestHandler)
+        super().__init__(address, service.handle)
         self.service = service
 
 

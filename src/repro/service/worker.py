@@ -1,0 +1,193 @@
+"""Remote trial worker: serve the trial-dispatch protocol over TCP.
+
+    PYTHONPATH=src python -m repro.worker --port 7078
+
+One worker process hosts one runner (tuner + backend, built from registry
+names) and executes whole trials on request — the server side of
+``repro.service.dispatch``. Clients ``bind`` a runner spec (anything the
+spec omits falls back to this process's CLI flags), then ``run`` proposals;
+the completed ``TrialRecord`` goes back over the wire. Trial state lives
+here, so rung-resumed trials and PBT clones must keep hitting the same
+worker (the client pool's sticky placement guarantees it).
+
+Workers share tuning state the same way jobs do: pass
+``--store tcp://HOST:PORT`` of a running ``python -m repro.service`` (or
+put it in the bind spec) and this worker's PipeTune runner reads/feeds the
+shared ground truth.
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import os
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+from repro.service.dispatch import parse_tcp_address, record_to_payload
+from repro.service.transport import JsonRPCServer
+
+__all__ = ["TrialWorkerService", "TrialWorkerTCPServer", "serve_worker",
+           "main"]
+
+
+class TrialWorkerService:
+    """Request handler of one trial worker (transport-agnostic, like
+    ``GroundTruthService``): dicts in, dicts out, every response carrying
+    ``ok``. Constructor arguments are the process-level defaults a client's
+    bind spec overrides field by field."""
+
+    def __init__(self, tuner: str = "v1", tuner_kw: Optional[dict] = None,
+                 backend: str = "sim", backend_kw: Optional[dict] = None,
+                 seed: int = 0, store: Optional[str] = None):
+        self.defaults: Dict[str, Any] = {
+            "tuner": tuner, "tuner_kw": dict(tuner_kw or {}),
+            "backend": backend, "backend_kw": dict(backend_kw or {}),
+            "seed": int(seed), "store": store}
+        self.runner = None
+        self.spec: Optional[dict] = None
+        self._store_client = None
+        # one worker process executes one trial at a time: the server is
+        # threaded (one handler per connection), so bind/clone/run from
+        # different connections must not interleave on the shared runner
+        self._lock = threading.Lock()
+
+    def handle(self, req: Dict[str, Any]) -> Dict[str, Any]:
+        op = str(req.get("op", ""))
+        fn = getattr(self, f"_op_{op}", None)
+        if fn is None or op.startswith("_"):
+            return {"ok": False, "error": f"unknown op {op!r}"}
+        try:
+            out = fn(req) or {}
+        except Exception as e:                          # noqa: BLE001
+            return {"ok": False, "error": f"{type(e).__name__}: {e}"}
+        out["ok"] = True
+        return out
+
+    def close(self) -> None:
+        if self._store_client is not None:
+            self._store_client.close()
+            self._store_client = None
+
+    # ------------------------------------------------------------------ ops
+    def _op_hello(self, req) -> Dict[str, Any]:
+        # capacity is structurally 1: one runner, one trial at a time
+        return {"kind": "remote", "capacity": 1, "pid": os.getpid(),
+                "defaults": {k: self.defaults[k]
+                             for k in ("tuner", "backend", "seed", "store")}}
+
+    def _op_bind(self, req) -> Dict[str, Any]:
+        spec = {**self.defaults, **{k: v for k, v in
+                                    (req.get("spec") or {}).items()
+                                    if v is not None}}
+        with self._lock:
+            self.runner = self._build_runner(spec)
+            self.spec = spec
+        return {"tuner": spec["tuner"], "backend": spec["backend"],
+                "store": spec.get("store")}
+
+    def _op_clone(self, req) -> Dict[str, Any]:
+        with self._lock:
+            self._require_runner().clone_trial(str(req["dst"]),
+                                               str(req["src"]))
+        return {}
+
+    def _op_run(self, req) -> Dict[str, Any]:
+        with self._lock:
+            runner = self._require_runner()
+            rec = runner.run_trial(str(req["workload"]),
+                                   str(req["trial_id"]),
+                                   dict(req["hparams"]), int(req["epochs"]))
+            return {"record": record_to_payload(rec)}
+
+    # ------------------------------------------------------------ internals
+    def _require_runner(self):
+        if self.runner is None:
+            raise RuntimeError("no runner bound (send a 'bind' op first)")
+        return self.runner
+
+    def _build_runner(self, spec: Dict[str, Any]):
+        # lazy: repro.api sits above repro.service in the layer order
+        from repro.api import registry
+        backend = registry.make_backend(spec["backend"],
+                                        **(spec.get("backend_kw") or {}))
+        groundtruth = None
+        store = spec.get("store")
+        if store:
+            from repro.service.transport import SocketTransport, StoreClient
+            host, port = parse_tcp_address(store)
+            groundtruth = StoreClient(SocketTransport(host, port))
+        if self._store_client is not None:
+            self._store_client.close()
+        self._store_client = groundtruth
+        tuner_kw = dict(spec.get("tuner_kw") or {})
+        tuner_kw.setdefault("seed", int(spec.get("seed", 0)))
+        return registry.make_tuner(
+            spec["tuner"], backend,
+            sys_space=registry.default_sys_space(spec["backend"]),
+            groundtruth=groundtruth, **tuner_kw)
+
+
+class TrialWorkerTCPServer(JsonRPCServer):
+    """Serve one ``TrialWorkerService``. Port 0 binds an ephemeral port."""
+
+    def __init__(self, address: Tuple[str, int],
+                 service: TrialWorkerService):
+        super().__init__(address, service.handle)
+        self.service = service
+
+
+def serve_worker(service: TrialWorkerService, host: str = "127.0.0.1",
+                 port: int = 7078,
+                 background: bool = False) -> TrialWorkerTCPServer:
+    """Run a trial worker server; ``background=True`` serves from a daemon
+    thread and returns immediately (tests, co-located pools)."""
+    server = TrialWorkerTCPServer((host, port), service)
+    if background:
+        threading.Thread(target=server.serve_forever, daemon=True).start()
+    else:
+        server.serve_forever()
+    return server
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description="serve a PipeTune trial worker over TCP "
+                    "(python -m repro.worker)")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=7078,
+                    help="TCP port (0 binds an ephemeral one)")
+    ap.add_argument("--tuner", default="v1",
+                    help="default tuner registry name (a bind spec "
+                         "overrides it)")
+    ap.add_argument("--backend", default="sim",
+                    help="default backend registry name")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--store", default=None,
+                    help="tcp://HOST:PORT of a shared `python -m "
+                         "repro.service` ground-truth store")
+    ap.add_argument("--plugin", action="append", default=[],
+                    help="module to import for register_* side effects")
+    args = ap.parse_args(argv)
+
+    for mod in args.plugin:
+        importlib.import_module(mod)
+
+    service = TrialWorkerService(tuner=args.tuner, backend=args.backend,
+                                 seed=args.seed, store=args.store)
+    server = TrialWorkerTCPServer((args.host, args.port), service)
+    host, port = server.server_address[:2]
+    print(f"trial worker on {host}:{port} (tuner={args.tuner}, "
+          f"backend={args.backend}"
+          + (f", store {args.store}" if args.store else "") + ")",
+          flush=True)
+    try:
+        server.serve_forever()
+    except KeyboardInterrupt:
+        pass
+    finally:
+        server.shutdown()
+        service.close()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""``python -m repro.worker`` — a remote trial worker process.
+
+Thin entry-point package; the implementation lives in
+``repro.service.worker`` (server) and ``repro.service.dispatch`` (wire
+protocol + ``RemoteWorker`` client).
+"""
+from repro.service.worker import (  # noqa: F401
+    TrialWorkerService, TrialWorkerTCPServer, main, serve_worker)
+
+__all__ = ["TrialWorkerService", "TrialWorkerTCPServer", "serve_worker",
+           "main"]

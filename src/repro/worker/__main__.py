@@ -1,0 +1,4 @@
+from repro.service.worker import main
+
+if __name__ == "__main__":
+    main()

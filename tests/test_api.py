@@ -115,6 +115,65 @@ def test_registry_unknown_names_raise_with_available():
         make_tuner("pipetune", SimBackend())    # needs a system space
 
 
+def test_registry_unknown_names_list_every_builtin():
+    """The error message is the discovery surface: it must enumerate what
+    *is* registered, for every registry kind."""
+    from repro.api import available_executors, make_executor
+    job = HPTJob(workload="lenet-mnist", space=_space())
+    cases = [
+        (lambda: make_scheduler("nope", job), available_schedulers()),
+        (lambda: make_backend("nope"), available_backends()),
+        (lambda: make_tuner("nope", SimBackend()), available_tuners()),
+        (lambda: make_executor("nope"), available_executors()),
+    ]
+    for call, names in cases:
+        with pytest.raises(KeyError) as exc:
+            call()
+        for name in names:
+            assert name in str(exc.value)
+
+
+def test_registry_plugin_registrations_are_listed_and_resolvable():
+    """Plugins extend the registries without core edits; the new names must
+    show up in available_*() and in unknown-name error listings."""
+    from repro.api import (available_executors, make_executor, registry,
+                          register_backend, register_executor,
+                          register_scheduler, register_tuner)
+    from repro.core import TuneV1
+    names = {"scheduler": "plugin-sched", "backend": "plugin-backend",
+             "tuner": "plugin-tuner", "executor": "plugin-exec"}
+    register_scheduler(names["scheduler"],
+                       lambda job, **kw: RandomSearch(job.space, n_trials=2,
+                                                      epochs=2))
+    register_backend(names["backend"], SimBackend)
+    register_tuner(names["tuner"],
+                   lambda backend, **kw: TuneV1(backend))
+    register_executor(names["executor"], lambda: SerialTrialExecutor())
+    try:
+        assert names["scheduler"] in available_schedulers()
+        assert names["backend"] in available_backends()
+        assert names["tuner"] in available_tuners()
+        assert names["executor"] in available_executors()
+        assert isinstance(make_executor(names["executor"]),
+                          SerialTrialExecutor)
+        assert isinstance(make_backend(names["backend"]), SimBackend)
+        with pytest.raises(KeyError, match=names["executor"]):
+            make_executor("still-not-registered")
+    finally:
+        registry._SCHEDULERS.pop(names["scheduler"])
+        registry._BACKENDS.pop(names["backend"])
+        registry._TUNERS.pop(names["tuner"])
+        registry._EXECUTORS.pop(names["executor"])
+
+
+def test_make_executor_int_compat_rejects_kwargs():
+    from repro.api import make_executor
+    assert make_executor(1).parallelism == 1
+    assert make_executor(3).parallelism == 3
+    with pytest.raises(ValueError, match="registry name"):
+        make_executor(3, n_nodes=2)
+
+
 def test_backend_protocol_and_capabilities():
     sim, real = SimBackend(), RealBackend()
     assert isinstance(sim, Backend) and isinstance(real, Backend)

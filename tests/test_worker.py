@@ -1,0 +1,389 @@
+"""Unified worker-dispatch API (PR 4 acceptance surface): the Worker
+protocol behind every executor, pool placement, remote workers over the
+trial-dispatch wire protocol, `python -m repro.worker`, and the transport /
+launch-flag satellites."""
+import shutil
+import socket
+import subprocess
+import sys
+import threading
+import time
+
+import pytest
+
+from repro.api import (Experiment, InprocWorker, RemoteWorker,
+                       SerialTrialExecutor, ThreadWorker, WorkerPool,
+                       WorkerPoolExecutor, available_executors)
+from repro.core import GroundTruth, PipeTune
+from repro.core.job import HPTJob, Param, SearchSpace
+from repro.service import (GroundTruthService, GroundTruthTCPServer,
+                           InprocTransport, SocketTransport, StoreClient,
+                           TransportError, TrialWorkerService, WorkerError,
+                           serve_worker)
+
+
+def _space():
+    return SearchSpace([
+        Param("batch_size", "choice", choices=(32, 64, 256, 1024)),
+        Param("learning_rate", "log", 0.001, 0.1),
+    ])
+
+
+def _job(seed=0, epochs=9):
+    return HPTJob(workload="lenet-mnist", space=_space(), max_epochs=epochs,
+                  seed=seed)
+
+
+def _assert_bit_identical(a, b):
+    assert a.best_hparams == b.best_hparams
+    assert a.best_score == b.best_score
+    assert sorted(a.records) == sorted(b.records)
+    for tid, rec_a in a.records.items():
+        rec_b = b.records[tid]
+        assert [e.accuracy for e in rec_a.epochs] == \
+            [e.accuracy for e in rec_b.epochs], tid
+        assert [e.duration_s for e in rec_a.epochs] == \
+            [e.duration_s for e in rec_b.epochs], tid
+        assert rec_a.sys_history == rec_b.sys_history, tid
+        assert rec_a.gt_hit == rec_b.gt_hit, tid
+        assert rec_a.probe_epochs == rec_b.probe_epochs, tid
+
+
+class _LegacySerialExecutor:
+    """The pre-refactor serial executor, verbatim: the regression anchor the
+    worker-pool serial executor must be bit-identical to."""
+
+    parallelism = 1
+
+    def run_wave(self, runner, workload, proposals):
+        for p in proposals:
+            if p.clone_from is not None:
+                runner.clone_trial(p.trial_id, p.clone_from)
+        out = []
+        for p in proposals:
+            rec = runner.run_trial(workload, p.trial_id, p.hparams, p.epochs)
+            out.append((p, rec.score(runner.objective)))
+        return out
+
+
+@pytest.fixture
+def worker_server():
+    """Factory for in-thread trial-worker TCP servers on ephemeral ports."""
+    made = []
+
+    def make(service=None):
+        server = serve_worker(service or TrialWorkerService(), port=0,
+                              background=True)
+        made.append(server)
+        return server.server_address[1]
+
+    yield make
+    for server in made:
+        server.shutdown()
+        server.service.close()
+
+
+# ------------------------------------------------- protocol + local workers
+
+def test_worker_capabilities_and_registry_names():
+    assert {"serial", "parallel", "cluster", "sharded", "workers"} <= \
+        set(available_executors())
+    inproc, thread = InprocWorker(), ThreadWorker(capacity=3)
+    assert inproc.capabilities().kind == "inproc"
+    caps = thread.capabilities()
+    assert caps.kind == "thread" and caps.capacity == 3
+    assert not caps.simulated and not caps.remote
+    thread.close()
+
+
+@pytest.mark.parametrize("scheduler,kw", [
+    ("hyperband", {}),
+    ("pbt", {"population": 4, "interval": 3}),
+])
+def test_single_inproc_worker_matches_legacy_serial(scheduler, kw):
+    """Acceptance: a pool of one InprocWorker (the new serial executor) is
+    bit-identical to the pre-refactor inline serial loop — including the
+    PBT clone path, which now routes through Worker.clone."""
+    def run(executor):
+        return (Experiment(_job()).with_tuner("v1").with_backend("sim")
+                .with_scheduler(scheduler, **kw).run(executor=executor))
+
+    _assert_bit_identical(run(_LegacySerialExecutor()),
+                          run(SerialTrialExecutor()))
+
+
+def test_sticky_pool_binds_trials_and_routes_clones():
+    w0, w1 = InprocWorker(tag="w0"), InprocWorker(tag="w1")
+    pool = WorkerPool([w0, w1], sticky=True)
+
+    class P:                                     # minimal proposal stand-in
+        def __init__(self, tid, clone_from=None):
+            self.trial_id, self.clone_from = tid, clone_from
+            self.hparams, self.epochs = {}, 1
+
+    a, b = P("a"), P("b")
+    assert pool.place(a) is w0 and pool.place(b) is w1
+    assert pool.place(a) is w0                   # sticky across rungs
+    assert pool.place(P("c", clone_from="b")) is w1   # clone follows source
+    assert pool.worker_of("c") is w1
+
+
+def test_workers_executor_with_local_shard_names():
+    """'workers' resolves plain backend names into local in-process shards
+    ('--workers sim'); a single sim shard is bit-identical to serial."""
+    def run(**kw):
+        return (Experiment(_job()).with_tuner("v1").with_backend("sim")
+                .with_scheduler("hyperband").run(**kw))
+
+    _assert_bit_identical(run(),
+                          run(executor="workers"))  # default: one inproc
+    shard = (Experiment(_job()).with_tuner("v1").with_backend("sim")
+             .with_scheduler("hyperband")
+             .with_executor("workers", workers=["sim"]).run())
+    _assert_bit_identical(run(), shard)
+
+
+# ----------------------------------------------------------- remote workers
+
+def test_remote_worker_run_is_bit_identical_to_inproc(worker_server):
+    """Acceptance: a remote-worker run on the sim backend reproduces the
+    in-process serial run bit for bit, across HyperBand rung resumes
+    (remote trial state) and the JSON wire round trip."""
+    port = worker_server()
+    serial = (Experiment(_job()).with_tuner("v1").with_backend("sim")
+              .with_scheduler("hyperband").run())
+    ex = WorkerPoolExecutor([RemoteWorker(f"tcp://127.0.0.1:{port}")])
+    remote = (Experiment(_job()).with_tuner("v1").with_backend("sim")
+              .with_scheduler("hyperband").run(executor=ex))
+    ex.close()
+    _assert_bit_identical(serial, remote)
+    assert ex.workers[0].capabilities().remote
+
+
+def test_remote_worker_pool_fans_waves_across_processes(worker_server):
+    """Two remote workers split a wave (sticky round-robin); scores still
+    merge in wave order and match serial on the deterministic backend."""
+    services = [TrialWorkerService(), TrialWorkerService()]
+    ports = [worker_server(s) for s in services]
+    ex = WorkerPoolExecutor([RemoteWorker(f"tcp://127.0.0.1:{p}")
+                             for p in ports])
+    serial = (Experiment(_job()).with_tuner("v1").with_backend("sim")
+              .with_scheduler("random", n_trials=6).run())
+    remote = (Experiment(_job()).with_tuner("v1").with_backend("sim")
+              .with_scheduler("random", n_trials=6).run(executor=ex))
+    ex.close()
+    _assert_bit_identical(serial, remote)
+    # the fan-out actually used both worker processes
+    per_worker = [len(s.runner.records) for s in services]
+    assert all(n > 0 for n in per_worker)
+    assert sum(per_worker) == 6
+
+
+def test_remote_worker_pbt_clones_follow_their_source(worker_server):
+    """PBT exploits clone state held by a worker process; the sticky pool
+    must route the clone op to the source's worker, and results must still
+    match serial execution on the deterministic backend."""
+    services = [TrialWorkerService(), TrialWorkerService()]
+    ports = [worker_server(s) for s in services]
+    ex = WorkerPoolExecutor([RemoteWorker(f"tcp://127.0.0.1:{p}")
+                             for p in ports])
+    sched_kw = {"population": 4, "interval": 3}
+    serial = (Experiment(_job()).with_tuner("v1").with_backend("sim")
+              .with_scheduler("pbt", **sched_kw).run())
+    remote = (Experiment(_job()).with_tuner("v1").with_backend("sim")
+              .with_scheduler("pbt", **sched_kw).run(executor=ex))
+    ex.close()
+    _assert_bit_identical(serial, remote)
+
+
+def test_remote_worker_surfaces_server_errors(worker_server):
+    port = worker_server()
+    worker = RemoteWorker(f"tcp://127.0.0.1:{port}")
+    with pytest.raises(WorkerError, match="unknown op"):
+        worker._request({"op": "drop_all"})
+    # running before bind is a clear protocol error, not a hang
+    with pytest.raises(WorkerError, match="bind"):
+        worker._request({"op": "run", "workload": "w", "trial_id": "t",
+                         "hparams": {}, "epochs": 1})
+    worker.close()
+
+
+@pytest.mark.slow
+def test_python_m_repro_worker_subprocess_bit_identical():
+    """Acceptance: `python -m repro.worker` — a real separate process —
+    executes an experiment's trials bit-identically to in-process serial."""
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.worker", "--port", "0"],
+        stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True,
+        env={**__import__("os").environ, "PYTHONPATH": "src"},
+        cwd=__import__("os").path.dirname(__import__("os").path.dirname(
+            __file__)))
+    try:
+        line = proc.stdout.readline()
+        assert "trial worker on" in line, line
+        port = int(line.split(" on ", 1)[1].split()[0].rsplit(":", 1)[1])
+        serial = (Experiment(_job()).with_tuner("v1").with_backend("sim")
+                  .with_scheduler("hyperband").run())
+        ex = WorkerPoolExecutor([RemoteWorker(f"tcp://127.0.0.1:{port}")])
+        remote = (Experiment(_job()).with_tuner("v1").with_backend("sim")
+                  .with_scheduler("hyperband").run(executor=ex))
+        ex.close()
+        _assert_bit_identical(serial, remote)
+    finally:
+        proc.terminate()
+        proc.wait(timeout=10)
+
+
+# ------------------------- acceptance: warm store + remote worker (PR 3 par)
+
+def _pipetune_run(store_client, executor=None):
+    job = _job(epochs=6)
+    exp = (Experiment(job).with_tuner("pipetune", max_probes=4)
+           .with_backend("sim").with_groundtruth(store_client)
+           .with_scheduler("random", n_trials=4))
+    return exp.run(**({"executor": executor} if executor is not None else {}))
+
+
+@pytest.mark.slow
+def test_warm_remote_worker_reproduces_inproc_pipetune(tmp_path,
+                                                       worker_server):
+    """Acceptance (mirrors PR 3's store parity test): a PipeTune job whose
+    trials run on a remote worker sharing a warm GroundTruthService over
+    TCP reproduces the in-process run exactly — same gt_hit pattern, zero
+    probe epochs on hits, same locked configs."""
+    warm = str(tmp_path / "warm.jsonl")
+    svc = GroundTruthService(path=warm)
+    _pipetune_run(StoreClient(InprocTransport(svc)))       # cold warm-up
+    svc.close()
+
+    copy_a, copy_b = str(tmp_path / "a.jsonl"), str(tmp_path / "b.jsonl")
+    shutil.copy(warm, copy_a)
+    shutil.copy(warm, copy_b)
+    res_in = _pipetune_run(
+        StoreClient(InprocTransport(GroundTruthService(path=copy_a))))
+
+    store_srv = GroundTruthTCPServer(("127.0.0.1", 0),
+                                     GroundTruthService(path=copy_b))
+    threading.Thread(target=store_srv.serve_forever, daemon=True).start()
+    store_addr = f"tcp://127.0.0.1:{store_srv.server_address[1]}"
+    worker_port = worker_server()
+    # the experiment's groundtruth client reaches the TCP store, so
+    # Experiment.run forwards its address in the worker's runner spec
+    ex = WorkerPoolExecutor([RemoteWorker(f"tcp://127.0.0.1:{worker_port}")])
+    host, port = store_srv.server_address[:2]
+    res_remote = _pipetune_run(StoreClient(SocketTransport(host, port)),
+                               executor=ex)
+    ex.close()
+    spec = ex.workers[0].runner_spec
+    assert spec and spec["store"] == store_addr and \
+        spec["tuner"] == "pipetune"
+    store_srv.shutdown()
+
+    _assert_bit_identical(res_in, res_remote)
+    hits = sum(r.gt_hit for r in res_in.records.values())
+    assert hits > 0, "warm store produced no ground-truth hits"
+    for rec in res_in.records.values():
+        if rec.gt_hit:
+            assert rec.probe_epochs == 0
+    # run_job derives honest gt counters from the records even though the
+    # remote run's lookups happened out of process
+    assert (res_remote.gt_hits, res_remote.gt_misses) == \
+        (res_in.gt_hits, res_in.gt_misses)
+    assert res_remote.gt_hits == hits
+
+
+def test_remote_worker_without_derivable_spec_is_an_error(worker_server):
+    """An instance-configured experiment (backend instance, custom
+    sys_space) cannot send its runner recipe over the wire; silently
+    letting the worker run its own defaults would merge wrong scores, so it
+    must refuse loudly."""
+    from repro.cluster.sim import SimBackend, SimSystemSpace
+    port = worker_server()
+    ex = WorkerPoolExecutor([RemoteWorker(f"tcp://127.0.0.1:{port}")])
+    with pytest.raises(ValueError, match="runner spec"):
+        (Experiment(_job()).with_tuner("v1").with_backend(SimBackend())
+         .with_scheduler("random", n_trials=2).run(executor=ex))
+    with pytest.raises(ValueError, match="runner spec"):
+        (Experiment(_job()).with_tuner("v1").with_backend("sim")
+         .with_sys_space(SimSystemSpace(chips=(4,)))
+         .with_scheduler("random", n_trials=2).run(executor=ex))
+    ex.close()
+    # an explicit spec (even {} = use the worker's CLI defaults) opts out
+    ex2 = WorkerPoolExecutor(
+        [RemoteWorker(f"tcp://127.0.0.1:{port}", runner_spec={})])
+    res = (Experiment(_job()).with_tuner("v1").with_backend(SimBackend())
+           .with_scheduler("random", n_trials=2).run(executor=ex2))
+    ex2.close()
+    assert len(res.records) == 2
+
+
+# ------------------------------------------------------ transport satellite
+
+def test_socket_transport_retries_late_server():
+    """A server that comes up a moment after the client must not kill the
+    run: bounded retry-with-backoff covers the gap."""
+    probe = socket.socket()
+    probe.bind(("127.0.0.1", 0))
+    port = probe.getsockname()[1]
+    probe.close()
+
+    def start_late():
+        time.sleep(0.4)
+        server = GroundTruthTCPServer(("127.0.0.1", port),
+                                      GroundTruthService())
+        threading.Thread(target=server.serve_forever, daemon=True).start()
+
+    threading.Thread(target=start_late, daemon=True).start()
+    client = StoreClient(SocketTransport("127.0.0.1", port,
+                                         connect_retries=8,
+                                         retry_backoff_s=0.1))
+    assert client.version() == 0
+    client.close()
+
+
+def test_socket_transport_connect_failure_is_bounded_and_clear():
+    probe = socket.socket()
+    probe.bind(("127.0.0.1", 0))
+    port = probe.getsockname()[1]
+    probe.close()
+    t0 = time.time()
+    with pytest.raises(TransportError, match="could not connect"):
+        SocketTransport("127.0.0.1", port, connect_retries=0)
+    with pytest.raises(TransportError, match="2 attempt"):
+        SocketTransport("127.0.0.1", port, connect_retries=1,
+                        retry_backoff_s=0.05)
+    assert time.time() - t0 < 5.0
+
+
+# ----------------------------------------------------- launch-flag satellite
+
+def _executor_args(argv):
+    import argparse
+    from repro.launch.sysargs import add_executor_args
+    return add_executor_args(argparse.ArgumentParser()).parse_args(argv)
+
+
+def test_sysargs_rejects_silently_ignored_flag_combos():
+    from repro.launch.sysargs import executor_from_args
+    with pytest.raises(ValueError, match="--parallelism 4.*cluster"):
+        executor_from_args(_executor_args(
+            ["--parallelism", "4", "--executor", "cluster"]))
+    with pytest.raises(ValueError, match="--backends.*sharded"):
+        executor_from_args(_executor_args(
+            ["--backends", "sim,sim", "--executor", "cluster"]))
+    with pytest.raises(ValueError, match="--workers"):
+        executor_from_args(_executor_args(
+            ["--workers", "sim", "--executor", "cluster"]))
+    with pytest.raises(ValueError, match="--workers"):
+        executor_from_args(_executor_args(["--executor", "workers"]))
+
+
+def test_sysargs_workers_flag_implies_workers_executor():
+    from repro.launch.sysargs import executor_from_args
+    ex = executor_from_args(_executor_args(["--workers", "sim,sim"]))
+    assert isinstance(ex, WorkerPoolExecutor)
+    assert [w.tag for w in ex.workers] == ["sim", "sim"]
+    # legacy combinations keep working
+    assert executor_from_args(_executor_args([])).parallelism == 1
+    assert executor_from_args(_executor_args(
+        ["--parallelism", "3"])).parallelism == 3
