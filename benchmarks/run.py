@@ -121,6 +121,21 @@ def bench_async_vs_barrier():
             f"makespan_speedup={mh/ma:.2f}x")
 
 
+def bench_elastic():
+    """Elastic vs static node allocation under bursty arrivals: mean job
+    response time, with determinism + score-parity asserted inside."""
+    from benchmarks import elastic
+    out = elastic.run()
+    if out["response_reduction"] <= 0:
+        raise RuntimeError(
+            f"elastic allocation lost to the static cluster "
+            f"({out['elastic']['mean_response_s']:.0f}s vs "
+            f"{out['static']['mean_response_s']:.0f}s mean response)")
+    return (f"response_reduction={100 * out['response_reduction']:.1f}%;"
+            f"splits={out['splits']};"
+            f"reshards={out['elastic']['reshards']}")
+
+
 def bench_store_service():
     """Shared-store client cache: hot lookups stay local, socket agrees."""
     from benchmarks import store_service
@@ -272,6 +287,7 @@ def _run_all() -> None:
     _timed("fig12_real_typeIII", bench_fig12_real_typeIII)
     _timed("fig13_14_multi_tenancy", bench_fig13_14_multi_tenancy)
     _timed("async_vs_barrier", bench_async_vs_barrier)
+    _timed("elastic", bench_elastic)
     _timed("store_service", bench_store_service)
     _timed("fig1_tuning_cost", bench_fig1_tuning_cost)
     _timed("fig2_profiling_stability", bench_fig2_profiling_stability)

@@ -9,7 +9,8 @@ carries its cross-job learning.
 import numpy as np
 
 from repro.api import Experiment
-from repro.cluster.sim import ClusterConfig, ClusterSim, make_arrivals
+from repro.cluster.sim import (ClusterConfig, ClusterSim, ElasticPolicy,
+                               make_arrivals)
 from repro.core import GroundTruth, SearchSpace
 from repro.core.job import HPTJob, Param
 
@@ -25,9 +26,9 @@ def main():
         n_jobs=12, mean_interarrival_s=600.0, space=space, max_epochs=9,
         seed=0)
 
-    def report(label, factory, **cluster_kw):
+    def report(label, factory, elastic=None, **cluster_kw):
         sim = ClusterSim(ClusterConfig(n_nodes=4, seed=0, **cluster_kw),
-                         factory)
+                         factory, elastic=elastic)
         out = sim.run(jobs, scheduler="hyperband")
         resp = np.mean([o.response_s for o in out])
         acc = np.mean([o.best_accuracy for o in out])
@@ -60,6 +61,10 @@ def main():
            mtbf_s=20000.0, straggler_prob=0.05)
     report("PipeTune+faults+nomit", factory("pipetune"),
            mtbf_s=20000.0, straggler_prob=0.05, mitigate_stragglers=False)
+
+    print("\n--- elastic allocation (split nodes under queue pressure) ---")
+    report("PipeTune+elastic", factory("pipetune"),
+           elastic=ElasticPolicy(split_queue=2))
 
 
 if __name__ == "__main__":

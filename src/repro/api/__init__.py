@@ -26,12 +26,12 @@ Quickstart::
 from repro.api.backend import (  # noqa: F401
     Backend, BackendCapabilities, backend_capabilities)
 from repro.api.executor import (  # noqa: F401
-    ClusterTrialExecutor, ParallelTrialExecutor, SerialTrialExecutor,
-    ShardedTrialExecutor, WorkerPoolExecutor)
+    ClusterTrialExecutor, ElasticWorkerPoolExecutor, ParallelTrialExecutor,
+    SerialTrialExecutor, ShardedTrialExecutor, WorkerPoolExecutor)
 from repro.api.experiment import Experiment  # noqa: F401
 from repro.api.worker import (  # noqa: F401
     EngineWorker, InprocWorker, RemoteWorker, ThreadWorker, TrialCompletion,
-    Worker, WorkerCapabilities, WorkerPool)
+    Worker, WorkerCapabilities, WorkerLostError, WorkerPool)
 from repro.api.registry import (  # noqa: F401
     available_backends, available_executors, available_schedulers,
     available_tuners, default_sys_space, make_backend, make_executor,

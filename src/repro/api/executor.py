@@ -14,8 +14,10 @@ from repro.cluster.executor import ClusterTrialExecutor  # noqa: F401
 from repro.core.executor import (  # noqa: F401
     ParallelTrialExecutor, SerialTrialExecutor)
 from repro.core.worker import WorkerPoolExecutor  # noqa: F401
+from repro.service.coordinator import ElasticWorkerPoolExecutor  # noqa: F401
 from repro.service.sharded import ShardedTrialExecutor  # noqa: F401
 
 __all__ = ["SerialTrialExecutor", "ParallelTrialExecutor",
            "ClusterTrialExecutor", "ShardedTrialExecutor",
-           "WorkerPoolExecutor", "make_executor"]
+           "WorkerPoolExecutor", "ElasticWorkerPoolExecutor",
+           "make_executor"]

@@ -135,7 +135,8 @@ class Experiment:
         its own defaults would merge wrong scores (the executor raises
         instead). When the ground-truth client reaches a TCP store, its
         address rides along so every worker shares the same
-        ``GroundTruthService``."""
+        ``GroundTruthService``. Elastic pools (``--coordinator``) keep the
+        spec and hand it to every worker that joins mid-run."""
         tuner, tuner_kw = self._tuner
         backend, backend_kw = self._backend
         if not isinstance(tuner, str) or not isinstance(backend, str) or \

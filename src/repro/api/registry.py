@@ -199,15 +199,24 @@ def _make_sharded_executor(backends=None, capacity=1, default_sys=None, **kw):
 
 
 def _make_workers_executor(workers=None, runner_spec=None, sticky=True,
-                           **worker_kw):
+                           coordinator=None, refresh_s=0.5,
+                           join_timeout_s=60.0, **worker_kw):
     """Composable worker pool: each entry of `workers` is a Worker
     instance, ``tcp://HOST:PORT`` of a running ``python -m repro.worker``,
     ``"inproc"``, or a backend registry name (a local in-process shard
     pinned to that backend). `worker_kw` (connect_timeout, connect_retries,
-    retry_backoff_s) passes through to remote workers."""
+    retry_backoff_s) passes through to remote workers.
+
+    ``coordinator`` (tcp://HOST:PORT of a running ``python -m
+    repro.service.coordinator``) makes the pool *elastic*: the roster of
+    announced workers is synced between waves — joins are dialed as remote
+    workers, leaves/missed heartbeats retire them and re-place their
+    trials. The static `workers` entries (may be empty) are kept alongside.
+    """
     from repro.core.worker import InprocWorker, WorkerPoolExecutor
     resolved = []
-    for spec in (workers or ["inproc"]):
+    for spec in (workers if workers is not None
+                 else ([] if coordinator else ["inproc"])):
         if not isinstance(spec, str):
             resolved.append(spec)                       # a Worker instance
         elif spec.startswith("tcp://"):
@@ -219,6 +228,12 @@ def _make_workers_executor(workers=None, runner_spec=None, sticky=True,
         else:
             resolved.append(InprocWorker(backend=make_backend(spec),
                                          tag=spec))
+    if coordinator is not None:
+        from repro.service.coordinator import ElasticWorkerPoolExecutor
+        return ElasticWorkerPoolExecutor(
+            coordinator, workers=resolved, sticky=sticky,
+            refresh_s=refresh_s, runner_spec=runner_spec,
+            join_timeout_s=join_timeout_s, worker_kw=worker_kw)
     return WorkerPoolExecutor(resolved, sticky=sticky)
 
 

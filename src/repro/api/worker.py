@@ -11,9 +11,10 @@ from repro.cluster.worker import EngineWorker, TrialDispatch  # noqa: F401
 from repro.core.worker import (  # noqa: F401
     InprocWorker, ThreadWorker, TrialCompletion, Worker, WorkerCapabilities,
     WorkerPool, WorkerPoolExecutor)
-from repro.service.dispatch import RemoteWorker, WorkerError  # noqa: F401
+from repro.service.dispatch import (  # noqa: F401
+    RemoteWorker, WorkerError, WorkerLostError)
 
 __all__ = ["Worker", "WorkerCapabilities", "WorkerPool",
            "WorkerPoolExecutor", "TrialCompletion", "TrialDispatch",
            "InprocWorker", "ThreadWorker", "EngineWorker", "RemoteWorker",
-           "WorkerError"]
+           "WorkerError", "WorkerLostError"]

@@ -1,3 +1,5 @@
-from repro.cluster.engine import ClusterConfig, EventEngine  # noqa: F401
+from repro.cluster.engine import (  # noqa: F401
+    ClusterConfig, EventEngine, NodeSpec)
 from repro.cluster.executor import ClusterTrialExecutor  # noqa: F401
-from repro.cluster.sim import ClusterSim, SimBackend  # noqa: F401
+from repro.cluster.sim import (  # noqa: F401
+    ClusterSim, ElasticPolicy, SimBackend)

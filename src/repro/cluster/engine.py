@@ -1,4 +1,4 @@
-"""Reusable discrete-event cluster engine.
+"""Reusable discrete-event cluster engine with elastic membership.
 
 The machinery that used to live inside ``ClusterSim`` — an event heap, a
 pool of nodes with FIFO dispatch, and fault injection — extracted so that
@@ -7,23 +7,36 @@ trial-level executor (``repro.cluster.executor.ClusterTrialExecutor``) run
 on the same clock.
 
 A *task* is a generator yielding base epoch durations (seconds). The engine
-owns time: it assigns each task to the first free node (FIFO queue while all
-nodes are busy), pulls one epoch at a time from the generator, injects
-stragglers and failures into the yielded duration *at execution time*, and
-advances the node's clock by the effective duration. Because faults are
-drawn as epochs execute — not rewritten into a finished trace afterwards —
-anything observing completion times (an asynchronous scheduler, a queueing
-benchmark) sees cluster conditions the way a real tuner would.
+owns time: it assigns each task to the first compatible node with a free
+slot (FIFO queue while all are busy), pulls one epoch at a time from the
+generator, injects stragglers and failures into the yielded duration *at
+execution time*, and advances the clock by the effective duration. Because
+faults are drawn as epochs execute — not rewritten into a finished trace
+afterwards — anything observing completion times (an asynchronous
+scheduler, a queueing benchmark) sees cluster conditions the way a real
+tuner would.
+
+Nodes are described by ``NodeSpec`` (speed factor, placement tag, slot
+capacity) and membership is *mutable*: ``add_node`` joins a node mid-run,
+``retire_node`` drains one (tasks on it stop at their next epoch boundary,
+pay the restore + reconfiguration charge — the ``distributed/elastic.py``
+reshard-on-a-different-slice story — and re-queue), and ``preempt`` evicts
+a single task the same way without touching the node. A ``policy``
+callback, invoked whenever the queue changes (arrival or completion), can
+call those events to implement elastic allocation (``ClusterSim``'s
+``ElasticPolicy`` splits full nodes into slower fractional ones under
+queue pressure and merges them back when the queue drains).
 
 Determinism: fault draws come from a per-task RNG stream keyed by
 ``(cfg.seed, submission index)``, so they do not depend on how events from
 different tasks interleave on the heap; heap ties break by submission
-sequence. Two runs with the same ``ClusterConfig.seed`` and the same task
-set are identical.
+sequence, and preemption never re-draws — an evicted task resumes its
+generator (and its RNG stream) exactly where it stopped, so no epoch is
+lost or repeated. Two runs with the same ``ClusterConfig.seed``, the same
+task set, and the same join/retire/preempt schedule are identical.
 """
 from __future__ import annotations
 
-import bisect
 import collections
 import dataclasses
 import heapq
@@ -33,6 +46,24 @@ from typing import (Callable, Dict, Generator, Iterable, Iterator, List,
                     Optional, Sequence)
 
 import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class NodeSpec:
+    """One node's capabilities: relative speed (1.0 = the baseline node —
+    epoch durations divide by it), placement tag (a task submitted with
+    ``tag=T`` runs only on nodes tagged ``T``), and slot capacity (how many
+    tasks the node holds concurrently)."""
+    speed: float = 1.0
+    tag: Optional[str] = None
+    capacity: int = 1
+
+    def __post_init__(self):
+        if not self.speed > 0.0:
+            raise ValueError(f"node speed must be > 0, got {self.speed}")
+        if self.capacity < 1:
+            raise ValueError(f"node capacity must be >= 1, "
+                             f"got {self.capacity}")
 
 
 @dataclasses.dataclass
@@ -53,12 +84,26 @@ class ClusterConfig:
     # tag=T runs only on nodes tagged T; untagged tasks run anywhere.
     # The sharded executor tags each node with the backend it hosts.
     node_tags: Optional[Sequence[str]] = None
+    # full per-node specs (heterogeneous clusters). Authoritative when set:
+    # n_nodes/node_tags are derived from it. The n_nodes+node_tags
+    # constructor is the back-compat path building all-speed-1.0 specs.
+    nodes: Optional[Sequence[NodeSpec]] = None
 
     def __post_init__(self):
+        if self.nodes is not None:
+            if self.node_tags is not None:
+                raise ValueError("pass tags inside NodeSpec when using "
+                                 "nodes=; node_tags is the legacy spelling")
+            self.nodes = tuple(self.nodes)
+            self.n_nodes = len(self.nodes)
+            return
         if self.node_tags is not None and len(self.node_tags) != self.n_nodes:
             raise ValueError(
                 f"node_tags has {len(self.node_tags)} entries for "
                 f"{self.n_nodes} nodes")
+        tags = (list(self.node_tags) if self.node_tags is not None
+                else [None] * self.n_nodes)
+        self.nodes = tuple(NodeSpec(tag=t) for t in tags)
 
 
 @dataclasses.dataclass
@@ -74,6 +119,7 @@ class TaskStats:
     n_epochs: int = 0
     n_failures: int = 0
     n_stragglers: int = 0
+    n_preemptions: int = 0          # epoch-boundary evictions (retire/preempt)
 
     @property
     def queue_s(self) -> float:
@@ -81,7 +127,8 @@ class TaskStats:
 
 
 class _Task:
-    __slots__ = ("stats", "gen", "rng", "on_done", "base_durations", "tag")
+    __slots__ = ("stats", "gen", "rng", "on_done", "base_durations", "tag",
+                 "started", "vacate", "pending_charge", "next_base")
 
     def __init__(self, stats: TaskStats, gen: Iterator[float],
                  rng: np.random.RandomState, on_done,
@@ -92,15 +139,21 @@ class _Task:
         self.on_done = on_done
         self.base_durations: List[float] = []   # pre-fault, for mitigation
         self.tag = tag                          # placement constraint
+        self.started = False                    # ever dispatched to a node
+        self.vacate = False                     # stop at next epoch boundary
+        self.pending_charge = 0.0               # reshard cost paid at resume
+        self.next_base: Optional[float] = None  # epoch peeked before a vacate
 
 
 class EventEngine:
-    """Event heap + per-node FIFO dispatch + execution-time fault injection.
+    """Event heap + per-node slot dispatch + execution-time fault injection.
 
     ``submit`` registers a task (generator of base epoch durations); ``run``
     drains the heap; ``run_next_completion`` advances until exactly one task
     finishes — the hook an asynchronous driver uses to report results at
-    their simulated completion times.
+    their simulated completion times. ``add_node`` / ``retire_node`` /
+    ``preempt`` mutate membership (module docstring); ``policy``, when set,
+    is called after every arrival and completion and may invoke them.
     """
 
     def __init__(self, cfg: ClusterConfig):
@@ -109,12 +162,16 @@ class EventEngine:
         self.completed: List[TaskStats] = []
         self._heap: List[tuple] = []            # (time, seq, thunk)
         self._seq = itertools.count()
-        self._free = list(range(cfg.n_nodes))   # sorted free-node ids
-        self._tags = (list(cfg.node_tags) if cfg.node_tags is not None
-                      else [None] * cfg.n_nodes)
+        self._nodes: List[NodeSpec] = list(cfg.nodes)
+        self._in_use: List[int] = [0] * len(self._nodes)
+        self._retired: set = set()              # out of service, empty
+        self._draining: set = set()             # retiring, tasks still on it
         self._waiting: collections.deque = collections.deque()
+        self._live: Dict[str, _Task] = {}       # submitted, not yet finished
         self._n_submitted = 0
         self._n_active = 0
+        self.policy: Optional[Callable[["EventEngine"], None]] = None
+        self._in_policy = False
 
     # ------------------------------------------------------------- submit
     def submit(self, task_id: str, process: Iterator[float],
@@ -124,18 +181,20 @@ class EventEngine:
         """Schedule `process` (a generator of base epoch durations) to
         arrive at time `at` (default: now). Returns the live stats object,
         filled in as the task executes. ``tag`` restricts placement to
-        nodes carrying the same ``ClusterConfig.node_tags`` entry."""
+        nodes whose ``NodeSpec.tag`` matches."""
         at = self.now if at is None else at
         if at < self.now:
             raise ValueError(f"cannot submit in the past ({at} < {self.now})")
-        if tag is not None and tag not in self._tags:
-            raise ValueError(f"no node tagged {tag!r} "
-                             f"(tags: {sorted(set(self._tags) - {None})})")
+        if tag is not None and all(s.tag != tag for s in self._nodes):
+            raise ValueError(
+                f"no node tagged {tag!r} (tags: "
+                f"{sorted({s.tag for s in self._nodes} - {None})})")
         stats = TaskStats(task_id=task_id, submit_s=at)
         rng = np.random.RandomState(
             (self.cfg.seed * 1_000_003 + 7919 * self._n_submitted)
             % (2 ** 31 - 1))
         task = _Task(stats, iter(process), rng, on_done, tag=tag)
+        self._live[task_id] = task
         self._n_submitted += 1
         self._n_active += 1
         self._push(at, lambda: self._arrive(task))
@@ -146,11 +205,85 @@ class EventEngine:
         """Tasks submitted but not yet finished (queued or running)."""
         return self._n_active
 
+    # ----------------------------------------------------- node membership
+    @property
+    def n_waiting(self) -> int:
+        """Tasks queued for a free compatible slot (the policy's pressure
+        signal)."""
+        return len(self._waiting)
+
+    def node_spec(self, node: int) -> NodeSpec:
+        return self._nodes[node]
+
+    @property
+    def _tags(self) -> List[Optional[str]]:
+        # pre-NodeSpec spelling of per-node tags, kept for callers that
+        # indexed it directly
+        return [s.tag for s in self._nodes]
+
+    def node_ids(self, active_only: bool = True) -> List[int]:
+        return [i for i in range(len(self._nodes))
+                if not active_only or self.node_active(i)]
+
+    def node_active(self, node: int) -> bool:
+        """Accepting work: joined, not retired, not draining."""
+        return node not in self._retired and node not in self._draining
+
+    def node_busy(self, node: int) -> int:
+        """Slots currently occupied on `node`."""
+        return self._in_use[node]
+
+    def add_node(self, spec: Optional[NodeSpec] = None,
+                 at: Optional[float] = None, **spec_kw) -> int:
+        """Join a node (``NodeSpec`` or its fields) at time `at` (default:
+        immediately). Returns the new node id; the node starts pulling
+        compatible waiters the moment it joins."""
+        if spec is not None and spec_kw:
+            raise ValueError("pass a NodeSpec or field kwargs, not both")
+        spec = spec if spec is not None else NodeSpec(**spec_kw)
+        node = len(self._nodes)
+        self._nodes.append(spec)
+        self._in_use.append(0)
+        self._retired.add(node)                 # inactive until the join fires
+        if at is None or at <= self.now:
+            self._join(node)
+        else:
+            self._push(at, lambda: self._join(node))
+        return node
+
+    def retire_node(self, node: int, at: Optional[float] = None) -> None:
+        """Take `node` out of service at time `at` (default: immediately).
+        Idle nodes leave at once; a busy node drains — each task on it stops
+        at its next epoch boundary, pays the restore + reconfiguration
+        charge, and re-queues onto the surviving nodes."""
+        if not 0 <= node < len(self._nodes):
+            raise ValueError(f"unknown node {node}")
+        if at is None or at <= self.now:
+            self._do_retire(node)
+        else:
+            self._push(at, lambda: self._do_retire(node))
+
+    def preempt(self, task_id: str, at: Optional[float] = None) -> None:
+        """Evict `task_id` from its node at its next epoch boundary after
+        `at` (default: now): it pays the restore + reconfiguration charge
+        and re-queues (FIFO, behind current waiters). A waiting or already
+        finished task is left alone. No completed epoch is lost or redone —
+        the task's generator resumes exactly where it stopped."""
+        if at is None or at <= self.now:
+            self._do_preempt(task_id)
+        else:
+            self._push(at, lambda: self._do_preempt(task_id))
+
     # ---------------------------------------------------------------- run
     def run(self) -> None:
         """Drain the heap (all submitted tasks run to completion)."""
         while self._heap:
             self._step()
+        if self._waiting:
+            stuck = [t.stats.task_id for t in self._waiting]
+            raise RuntimeError(
+                f"engine drained with {len(stuck)} task(s) unplaceable "
+                f"(no active compatible node remains): {stuck[:5]}")
 
     def run_next_completion(self) -> Optional[TaskStats]:
         """Advance the clock until one task finishes; returns its stats
@@ -170,45 +303,122 @@ class EventEngine:
         thunk()
 
     def _compatible(self, task: _Task, node: int) -> bool:
-        return task.tag is None or task.tag == self._tags[node]
+        return task.tag is None or task.tag == self._nodes[node].tag
+
+    def _free_slots(self, node: int) -> int:
+        if not self.node_active(node):
+            return 0
+        return self._nodes[node].capacity - self._in_use[node]
 
     def _arrive(self, task: _Task) -> None:
-        for i, node in enumerate(self._free):   # first compatible free node
-            if self._compatible(task, node):
-                self._start(task, self._free.pop(i))
-                return
-        self._waiting.append(task)
+        for node in range(len(self._nodes)):    # lowest-id compatible slot
+            if self._free_slots(node) and self._compatible(task, node):
+                self._claim(task, node)
+                break
+        else:
+            self._waiting.append(task)
+        self._run_policy()
 
-    def _start(self, task: _Task, node: int) -> None:
+    def _claim(self, task: _Task, node: int) -> None:
+        self._in_use[node] += 1
         task.stats.node = node
-        task.stats.start_s = self.now
+        if not task.started:
+            task.started = True
+            task.stats.start_s = self.now
         self._advance(task)
 
     def _advance(self, task: _Task) -> None:
-        try:
-            base = float(next(task.gen))
-        except StopIteration:
-            self._finish(task)
+        # pull the next epoch *before* honoring a vacate: a task whose
+        # generator is exhausted at the boundary has nothing left to
+        # migrate — it finishes in place (even on a draining node)
+        if task.next_base is None:
+            try:
+                task.next_base = float(next(task.gen))
+            except StopIteration:
+                self._finish(task)
+                return
+        if task.vacate or task.stats.node in self._draining:
+            self._vacate(task)          # keeps next_base for the new node
             return
+        base, task.next_base = task.next_base, None
+        base /= self._nodes[task.stats.node].speed
         eff = self._inject_faults(task, base)
+        if task.pending_charge:
+            eff += task.pending_charge          # reshard paid on first epoch
+            task.pending_charge = 0.0           # after the migration
         task.stats.service_s += eff
         task.stats.n_epochs += 1
         self._push(self.now + eff, lambda: self._advance(task))
+
+    def _vacate(self, task: _Task) -> None:
+        """Epoch-boundary eviction (node retiring, or explicit preempt):
+        release the slot, charge the reshard (restore + reconfig, the
+        elastic restore-on-a-different-slice path) against the task's next
+        epoch, and re-arrive it behind the current waiters."""
+        node = task.stats.node
+        task.stats.node = -1
+        task.vacate = False
+        task.stats.n_preemptions += 1
+        task.pending_charge += self.cfg.restore_s + self.cfg.reconfig_s
+        self._release_slot(node)
+        self._push(self.now, lambda: self._arrive(task))
 
     def _finish(self, task: _Task) -> None:
         task.stats.finish_s = self.now
         self.completed.append(task.stats)
         self._n_active -= 1
-        node = task.stats.node
-        for i, waiter in enumerate(self._waiting):  # FIFO among compatible
-            if self._compatible(waiter, node):
-                del self._waiting[i]
-                self._start(waiter, node)
-                break
-        else:
-            bisect.insort(self._free, node)
+        self._live.pop(task.stats.task_id, None)
+        self._release_slot(task.stats.node)
         if task.on_done is not None:
             task.on_done(task.stats)
+        self._run_policy()
+
+    def _claim_waiter(self, node: int) -> bool:
+        """Hand one free slot on `node` to the first compatible waiter
+        (FIFO); False when none is compatible."""
+        for i, waiter in enumerate(self._waiting):
+            if self._compatible(waiter, node):
+                del self._waiting[i]
+                self._claim(waiter, node)
+                return True
+        return False
+
+    def _release_slot(self, node: int) -> None:
+        self._in_use[node] -= 1
+        if node in self._draining:
+            if self._in_use[node] == 0:         # last task left: gone
+                self._draining.discard(node)
+                self._retired.add(node)
+            return
+        self._claim_waiter(node)
+
+    def _join(self, node: int) -> None:
+        self._retired.discard(node)
+        while self._free_slots(node) and self._claim_waiter(node):
+            pass
+
+    def _do_retire(self, node: int) -> None:
+        if node in self._retired or node in self._draining:
+            return
+        if self._in_use[node] == 0:
+            self._retired.add(node)
+        else:
+            self._draining.add(node)            # tasks vacate at their next
+        #                                         epoch boundary
+
+    def _do_preempt(self, task_id: str) -> None:
+        task = self._live.get(task_id)
+        if task is not None and task.stats.node >= 0:
+            task.vacate = True
+
+    def _run_policy(self) -> None:
+        if self.policy is None or self._in_policy:
+            return
+        self._in_policy = True
+        try:
+            self.policy(self)
+        finally:
+            self._in_policy = False
 
     def _inject_faults(self, task: _Task, d: float) -> float:
         """Straggler + failure model applied to one epoch as it executes

@@ -29,7 +29,7 @@ from __future__ import annotations
 
 from typing import List, Optional, Sequence, Tuple
 
-from repro.cluster.engine import ClusterConfig
+from repro.cluster.engine import ClusterConfig, NodeSpec
 from repro.cluster.worker import EngineWorker, TrialDispatch  # noqa: F401
 from repro.core.schedulers import TrialProposal
 from repro.core.worker import WorkerPool
@@ -56,7 +56,7 @@ class ClusterTrialExecutor:
         self.worker = EngineWorker(self.cfg, default_sys=default_sys,
                                    placement=self._placement)
         self.pool = WorkerPool([self.worker])
-        self.parallelism = self.cfg.n_nodes
+        self.parallelism = sum(s.capacity for s in self.cfg.nodes)
 
     @property
     def engine(self):
@@ -74,6 +74,22 @@ class ClusterTrialExecutor:
     def sim_now(self) -> float:
         """Current simulated time (the job's makespan once it finishes)."""
         return self.engine.now
+
+    # ------------------------------------------------- elastic membership
+    def add_node(self, spec: Optional[NodeSpec] = None,
+                 at: Optional[float] = None, **spec_kw) -> int:
+        """Join a simulated node mid-job — trials queued for capacity start
+        on it the moment it joins."""
+        return self.worker.add_node(spec, at=at, **spec_kw)
+
+    def retire_node(self, node: int, at: Optional[float] = None) -> None:
+        """Drain a node: its trials stop at their next epoch boundary, pay
+        the restore + reconfiguration charge, and re-queue elsewhere."""
+        self.worker.retire_node(node, at=at)
+
+    def preempt(self, trial_id: str, at: Optional[float] = None) -> None:
+        """Evict one trial the same way without touching its node."""
+        self.worker.preempt(trial_id, at=at)
 
     # ---------------------------------------------------------- drive loops
     def run_wave(self, runner, workload: str,

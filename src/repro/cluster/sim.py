@@ -12,8 +12,13 @@ fault-tolerance machinery required at 1000+ node scale:
   * stragglers: an epoch is slowed k-x with probability p; mitigation
     launches a backup epoch when the epoch exceeds median + 3*MAD, capping
     the effective time (speculative re-execution).
-  * elastic allocation: jobs may shrink to fewer chips when the queue is
-    long (epoch-boundary re-shard, same machinery as system-param switching).
+  * elastic allocation (``ClusterSim(elastic=ElasticPolicy())``): when the
+    queue is long, full nodes split into fractional ones — every job placed
+    there runs on fewer chips (slower epochs, sublinear per Fig 3b) but more
+    jobs run at once; a job caught on a splitting node re-shards at its next
+    epoch boundary (restore + reconfig charge, the same machinery as
+    system-param switching) and re-queues. When the queue drains, idle
+    fractional nodes merge back into full ones.
 
 The simulator runs each job's *tuner for real* (PipeTune / TuneV1 / TuneV2
 over SimBackend's modeled epochs), so tuning-policy differences — probing
@@ -39,7 +44,7 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.cluster import perfmodel
-from repro.cluster.engine import (ClusterConfig, EventEngine,
+from repro.cluster.engine import (ClusterConfig, EventEngine, NodeSpec,
                                   charged_epoch_durations, reconfig_charge_s)
 from repro.core import energy as energy_lib
 from repro.core.backends import BackendCapabilities, EpochResult, TrialState
@@ -132,24 +137,114 @@ class JobOutcome:
     n_stragglers: int
     best_accuracy: float
     energy_j: float
+    n_preemptions: int = 0      # epoch-boundary reshard/migrations (elastic)
 
     @property
     def response_s(self) -> float:
         return self.finish - self.arrival
 
 
+class ElasticPolicy:
+    """Elastic node allocation on the event engine (the §7.4 "shrink to
+    fewer chips when the queue is long" story, made real).
+
+    Invoked by the engine after every arrival and completion:
+
+    * **shrink under queue pressure** — while ``split_queue`` or more jobs
+      wait, retire one full node and add ``split_factor`` nodes running at
+      ``split_speed`` of it. Each job placed there gets a fraction of the
+      chips — slower epochs — but ``split_factor`` jobs run concurrently.
+      ``split_speed`` defaults above ``1/split_factor`` because chip scaling
+      is sublinear for these workloads (perfmodel, Fig 3b): half the chips
+      keeps well over half the throughput. A job already on the splitting
+      node re-shards at its next epoch boundary (restore + reconfig charge)
+      and re-queues — the ``distributed/elastic.py`` machinery.
+    * **grow when idle** — when the queue is empty, any split whose
+      fractional nodes are all idle merges back into the original node
+      (free: nothing is running, nothing re-shards).
+
+    Deterministic: a pure function of engine state, so two runs with the
+    same seed and arrivals reconfigure identically.
+    """
+
+    def __init__(self, split_queue: int = 2, split_factor: int = 2,
+                 split_speed: float = 0.65, max_splits: Optional[int] = None):
+        if split_queue < 1:
+            raise ValueError("split_queue must be >= 1")
+        if split_factor < 2:
+            raise ValueError("split_factor must be >= 2")
+        if not 0.0 < split_speed < 1.0:
+            raise ValueError("split_speed must be in (0, 1)")
+        self.split_queue = split_queue
+        self.split_factor = split_factor
+        self.split_speed = split_speed
+        self.max_splits = max_splits
+        self.n_splits = 0
+        self.n_merges = 0
+        self._groups: List[dict] = []       # live splits: {kids, spec}
+        self._children: set = set()         # node ids created by splits
+
+    def __call__(self, engine: EventEngine) -> None:
+        while engine.n_waiting >= self.split_queue and self._split(engine):
+            pass
+        if engine.n_waiting == 0:
+            self._merge(engine)
+
+    # ------------------------------------------------------------ internals
+    def _splittable(self, engine: EventEngine) -> Optional[int]:
+        """Lowest-id full (non-child, non-retiring) node; idle ones first so
+        a split never forces a re-shard it could avoid."""
+        full = [i for i in engine.node_ids() if i not in self._children]
+        idle = [i for i in full if engine.node_busy(i) == 0]
+        return idle[0] if idle else (full[0] if full else None)
+
+    def _split(self, engine: EventEngine) -> bool:
+        if self.max_splits is not None and \
+                len(self._groups) >= self.max_splits:
+            return False
+        node = self._splittable(engine)
+        if node is None:
+            return False
+        spec = engine.node_spec(node)
+        engine.retire_node(node)
+        kids = [engine.add_node(NodeSpec(speed=spec.speed * self.split_speed,
+                                         tag=spec.tag,
+                                         capacity=spec.capacity))
+                for _ in range(self.split_factor)]
+        self._children.update(kids)
+        self._groups.append({"kids": kids, "spec": spec})
+        self.n_splits += 1
+        return True
+
+    def _merge(self, engine: EventEngine) -> None:
+        for g in list(self._groups):
+            if all(engine.node_active(k) and engine.node_busy(k) == 0
+                   for k in g["kids"]):
+                for k in g["kids"]:
+                    engine.retire_node(k)
+                engine.add_node(g["spec"])
+                self._groups.remove(g)
+                self.n_merges += 1
+
+
 class ClusterSim:
     def __init__(self, cfg: ClusterConfig, runner_factory: Callable[[], Any],
-                 mode: str = "event"):
+                 mode: str = "event", elastic: Optional[ElasticPolicy] = None):
         """runner_factory builds a fresh TrialRunner per job (they may share
         a GroundTruth store — that's PipeTune's cross-job learning).
         ``mode`` selects the event engine (default) or the legacy
-        post-hoc-fault path (see module docstring)."""
+        post-hoc-fault path (see module docstring); ``elastic`` attaches an
+        ``ElasticPolicy`` reconfiguring nodes as queue pressure changes
+        (event mode only)."""
         if mode not in ("event", "legacy"):
             raise ValueError(f"mode must be 'event' or 'legacy', got {mode!r}")
+        if elastic is not None and mode != "event":
+            raise ValueError("elastic allocation needs the event engine "
+                             "(mode='event')")
         self.cfg = cfg
         self.runner_factory = runner_factory
         self.mode = mode
+        self.elastic = elastic
         self.rng = np.random.RandomState(cfg.seed)
 
     # -------------------------------------------------------------- service
@@ -241,6 +336,7 @@ class ClusterSim:
         the node that picked it up, and the scheduler inside the job observes
         epochs that already carry straggler/failure/reconfig costs."""
         engine = EventEngine(self.cfg)
+        engine.policy = self.elastic
         entries = []                            # (job, holder, stats)
         for job in sorted(jobs, key=lambda j: j.arrival_time):
             holder: Dict[str, float] = {}
@@ -255,6 +351,7 @@ class ClusterSim:
             finish=stats.finish_s, service_s=stats.service_s,
             n_epochs=stats.n_epochs, n_failures=stats.n_failures,
             n_stragglers=stats.n_stragglers,
+            n_preemptions=stats.n_preemptions,
             best_accuracy=holder.get("best_accuracy", 0.0),
             energy_j=holder.get("energy_j", 0.0))
             for job, holder, stats in entries]

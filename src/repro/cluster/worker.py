@@ -18,7 +18,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Dict, List, Optional
 
-from repro.cluster.engine import (ClusterConfig, EventEngine,
+from repro.cluster.engine import (ClusterConfig, EventEngine, NodeSpec,
                                   charged_epoch_durations, reconfig_charge_s)
 from repro.core.schedulers import TrialProposal
 from repro.core.worker import TrialCompletion, Worker, WorkerCapabilities
@@ -69,8 +69,12 @@ class EngineWorker(Worker):
         self._outstanding = 0
 
     def capabilities(self) -> WorkerCapabilities:
-        return WorkerCapabilities(kind=self.kind, capacity=self.cfg.n_nodes,
-                                  simulated=True)
+        specs = [self.engine.node_spec(i) for i in self.engine.node_ids()]
+        slots = sum(s.capacity for s in specs)
+        speed = (sum(s.speed * s.capacity for s in specs) / max(slots, 1)
+                 if specs else 1.0)
+        return WorkerCapabilities(kind=self.kind, capacity=max(slots, 1),
+                                  simulated=True, speed_factor=speed)
 
     @property
     def outstanding(self) -> int:
@@ -82,6 +86,22 @@ class EngineWorker(Worker):
         The clock persists across waves: a multi-wave job accumulates
         simulated time exactly like a tuning job occupying the cluster."""
         return self.engine.now
+
+    # ------------------------------------------------- elastic membership
+    def add_node(self, spec: Optional[NodeSpec] = None,
+                 at: Optional[float] = None, **spec_kw) -> int:
+        """Join a simulated node mid-job (see ``EventEngine.add_node``)."""
+        return self.engine.add_node(spec, at=at, **spec_kw)
+
+    def retire_node(self, node: int, at: Optional[float] = None) -> None:
+        """Drain a simulated node: its trials re-shard at their next epoch
+        boundary and re-queue (see ``EventEngine.retire_node``)."""
+        self.engine.retire_node(node, at=at)
+
+    def preempt(self, trial_id: str, at: Optional[float] = None) -> None:
+        """Evict one trial at its next epoch boundary (restore + reconfig
+        charge, no epoch lost or repeated)."""
+        self.engine.preempt(trial_id, at=at)
 
     def submit(self, trial: TrialProposal,
                epochs: Optional[int] = None) -> None:

@@ -1,0 +1,11 @@
+"""``python -m repro.coordinator`` — the worker-discovery coordinator.
+
+Thin entry-point package (same shape as ``repro.worker``); the
+implementation lives in ``repro.service.coordinator`` (registry service,
+announcer, roster-synced elastic executor).
+"""
+from repro.service.coordinator import (  # noqa: F401
+    CoordinatorService, CoordinatorTCPServer, main, serve_coordinator)
+
+__all__ = ["CoordinatorService", "CoordinatorTCPServer", "serve_coordinator",
+           "main"]

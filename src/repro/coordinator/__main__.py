@@ -1,0 +1,4 @@
+from repro.service.coordinator import main
+
+if __name__ == "__main__":
+    main()

@@ -40,6 +40,7 @@ from __future__ import annotations
 import concurrent.futures as cf
 import dataclasses
 import queue
+import time
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.schedulers import TrialProposal
@@ -56,6 +57,9 @@ class WorkerCapabilities:
     capacity: int = 1            # trials the worker can hold concurrently
     simulated: bool = False      # completions carry simulated, not wall time
     remote: bool = False         # trials execute in another process
+    speed_factor: float = 1.0    # relative throughput (1.0 = baseline node);
+    #                              placement weights load by it, so a 2x
+    #                              worker draws twice the trials
 
 
 @dataclasses.dataclass
@@ -233,18 +237,51 @@ class WorkerPool:
     ``sticky=True`` binds each trial to one worker for its whole life —
     required whenever workers hold private trial state (remote workers,
     pinned-backend shards): rung-resumed epochs and PBT clones must return
-    to the worker that owns their state. Non-sticky pools place on the
-    least-loaded worker (ties by pool order).
+    to the worker that owns their state.
+
+    Placement is capacity- and speed-aware: the next trial goes to the
+    worker with the least load relative to its declared
+    ``capabilities().capacity * speed_factor`` (ties by pool order). Load is
+    trials in flight for free pools, live trial bindings for sticky ones —
+    a 4-lane or 2x-speed worker draws proportionally more of the wave.
+
+    Membership is *mutable*: ``add_worker`` joins a worker mid-``drive``
+    (it is bound to the current runner/workload and immediately eligible;
+    any backlogged trials dispatch to it), ``remove_worker`` retires one —
+    in-flight trials on it are drained (``drain=True``) or re-placed onto
+    the survivors, and its sticky bindings migrate (a re-placed trial
+    re-runs its epochs on the new worker: state private to the dead worker
+    is gone, which on a deterministic backend reproduces the same record).
+    A completion carrying an error whose exception is flagged
+    ``worker_lost`` (transport death — see ``repro.service.dispatch``)
+    retires the worker the same way when ``retire_on_error`` is set,
+    instead of killing the run.
+
+    ``maintenance``, when set, is called between waves and whenever the
+    pool blocks for completions — the hook a coordinator-backed executor
+    uses to sync the live roster (joins/leaves) into the pool.
     """
 
-    def __init__(self, workers: Sequence[Worker], sticky: bool = False):
-        if not workers:
+    def __init__(self, workers: Sequence[Worker], sticky: bool = False,
+                 allow_empty: bool = False, join_timeout_s: float = 60.0):
+        if not workers and not allow_empty:
             raise ValueError("need at least one worker")
         self.workers: List[Worker] = list(workers)
         self.sticky = sticky
+        self.retire_on_error = False
+        self.maintenance: Optional[Any] = None      # no-arg callable
+        self.join_timeout_s = join_timeout_s
+        self.drain_timeout_s = 30.0
+        self.dispatched: Dict[int, int] = {}        # id(worker) -> n trials
         self._bindings: Dict[str, Worker] = {}
-        self._rr = 0
         self._bound_key: Optional[Tuple[int, str]] = None
+        self._bound: Optional[Tuple[Any, str]] = None   # (runner, workload)
+        self._inflight: Dict[str, Tuple[TrialProposal, int]] = {}
+        self._inflight_worker: Dict[str, Worker] = {}
+        self._backlog: List[Tuple[TrialProposal, int]] = []
+        self._drained: List[TrialCompletion] = []
+        self._poll_rr = 0
+        self._stall_t0: Optional[float] = None
 
     # ------------------------------------------------------------- binding
     def bind(self, runner, workload: str) -> None:
@@ -254,12 +291,21 @@ class WorkerPool:
                 w.bind(runner, workload)
             self._bindings.clear()
             self._bound_key = key
+            self._bound = (runner, workload)
+
+    def _weight(self, w: Worker) -> float:
+        caps = w.capabilities()
+        return max(1, caps.capacity) * max(caps.speed_factor, 1e-9)
 
     def place(self, p: TrialProposal) -> Worker:
         """The worker that executes `p` (the executor's placement policy)."""
+        if not self.workers:
+            raise RuntimeError("worker pool has no workers to place on")
         if not self.sticky:
-            # ties break to the first worker: min returns the earliest
-            return min(self.workers, key=lambda w: w.outstanding)
+            # least in-flight load per unit of declared throughput; ties
+            # break to the first worker (min returns the earliest)
+            return min(self.workers,
+                       key=lambda w: w.outstanding / self._weight(w))
         w = None
         if p.clone_from is not None:
             # a PBT exploit discards the destination's own state for a copy
@@ -269,13 +315,66 @@ class WorkerPool:
         if w is None:
             w = self._bindings.get(p.trial_id)
         if w is None:
-            w = self.workers[self._rr % len(self.workers)]
-            self._rr += 1
+            # first sight: least live trials per unit of throughput, so
+            # fast/wide workers own proportionally more of the population
+            held: Dict[int, int] = {}
+            for bw in self._bindings.values():
+                held[id(bw)] = held.get(id(bw), 0) + 1
+            w = min(self.workers,
+                    key=lambda w_: held.get(id(w_), 0) / self._weight(w_))
         self._bindings[p.trial_id] = w
         return w
 
     def worker_of(self, trial_id: str) -> Optional[Worker]:
         return self._bindings.get(trial_id)
+
+    # ----------------------------------------------------- pool membership
+    def add_worker(self, worker: Worker) -> None:
+        """Join `worker` mid-run: bound to the current runner/workload (may
+        raise — e.g. a remote worker with no runner spec — in which case the
+        pool is unchanged), then immediately eligible for placement; any
+        backlogged trials (stranded by earlier removals) dispatch to it."""
+        if self._bound is not None:
+            worker.bind(*self._bound)
+        self.workers.append(worker)
+        self._stall_t0 = None
+        backlog, self._backlog = self._backlog, []
+        for p, epochs in backlog:
+            self._dispatch(p, epochs)
+
+    def remove_worker(self, worker: Worker, drain: bool = False) -> None:
+        """Retire `worker`. ``drain=True`` first waits (bounded) for its
+        in-flight trials to finish, collecting their completions; anything
+        still unfinished — and everything, when not draining — is re-placed
+        onto the surviving workers (or backlogged until one joins). Sticky
+        bindings to the worker are dropped, so resumed trials re-place
+        freely."""
+        if worker not in self.workers:
+            return
+        if drain:
+            deadline = time.monotonic() + self.drain_timeout_s
+            try:
+                while worker.outstanding and time.monotonic() < deadline:
+                    self._absorb(worker, worker.poll(timeout=0.05),
+                                 self._drained)
+            except Exception:       # noqa: BLE001 — a dying worker mid-drain
+                pass                # falls through to re-placement
+            if worker not in self.workers:
+                return              # died mid-drain: _absorb already
+        self.workers.remove(worker)  # retired it and re-placed its trials
+        for tid, w in list(self._bindings.items()):
+            if w is worker:
+                del self._bindings[tid]
+        orphans = [tid for tid, w in self._inflight_worker.items()
+                   if w is worker]
+        try:
+            worker.close()
+        except Exception:           # noqa: BLE001 — already-dead transport
+            pass
+        for tid in orphans:
+            p, epochs = self._inflight.pop(tid)
+            del self._inflight_worker[tid]
+            self._dispatch(p, epochs)
 
     # ---------------------------------------------------------- drive loops
     def run_wave(self, runner, workload: str,
@@ -285,9 +384,10 @@ class WorkerPool:
         regardless of completion order (scheduler decisions never depend on
         scheduling noise)."""
         self.bind(runner, workload)
+        self._maintain()                # pick up joins/leaves between waves
         self._apply_wave_clones(proposals)
         for p in proposals:
-            self.place(p).submit(p, p.epochs)
+            self._dispatch(p, p.epochs)
         want = {p.trial_id for p in proposals}
         done: Dict[str, TrialCompletion] = {}
         while want - done.keys():
@@ -305,9 +405,10 @@ class WorkerPool:
         while True:
             wave = scheduler.suggest()
             if wave:
+                self._maintain()
                 self._apply_wave_clones(wave)
                 for p in wave:
-                    self.place(p).submit(p, p.epochs)
+                    self._dispatch(p, p.epochs)
                     outstanding.add(p.trial_id)
                 continue
             if not outstanding:
@@ -324,6 +425,22 @@ class WorkerPool:
             w.close()
 
     # ------------------------------------------------------------ internals
+    def _maintain(self) -> None:
+        if self.maintenance is not None:
+            self.maintenance()
+
+    def _dispatch(self, p: TrialProposal, epochs: Optional[int]) -> None:
+        epochs = p.epochs if epochs is None else epochs
+        if not self.workers:
+            self._backlog.append((p, epochs))   # held until a worker joins
+            return
+        w = self.place(p)
+        w.submit(p, epochs)
+        self._inflight[p.trial_id] = (p, epochs)
+        self._inflight_worker[p.trial_id] = w
+        self.dispatched[id(w)] = self.dispatched.get(id(w), 0) + 1
+        self._stall_t0 = None
+
     def _apply_wave_clones(self, proposals: Sequence[TrialProposal]) -> None:
         # clone sources must be wave-boundary snapshots, so apply for the
         # whole wave before any of it starts executing
@@ -331,38 +448,108 @@ class WorkerPool:
             if p.clone_from is not None:
                 self.place(p).clone(p.trial_id, p.clone_from)
 
+    def _absorb(self, worker: Worker, completions: List[TrialCompletion],
+                out: List[TrialCompletion]) -> None:
+        """File one worker's poll batch: successes clear their in-flight
+        entry; a transport-death error retires the worker (when enabled) and
+        re-places its remaining trials instead of surfacing. Successes are
+        filed first so a batch that completed trials *before* dying doesn't
+        re-run them."""
+        errors = [c for c in completions if c.error is not None]
+        for c in completions:
+            if c.error is None:
+                self._inflight.pop(c.trial_id, None)
+                self._inflight_worker.pop(c.trial_id, None)
+                out.append(c)
+        for c in errors:
+            if self.retire_on_error and \
+                    getattr(c.error, "worker_lost", False):
+                self.remove_worker(worker)      # no-op once removed;
+            else:                               # re-places its trials
+                out.append(c)
+
     def _poll_once(self, block: bool) -> List[TrialCompletion]:
-        out: List[TrialCompletion] = []
-        for w in self.workers:
-            out.extend(w.poll())
+        out, self._drained = self._drained, []
+        for w in list(self.workers):
+            self._absorb(w, w.poll(), out)
         if not out and block:
+            # sync the roster even while workers are busy: a hung-but-
+            # connected worker never errors its transport, so the only way
+            # its trials get re-placed is the coordinator pruning it
+            self._maintain()
             busy = [w for w in self.workers if w.outstanding]
             if not busy:
-                raise RuntimeError(
-                    "worker pool stalled: trials outstanding but no worker "
-                    "reports work in flight")
-            out.extend(busy[0].poll(timeout=0.05))
+                self._stalled()
+                return out
+            # rotate which busy worker eats the blocking poll, so a
+            # straggling first worker can't starve completions already
+            # sitting in its peers' queues
+            start = self._poll_rr % len(busy)
+            self._poll_rr += 1
+            for i in range(len(busy)):
+                w = busy[(start + i) % len(busy)]
+                self._absorb(w, w.poll(timeout=0.05), out)
+                if out:
+                    break
         for c in out:
             if c.error is not None:
                 raise c.error
         return out
+
+    def _stalled(self) -> None:
+        """No worker has work in flight but trials are owed. For an elastic
+        pool (maintenance hook set) with trials backlogged this means
+        'waiting for a worker to join': sync the roster and give it
+        ``join_timeout_s``. Anything else is a real stall."""
+        if self.maintenance is not None and (self._backlog or self._inflight):
+            if self._stall_t0 is None:
+                self._stall_t0 = time.monotonic()
+            if time.monotonic() - self._stall_t0 > self.join_timeout_s:
+                raise RuntimeError(
+                    f"no worker joined the pool within "
+                    f"{self.join_timeout_s:.0f}s with "
+                    f"{len(self._backlog) + len(self._inflight)} trial(s) "
+                    "owed — is the coordinator reachable and are workers "
+                    "announcing to it?")
+            time.sleep(0.05)
+            self._maintain()
+            return
+        raise RuntimeError(
+            "worker pool stalled: trials outstanding but no worker "
+            "reports work in flight")
 
 
 class WorkerPoolExecutor:
     """Executor over an explicit worker list — the composition point for
     remote workers and local shards (``--workers tcp://H1:P1,sim``).
 
-    Placement is sticky (see ``WorkerPool``): trials round-robin onto
-    workers at first sight and stay there across rung resumes; clones
-    follow their source. Results merge in wave order, so with deterministic
-    workers a single-worker pool is bit-identical to the serial executor.
+    Placement is sticky (see ``WorkerPool``): trials land on the
+    least-loaded worker (weighted by declared capacity x speed factor) at
+    first sight and stay there across rung resumes; clones follow their
+    source. Results merge in wave order, so with deterministic workers a
+    single-worker pool is bit-identical to the serial executor.
+
+    The pool is elastic: ``add_worker``/``remove_worker`` reshape it
+    mid-job (``repro.service.coordinator.ElasticWorkerPoolExecutor`` drives
+    them from a live worker roster).
     """
 
-    def __init__(self, workers: Sequence[Worker], sticky: bool = True):
-        self.pool = WorkerPool(workers, sticky=sticky)
+    def __init__(self, workers: Sequence[Worker], sticky: bool = True,
+                 allow_empty: bool = False):
+        self.pool = WorkerPool(workers, sticky=sticky,
+                               allow_empty=allow_empty)
         self.workers = self.pool.workers
-        self.parallelism = sum(max(1, w.capabilities().capacity)
-                               for w in self.workers)
+        self._runner_spec: Optional[dict] = None
+
+    @property
+    def parallelism(self) -> int:
+        return sum(max(1, w.capabilities().capacity) for w in self.workers)
+
+    def add_worker(self, worker: Worker) -> None:
+        self.pool.add_worker(worker)
+
+    def remove_worker(self, worker: Worker, drain: bool = False) -> None:
+        self.pool.remove_worker(worker, drain=drain)
 
     def configure_runner_spec(self, spec: Optional[dict]) -> None:
         """Hand workers that mirror the runner remotely the recipe for
@@ -371,6 +558,7 @@ class WorkerPoolExecutor:
         Remote workers left without any spec are a hard error — they would
         silently run their process's own default tuner/backend and merge
         wrong scores."""
+        self._runner_spec = dict(spec) if spec else spec  # for late joiners
         needy = [w for w in self.workers
                  if getattr(w, "accepts_runner_spec", False) and
                  w.runner_spec is None]

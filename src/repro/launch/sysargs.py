@@ -46,6 +46,14 @@ def add_executor_args(ap: argparse.ArgumentParser, executor: str = "serial",
                          "running `python -m repro.worker`, or a backend "
                          "registry name for a local in-process shard "
                          "(e.g. 'tcp://10.0.0.1:7078,sim')")
+    ap.add_argument("--coordinator", default=None,
+                    help="tcp://HOST:PORT of a running `python -m "
+                         "repro.coordinator` (implies --executor "
+                         "workers): the pool follows the live roster of "
+                         "announced workers — joins are picked up between "
+                         "waves, leaves/missed heartbeats retire the worker "
+                         "and re-place its trials; combine with --workers "
+                         "for static members")
     return ap
 
 
@@ -62,8 +70,9 @@ def executor_from_args(args: argparse.Namespace):
     name = args.executor
     workers = [w.strip() for w in args.workers.split(",") if w.strip()] \
         if getattr(args, "workers", None) else None
-    if workers and name == "serial":
-        name = "workers"                # --workers implies the pool executor
+    coordinator = getattr(args, "coordinator", None)
+    if (workers or coordinator) and name == "serial":
+        name = "workers"                # both flags imply the pool executor
     if args.parallelism > 1 and name not in ("serial", "parallel"):
         raise ValueError(
             f"--parallelism {args.parallelism} conflicts with --executor "
@@ -81,6 +90,12 @@ def executor_from_args(args: argparse.Namespace):
             f"--workers conflicts with --executor {name}: worker lists "
             "only apply to the workers executor (or the default serial, "
             "which --workers upgrades); the flag would be silently ignored")
+    if coordinator and name != "workers":
+        raise ValueError(
+            f"--coordinator conflicts with --executor {name}: the live "
+            "worker roster only feeds the workers executor (or the default "
+            "serial, which --coordinator upgrades); the flag would be "
+            "silently ignored")
     if name == "parallel" or (name == "serial" and args.parallelism > 1):
         return registry.make_executor("parallel",
                                       parallelism=args.parallelism)
@@ -94,12 +109,14 @@ def executor_from_args(args: argparse.Namespace):
             "sharded", backends=backends, capacity=args.shard_capacity,
             straggler_prob=args.straggler_prob)
     if name == "workers":
-        if not workers:
+        if not workers and not coordinator:
             raise ValueError("--executor workers needs --workers "
-                             "tcp://HOST:PORT[,...] (or local shard names)")
+                             "tcp://HOST:PORT[,...] (or local shard names) "
+                             "and/or --coordinator tcp://HOST:PORT")
         # the runner spec (tuner/backend/store recipe for the remote ends)
         # is filled in by Experiment.run via configure_runner_spec
-        return registry.make_executor("workers", workers=workers)
+        return registry.make_executor("workers", workers=workers,
+                                      coordinator=coordinator)
     return registry.make_executor(name)
 
 

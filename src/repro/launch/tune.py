@@ -64,10 +64,14 @@ def main():
         # user asked for a specific store): a v1 job with remote workers
         # must not trip over a ground-truth client it would never use
         exp = exp.with_groundtruth(store_client_from_args(args))
-    res = exp.run(executor=executor_from_args(args))
+    executor = executor_from_args(args)
+    res = exp.run(executor=executor)
 
+    # name the executor actually built: --workers/--coordinator upgrade the
+    # default serial choice, and the printout should say so
     print(f"workload={args.workload} system={args.system} "
-          f"scheduler={args.scheduler} executor={args.executor} "
+          f"scheduler={args.scheduler} "
+          f"executor={type(executor).__name__} "
           f"(registered: {available_executors()})")
     print(f"  best accuracy : {res.best_accuracy:.4f}")
     print(f"  best hparams  : {res.best_hparams}")

@@ -15,13 +15,24 @@ The pieces (see each module's docstring):
     RemoteWorker          repro.service.dispatch   trial-dispatch client
     TrialWorkerService    repro.service.worker     trial-dispatch server
                                                    (python -m repro.worker)
+    CoordinatorService    repro.service.coordinator worker discovery registry
+                                                   (register/heartbeat/leave)
+    ElasticWorkerPoolExecutor                      pool synced to the live
+                          repro.service.coordinator roster (--coordinator)
 
 Start a store server:      python -m repro.service --port 7077 --journal gt.jsonl
-Start a trial worker:      python -m repro.worker --port 7078 --store tcp://H:7077
-Point a job at them:       --store tcp://H:7077 --workers tcp://H:7078
-                           (repro.launch.tune)
+Start a coordinator:       python -m repro.coordinator --port 7079
+Start a trial worker:      python -m repro.worker --port 7078 \
+                               --store tcp://H:7077 --announce tcp://H:7079
+Point a job at them:       --store tcp://H:7077 --coordinator tcp://H:7079
+                           (or a static list: --workers tcp://H:7078)
 """
-from repro.service.dispatch import RemoteWorker, WorkerError  # noqa: F401
+from repro.service.coordinator import (  # noqa: F401
+    CoordinatorClient, CoordinatorError, CoordinatorService,
+    CoordinatorTCPServer, ElasticWorkerPoolExecutor, WorkerAnnouncer,
+    serve_coordinator)
+from repro.service.dispatch import (  # noqa: F401
+    RemoteWorker, WorkerError, WorkerLostError)
 from repro.service.service import GroundTruthService  # noqa: F401
 from repro.service.sharded import ShardedTrialExecutor  # noqa: F401
 from repro.service.transport import (  # noqa: F401
@@ -34,4 +45,7 @@ __all__ = ["GroundTruthService", "StoreClient", "StoreError",
            "TransportError", "InprocTransport", "SocketTransport",
            "JsonRPCServer", "GroundTruthTCPServer", "serve",
            "ShardedTrialExecutor", "RemoteWorker", "WorkerError",
-           "TrialWorkerService", "TrialWorkerTCPServer", "serve_worker"]
+           "WorkerLostError", "TrialWorkerService", "TrialWorkerTCPServer",
+           "serve_worker", "CoordinatorService", "CoordinatorTCPServer",
+           "CoordinatorClient", "CoordinatorError", "WorkerAnnouncer",
+           "ElasticWorkerPoolExecutor", "serve_coordinator"]

@@ -36,14 +36,24 @@ from repro.core.pipetune import TrialRecord
 from repro.core.profiler import EpochProfile
 from repro.core.schedulers import TrialProposal
 from repro.core.worker import TrialCompletion, Worker, WorkerCapabilities
-from repro.service.transport import SocketTransport
+from repro.service.transport import SocketTransport, TransportError
 
-__all__ = ["RemoteWorker", "WorkerError", "parse_tcp_address",
-           "record_to_payload", "record_from_payload"]
+__all__ = ["RemoteWorker", "WorkerError", "WorkerLostError",
+           "parse_tcp_address", "record_to_payload", "record_from_payload"]
 
 
 class WorkerError(RuntimeError):
     """A remote worker request failed (server error or broken transport)."""
+
+
+class WorkerLostError(WorkerError):
+    """The worker's transport died mid-run (connection refused, reset, or
+    closed). Always names the worker's ``tcp://`` address, so pool-level
+    retirement and users can tell which worker went away. ``worker_lost``
+    is the layering-safe flag ``WorkerPool.retire_on_error`` keys on
+    (``repro.core`` cannot import this module)."""
+
+    worker_lost = True
 
 
 def parse_tcp_address(spec: str) -> Tuple[str, int]:
@@ -133,17 +143,23 @@ class RemoteWorker(Worker):
             else None
         # request_timeout=None: a remote trial legitimately runs longer
         # than any sane connect timeout
-        self.transport = SocketTransport(
-            host, port, timeout=connect_timeout,
-            connect_retries=connect_retries,
-            retry_backoff_s=retry_backoff_s, request_timeout=None)
-        self._request({"op": "hello"})       # fail fast on a non-worker peer
+        try:
+            self.transport = SocketTransport(
+                host, port, timeout=connect_timeout,
+                connect_retries=connect_retries,
+                retry_backoff_s=retry_backoff_s, request_timeout=None)
+        except TransportError as e:
+            raise WorkerLostError(
+                f"worker tcp://{host}:{port} unreachable: {e}") from e
+        hello = self._request({"op": "hello"})  # fail fast on a non-worker
         # one connection executes one trial at a time (requests are
         # serialized, the server locks its runner per trial), so advertise
         # capacity 1 regardless of what the server claims; scale by adding
-        # workers, not by inflating one
-        self._caps = WorkerCapabilities(kind=self.kind, capacity=1,
-                                        remote=True)
+        # workers, not by inflating one. The worker's declared relative
+        # speed does ride along — placement weights load by it.
+        self._caps = WorkerCapabilities(
+            kind=self.kind, capacity=1, remote=True,
+            speed_factor=float(hello.get("speed_factor", 1.0)))
         self._inbox: "queue.Queue" = queue.Queue()
         self._completions: "queue.Queue[TrialCompletion]" = queue.Queue()
         self._outstanding = 0
@@ -204,7 +220,14 @@ class RemoteWorker(Worker):
 
     # ------------------------------------------------------------ internals
     def _request(self, req: Dict[str, Any]) -> Dict[str, Any]:
-        resp = self.transport.request(req)
+        try:
+            resp = self.transport.request(req)
+        except (TransportError, ConnectionError, OSError) as e:
+            # a raw socket error says nothing about *which* worker died;
+            # name the address so pool-level retirement (and the user) can
+            raise WorkerLostError(
+                f"worker tcp://{self.address[0]}:{self.address[1]} lost "
+                f"during {req.get('op')!r}: {e}") from e
         if not resp.get("ok"):
             raise WorkerError(
                 f"worker {self.address[0]}:{self.address[1]} rejected "

@@ -14,6 +14,12 @@ Workers share tuning state the same way jobs do: pass
 ``--store tcp://HOST:PORT`` of a running ``python -m repro.service`` (or
 put it in the bind spec) and this worker's PipeTune runner reads/feeds the
 shared ground truth.
+
+Discovery: ``--announce tcp://COORD`` self-registers with a running
+``python -m repro.coordinator`` and heartbeats until shutdown, so
+experiments launched with ``--coordinator`` pick this worker up (and drop
+it when it dies) without editing any ``--workers`` list. ``--speed-factor``
+declares relative throughput — heterogeneous pools weight placement by it.
 """
 from __future__ import annotations
 
@@ -38,11 +44,13 @@ class TrialWorkerService:
 
     def __init__(self, tuner: str = "v1", tuner_kw: Optional[dict] = None,
                  backend: str = "sim", backend_kw: Optional[dict] = None,
-                 seed: int = 0, store: Optional[str] = None):
+                 seed: int = 0, store: Optional[str] = None,
+                 speed_factor: float = 1.0):
         self.defaults: Dict[str, Any] = {
             "tuner": tuner, "tuner_kw": dict(tuner_kw or {}),
             "backend": backend, "backend_kw": dict(backend_kw or {}),
             "seed": int(seed), "store": store}
+        self.speed_factor = float(speed_factor)
         self.runner = None
         self.spec: Optional[dict] = None
         self._store_client = None
@@ -72,6 +80,7 @@ class TrialWorkerService:
     def _op_hello(self, req) -> Dict[str, Any]:
         # capacity is structurally 1: one runner, one trial at a time
         return {"kind": "remote", "capacity": 1, "pid": os.getpid(),
+                "speed_factor": self.speed_factor,
                 "defaults": {k: self.defaults[k]
                              for k in ("tuner", "backend", "seed", "store")}}
 
@@ -165,6 +174,19 @@ def main(argv=None):
     ap.add_argument("--store", default=None,
                     help="tcp://HOST:PORT of a shared `python -m "
                          "repro.service` ground-truth store")
+    ap.add_argument("--announce", default=None,
+                    help="tcp://HOST:PORT of a running `python -m "
+                         "repro.service.coordinator` to register with "
+                         "(heartbeats until shutdown, so --coordinator "
+                         "experiments discover this worker)")
+    ap.add_argument("--advertise-host", default=None,
+                    help="hostname workers are dialed back on when "
+                         "announcing (default: --host; set it when binding "
+                         "0.0.0.0)")
+    ap.add_argument("--speed-factor", type=float, default=1.0,
+                    help="declared relative throughput of this worker "
+                         "(1.0 = baseline); elastic pools weight placement "
+                         "by it")
     ap.add_argument("--plugin", action="append", default=[],
                     help="module to import for register_* side effects")
     args = ap.parse_args(argv)
@@ -173,18 +195,30 @@ def main(argv=None):
         importlib.import_module(mod)
 
     service = TrialWorkerService(tuner=args.tuner, backend=args.backend,
-                                 seed=args.seed, store=args.store)
+                                 seed=args.seed, store=args.store,
+                                 speed_factor=args.speed_factor)
     server = TrialWorkerTCPServer((args.host, args.port), service)
     host, port = server.server_address[:2]
     print(f"trial worker on {host}:{port} (tuner={args.tuner}, "
           f"backend={args.backend}"
           + (f", store {args.store}" if args.store else "") + ")",
           flush=True)
+    announcer = None
+    if args.announce:
+        from repro.service.coordinator import WorkerAnnouncer
+        advertise = args.advertise_host or args.host
+        announcer = WorkerAnnouncer(
+            args.announce, address=f"tcp://{advertise}:{port}",
+            speed_factor=args.speed_factor)
+        worker_id = announcer.start()
+        print(f"announced to {args.announce} as {worker_id}", flush=True)
     try:
         server.serve_forever()
     except KeyboardInterrupt:
         pass
     finally:
+        if announcer is not None:
+            announcer.stop()
         server.shutdown()
         service.close()
 

@@ -1,0 +1,728 @@
+"""Elastic execution layer (PR 5 acceptance surface): heterogeneous
+NodeSpec nodes, engine add/retire/preempt events, the ClusterSim elastic
+policy, mutable worker pools, and coordinator-based worker discovery."""
+import argparse
+import dataclasses
+import os
+import signal
+import socket
+import subprocess
+import sys
+import threading
+import time
+
+import pytest
+
+from repro.api import (Experiment, InprocWorker, WorkerLostError, WorkerPool,
+                       make_scheduler)
+from repro.cluster.engine import ClusterConfig, EventEngine, NodeSpec
+from repro.cluster.executor import ClusterTrialExecutor
+from repro.cluster.sim import (SIM_SYS_DEFAULT, ClusterSim, ElasticPolicy,
+                               SimBackend, make_arrivals)
+from repro.core import TuneV1
+from repro.core.job import HPTJob, Param, SearchSpace
+from repro.core.worker import (TrialCompletion, Worker, WorkerCapabilities)
+from repro.service import (CoordinatorClient, CoordinatorService,
+                           ElasticWorkerPoolExecutor, RemoteWorker,
+                           TrialWorkerService, WorkerAnnouncer,
+                           serve_coordinator, serve_worker)
+from repro.service.transport import _recv_msg, _send_msg
+
+
+def _space():
+    return SearchSpace([
+        Param("batch_size", "choice", choices=(32, 64, 256, 1024)),
+        Param("learning_rate", "log", 0.001, 0.1),
+    ])
+
+
+def _job(seed=0, epochs=9):
+    return HPTJob(workload="lenet-mnist", space=_space(), max_epochs=epochs,
+                  seed=seed)
+
+
+# ----------------------------------------------------- engine: NodeSpec
+
+def test_nodespec_speed_scales_epoch_durations():
+    eng = EventEngine(ClusterConfig(nodes=[NodeSpec(speed=2.0),
+                                           NodeSpec(speed=0.5)]))
+    fast = eng.submit("fast", iter([10.0]))
+    slow = eng.submit("slow", iter([10.0]))
+    eng.run()
+    assert fast.service_s == 5.0                # 10s of work at 2x
+    assert slow.service_s == 20.0               # 10s of work at 0.5x
+
+
+def test_nodespec_capacity_multiplexes_one_node():
+    eng = EventEngine(ClusterConfig(nodes=[NodeSpec(capacity=2)]))
+    a = eng.submit("a", iter([30.0]))
+    b = eng.submit("b", iter([30.0]))
+    c = eng.submit("c", iter([30.0]))
+    eng.run()
+    assert a.start_s == b.start_s == 0.0        # both slots used at once
+    assert a.node == b.node == 0
+    assert c.start_s == 30.0                    # queued for a slot
+
+
+def test_cluster_config_back_compat_and_nodespec_authority():
+    legacy = ClusterConfig(n_nodes=3, node_tags=("a", "a", "b"))
+    assert [s.tag for s in legacy.nodes] == ["a", "a", "b"]
+    assert all(s.speed == 1.0 and s.capacity == 1 for s in legacy.nodes)
+    hetero = ClusterConfig(nodes=[NodeSpec(speed=2.0), NodeSpec()])
+    assert hetero.n_nodes == 2                  # derived from the specs
+    with pytest.raises(ValueError, match="NodeSpec"):
+        ClusterConfig(nodes=[NodeSpec()], node_tags=("a",))
+    with pytest.raises(ValueError):
+        NodeSpec(speed=0.0)
+    with pytest.raises(ValueError):
+        NodeSpec(capacity=0)
+
+
+# --------------------------------------- engine: add / retire / preempt
+
+def test_add_node_picks_up_waiting_task():
+    eng = EventEngine(ClusterConfig(n_nodes=1, seed=0))
+    eng.submit("x", iter([30.0]))
+    y = eng.submit("y", iter([30.0]))
+    eng.add_node(NodeSpec(), at=5.0)
+    eng.run()
+    assert y.start_s == 5.0 and y.node == 1     # joined node took the waiter
+
+
+def test_retire_node_drains_at_epoch_boundary_with_reshard_charge():
+    cfg = ClusterConfig(n_nodes=2, seed=0)
+    eng = EventEngine(cfg)
+    t = eng.submit("t", iter([10.0] * 4))
+    eng.retire_node(0, at=15.0)                 # mid-epoch 2
+    eng.run()
+    # epoch 2 finishes on node 0 at t=20, then the task migrates to node 1
+    # and pays restore+reconfig on its next epoch
+    charge = cfg.restore_s + cfg.reconfig_s
+    assert t.n_preemptions == 1
+    assert t.node == 1                          # finished on the survivor
+    assert t.service_s == 40.0 + charge
+    assert t.finish_s == 40.0 + charge
+    assert t.n_epochs == 4                      # nothing lost, nothing redone
+
+
+def test_preempt_requeues_behind_waiter_without_losing_epochs():
+    cfg = ClusterConfig(n_nodes=1, seed=0)
+    eng = EventEngine(cfg)
+    yielded = []
+
+    def gen():
+        for _ in range(3):
+            yielded.append(1)
+            yield 10.0
+
+    t1 = eng.submit("t1", gen())
+    t2 = eng.submit("t2", iter([5.0]))
+    eng.preempt("t1", at=12.0)
+    eng.run()
+    charge = cfg.restore_s + cfg.reconfig_s
+    assert t1.n_preemptions == 1
+    assert t2.start_s == 20.0                   # the waiter got the slot
+    assert t1.n_epochs == 3 and len(yielded) == 3   # exactly one pull/epoch
+    # epochs 1-2 ran before the boundary; epoch 3 resumes at t2's finish
+    # (25) and pays the reshard charge
+    assert t1.finish_s == 25.0 + 10.0 + charge
+    # preempting a finished or waiting task is a no-op
+    eng2 = EventEngine(cfg)
+    s = eng2.submit("s", iter([1.0]))
+    eng2.run()
+    eng2.preempt("s")
+    assert s.n_preemptions == 0
+
+
+def test_retire_at_final_epoch_boundary_finishes_in_place():
+    """A task whose generator is exhausted at the boundary has nothing to
+    migrate: it finishes on the draining node — no spurious preemption, no
+    'unplaceable' error even when no other node exists."""
+    eng = EventEngine(ClusterConfig(nodes=[NodeSpec()], seed=0))
+    t = eng.submit("t", iter([10.0]))
+    eng.retire_node(0, at=5.0)
+    eng.run()
+    assert t.finish_s == 10.0 and t.n_preemptions == 0
+    eng2 = EventEngine(ClusterConfig(n_nodes=2, seed=0))
+    t2 = eng2.submit("t", iter([10.0]))
+    eng2.retire_node(0, at=5.0)
+    eng2.run()
+    assert t2.n_preemptions == 0                # survivor node not involved
+
+
+def test_retiring_the_only_compatible_node_is_a_loud_error():
+    eng = EventEngine(ClusterConfig(n_nodes=1, seed=0))
+    eng.submit("a", iter([10.0, 10.0]))
+    eng.submit("b", iter([10.0]))               # waits behind a
+    eng.retire_node(0, at=5.0)
+    with pytest.raises(RuntimeError, match="unplaceable"):
+        eng.run()
+
+
+def test_elastic_event_schedule_is_bit_deterministic():
+    """Acceptance: identical seeds + identical join/retire/preempt schedules
+    -> bit-identical stats (times and counters), with faults on."""
+    def run_once():
+        eng = EventEngine(ClusterConfig(n_nodes=2, straggler_prob=0.3,
+                                        mtbf_s=500.0, seed=11))
+        stats = [eng.submit(f"t{i}", iter([50.0] * 5)) for i in range(5)]
+        eng.add_node(NodeSpec(speed=0.5), at=60.0)
+        eng.retire_node(0, at=120.0)
+        eng.preempt("t1", at=80.0)
+        eng.add_node(NodeSpec(speed=2.0), at=200.0)
+        eng.run()
+        return [dataclasses.asdict(s) for s in stats]
+
+    r1, r2 = run_once(), run_once()
+    assert r1 == r2
+    assert sum(s["n_preemptions"] for s in r1) > 0
+
+
+# ---------------------------------------------------- sim: ElasticPolicy
+
+def _bursty_jobs(n=10, mean=30.0, seed=0):
+    return make_arrivals(["lenet-mnist", "cnn-news20"], n_jobs=n,
+                         mean_interarrival_s=mean, space=_space(),
+                         max_epochs=4, seed=seed)
+
+
+def _run_sim(elastic, jobs, seed=0):
+    sim = ClusterSim(ClusterConfig(n_nodes=2, seed=seed),
+                     lambda: TuneV1(SimBackend()), elastic=elastic)
+    return sim.run(jobs, scheduler="random", n_trials=2)
+
+
+def test_elastic_policy_splits_merges_and_beats_static():
+    jobs = _bursty_jobs()
+    static = _run_sim(None, jobs)
+    policy = ElasticPolicy(split_queue=2)
+    elastic = _run_sim(policy, jobs)
+    assert policy.n_splits > 0 and policy.n_merges > 0
+    assert sum(o.n_preemptions for o in elastic) > 0    # a real re-shard
+    mean = lambda out: sum(o.response_s for o in out) / len(out)  # noqa: E731
+    assert mean(elastic) < mean(static)
+    # elasticity perturbs *time* only: accuracies are untouched
+    assert [o.best_accuracy for o in elastic] == \
+        [o.best_accuracy for o in static]
+
+
+def test_elastic_sim_runs_are_bit_identical():
+    """Acceptance: two elastic runs with identical seeds and schedules are
+    bit-identical in scores and sim times."""
+    jobs = _bursty_jobs()
+    a = _run_sim(ElasticPolicy(split_queue=2), jobs)
+    b = _run_sim(ElasticPolicy(split_queue=2), jobs)
+    assert [dataclasses.asdict(o) for o in a] == \
+        [dataclasses.asdict(o) for o in b]
+
+
+def test_elastic_policy_requires_event_mode_and_validates():
+    with pytest.raises(ValueError, match="event"):
+        ClusterSim(ClusterConfig(), lambda: None, mode="legacy",
+                   elastic=ElasticPolicy())
+    with pytest.raises(ValueError):
+        ElasticPolicy(split_factor=1)
+    with pytest.raises(ValueError):
+        ElasticPolicy(split_speed=1.5)
+
+
+# ------------------------------------------- executor: preemption parity
+
+def test_executor_preemption_changes_time_never_scores():
+    """A retire+rejoin schedule on the trial executor migrates running
+    trials (paying the reshard charge) but every epoch's accuracy is
+    bit-identical to serial — a preempted trial never loses or repeats a
+    completed epoch."""
+    serial = (Experiment(_job()).with_tuner("v1").with_backend("sim")
+              .with_scheduler("hyperband").run())
+
+    ex = ClusterTrialExecutor(cluster=ClusterConfig(n_nodes=2, seed=0),
+                              default_sys=SIM_SYS_DEFAULT)
+    # t=350 lands mid-way through a 3-epoch rung resume on node 0 (1-epoch
+    # dispatches are exhausted at their boundary and finish in place, so a
+    # retire during the first rung would migrate nothing)
+    ex.retire_node(0, at=350.0)
+    ex.add_node(NodeSpec(), at=700.0)
+    elastic = (Experiment(_job()).with_tuner("v1").with_backend("sim")
+               .with_scheduler("hyperband").run(executor=ex))
+    migrated = [s for s in ex.engine.completed if s.n_preemptions > 0]
+    assert migrated, "schedule never caused a migration"
+    assert sorted(serial.records) == sorted(elastic.records)
+    for tid in serial.records:
+        assert [e.accuracy for e in serial.records[tid].epochs] == \
+            [e.accuracy for e in elastic.records[tid].epochs], tid
+    assert serial.best_score == elastic.best_score
+    baseline_ex = ClusterTrialExecutor(
+        cluster=ClusterConfig(n_nodes=2, seed=0),
+        default_sys=SIM_SYS_DEFAULT)
+    baseline = (Experiment(_job()).with_tuner("v1").with_backend("sim")
+                .with_scheduler("hyperband").run(executor=baseline_ex))
+    assert elastic.sim_time_s > baseline.sim_time_s  # the charge is real
+
+
+# ------------------------------------------------- pool: mutable membership
+
+class _ScriptedWorker(Worker):
+    """Deterministic fake: completions are released only when the test says
+    so (None score = compute from trial id)."""
+
+    kind = "scripted"
+
+    def __init__(self, name, speed=1.0, capacity=1, fail_with=None):
+        super().__init__()
+        self.name = name
+        self.speed = speed
+        self.capacity = capacity
+        self.fail_with = fail_with
+        self.submitted = []
+        self._pending = []
+
+    def capabilities(self):
+        return WorkerCapabilities(kind=self.kind, capacity=self.capacity,
+                                  speed_factor=self.speed)
+
+    @property
+    def outstanding(self):
+        return len(self._pending)
+
+    def submit(self, trial, epochs=None):
+        self.submitted.append(trial.trial_id)
+        self._pending.append(trial)
+
+    def poll(self, timeout=0.0):
+        if not self._pending:
+            return []
+        if self.fail_with is not None:
+            trial = self._pending.pop(0)
+            return [TrialCompletion(trial.trial_id, float("nan"),
+                                    error=self.fail_with)]
+        if timeout <= 0:
+            return []                           # only blocking polls finish
+        trial = self._pending.pop(0)
+        return [TrialCompletion(trial.trial_id, 1.0)]
+
+
+class _P:
+    def __init__(self, tid, clone_from=None, epochs=1):
+        self.trial_id, self.clone_from = tid, clone_from
+        self.hparams, self.epochs = {}, epochs
+
+
+def test_weighted_placement_prefers_fast_and_wide_workers():
+    slow = _ScriptedWorker("slow", speed=1.0)
+    fast = _ScriptedWorker("fast", speed=3.0)
+    pool = WorkerPool([slow, fast], sticky=True)
+    for i in range(4):
+        pool.place(_P(f"t{i}"))
+    held = {}
+    for w in pool._bindings.values():
+        held[w.name] = held.get(w.name, 0) + 1
+    assert held == {"fast": 3, "slow": 1}       # 3x speed -> 3x the trials
+    wide = _ScriptedWorker("wide", capacity=4)
+    narrow = _ScriptedWorker("narrow", capacity=1)
+    free = WorkerPool([narrow, wide], sticky=False)
+    wide._pending = [1, 2]                      # 2 in flight over 4 lanes
+    narrow._pending = [1]                       # 1 in flight over 1 lane
+    assert free.place(_P("x")) is wide          # 0.5 load beats 1.0
+
+
+def test_poll_rotation_drains_a_worker_behind_a_straggler():
+    """Satellite: a straggling first worker must not starve completions
+    sitting in other workers' queues (the old loop hot-span busy[0])."""
+    class _Straggler(_ScriptedWorker):
+        def poll(self, timeout=0.0):
+            return []                           # never completes anything
+
+    straggler = _Straggler("s0")
+    healthy = _ScriptedWorker("s1")
+    pool = WorkerPool([straggler, healthy], sticky=True)
+    runner = TuneV1(SimBackend())
+    pool.bind(runner, "lenet-mnist")            # before pinning: a re-bind
+    pool._bindings["a"] = straggler             # would clear the bindings
+    pool._bindings["b"] = healthy
+    done = {}
+    t = threading.Thread(
+        target=lambda: done.update(
+            {"n": len(pool.run_wave(runner, "lenet-mnist", [_P("b")]))}),
+        daemon=True)
+    straggler.submit(_P("a"))                   # busy forever
+    t.start()
+    t.join(timeout=5.0)
+    assert not t.is_alive(), "completion starved behind straggling worker"
+    assert done["n"] == 1
+
+
+def test_pool_add_and_remove_worker_mid_drive():
+    w0 = _ScriptedWorker("w0")
+    pool = WorkerPool([w0], sticky=True)
+    runner = TuneV1(SimBackend())
+    pool.bind(runner, "lenet-mnist")
+    w1 = _ScriptedWorker("w1")
+    pool.add_worker(w1)
+    assert w1.runner is runner                  # bound on join
+    for i in range(4):
+        pool._dispatch(_P(f"t{i}"), 1)
+    assert len(w0.submitted) == len(w1.submitted) == 2
+    # removing w1 re-places its in-flight trials onto w0
+    pool.remove_worker(w1)
+    assert pool.workers == [w0]
+    assert sorted(w0.submitted) == ["t0", "t1", "t2", "t3"]
+    assert not pool._bindings or \
+        all(w is w0 for w in pool._bindings.values())
+
+
+def test_maintenance_runs_while_workers_are_busy():
+    """A hung-but-connected worker never errors its transport; the only
+    rescue is the maintenance hook (roster sync) retiring it — so the hook
+    must run even while the pool blocks on busy workers."""
+    class _Hung(_ScriptedWorker):
+        def poll(self, timeout=0.0):
+            return []                           # connected, never completes
+
+    hung = _Hung("hung")
+    healthy = _ScriptedWorker("healthy")
+    pool = WorkerPool([hung, healthy], sticky=True)
+    runner = TuneV1(SimBackend())
+    pool.bind(runner, "lenet-mnist")
+    pool._bindings["a"] = hung                  # pin "a" onto the hung worker
+
+    calls = []
+
+    def evict_hung():
+        calls.append(1)
+        if len(calls) > 1 and hung in pool.workers:
+            pool.remove_worker(hung)            # the roster pruned it
+
+    # first call happens at wave start (before dispatch) — the eviction
+    # must come from the *blocked* poll loop, after "a" is in flight
+    pool.maintenance = evict_hung
+    out = pool.run_wave(runner, "lenet-mnist", [_P("a")])
+    assert [(p.trial_id, s) for p, s in out] == [("a", 1.0)]
+    assert pool.workers == [healthy]            # re-placed and completed
+
+
+def test_pool_retires_lost_worker_and_replaces_its_trials():
+    lost = RuntimeError("boom")
+    lost.worker_lost = True
+    dying = _ScriptedWorker("dying", fail_with=lost)
+    healthy = _ScriptedWorker("healthy")
+    pool = WorkerPool([dying, healthy], sticky=True)
+    pool.retire_on_error = True
+    runner = TuneV1(SimBackend())
+    proposals = [_P(f"t{i}") for i in range(4)]
+    out = pool.run_wave(runner, "lenet-mnist", proposals)
+    assert [p.trial_id for p, _ in out] == ["t0", "t1", "t2", "t3"]
+    assert pool.workers == [healthy]            # the dead worker is gone
+    assert sorted(healthy.submitted) == ["t0", "t1", "t2", "t3"]
+    # without the flag the error surfaces (a static pool stays honest)
+    dying2 = _ScriptedWorker("dying2", fail_with=lost)
+    strict = WorkerPool([dying2], sticky=True)
+    with pytest.raises(RuntimeError, match="boom"):
+        strict.run_wave(runner, "lenet-mnist", [_P("x")])
+
+
+# ------------------------------------------------ coordinator: the roster
+
+def test_coordinator_register_heartbeat_expire_leave():
+    clock = [0.0]
+    svc = CoordinatorService(ttl_s=10.0, clock=lambda: clock[0])
+
+    def call(op, **kw):
+        resp = svc.handle({"op": op, **kw})
+        assert resp.get("ok"), resp
+        return resp
+
+    a = call("register", address="tcp://10.0.0.1:7078")["worker_id"]
+    b = call("register", address="tcp://10.0.0.2:7078",
+             speed_factor=2.0)["worker_id"]
+    roster = call("roster")
+    assert [w["address"] for w in roster["workers"]] == \
+        ["tcp://10.0.0.1:7078", "tcp://10.0.0.2:7078"]
+    assert roster["workers"][1]["speed_factor"] == 2.0
+    v0 = roster["version"]
+    # b heartbeats, a goes silent past the ttl -> pruned, version bumps
+    clock[0] = 8.0
+    call("heartbeat", worker_id=b)
+    clock[0] = 12.0
+    roster = call("roster")
+    assert [w["worker_id"] for w in roster["workers"]] == [b]
+    assert roster["version"] > v0
+    # a's next heartbeat is rejected -> its announcer re-registers,
+    # replacing any stale same-address entry
+    assert not svc.handle({"op": "heartbeat", "worker_id": a})["ok"]
+    call("register", address="tcp://10.0.0.1:7078")
+    call("register", address="tcp://10.0.0.1:7078")
+    assert len(call("roster")["workers"]) == 2  # no ghost duplicate
+    call("leave", worker_id=b)
+    assert [w["address"] for w in call("roster")["workers"]] == \
+        ["tcp://10.0.0.1:7078"]
+
+
+def test_worker_announcer_registers_and_leaves():
+    server = serve_coordinator(CoordinatorService(ttl_s=5.0), port=0,
+                               background=True)
+    try:
+        coord = f"tcp://127.0.0.1:{server.server_address[1]}"
+        ann = WorkerAnnouncer(coord, "tcp://127.0.0.1:9999",
+                              speed_factor=1.5)
+        ann.start()
+        client = CoordinatorClient(coord)
+        roster = client.roster()
+        assert [w["address"] for w in roster] == ["tcp://127.0.0.1:9999"]
+        assert roster[0]["speed_factor"] == 1.5
+        ann.stop()
+        assert client.roster() == []            # graceful leave, not ttl
+        client.close()
+    finally:
+        server.shutdown()
+
+
+# ----------------------------------- satellite: transport death is named
+
+def test_remote_worker_transport_death_names_the_address():
+    """A socket failure mid-run must say *which* worker died, not surface a
+    raw OSError; the error carries the worker_lost flag pools retire on."""
+    probe = socket.socket()
+    probe.bind(("127.0.0.1", 0))
+    probe.listen(1)
+    port = probe.getsockname()[1]
+
+    def one_hello_then_die():
+        conn, _ = probe.accept()
+        _recv_msg(conn)
+        _send_msg(conn, {"ok": True, "kind": "remote", "capacity": 1})
+        conn.close()
+
+    threading.Thread(target=one_hello_then_die, daemon=True).start()
+    worker = RemoteWorker(f"tcp://127.0.0.1:{port}", runner_spec={})
+    with pytest.raises(WorkerLostError,
+                       match=f"tcp://127.0.0.1:{port}.*'run'"):
+        worker._request({"op": "run", "workload": "w", "trial_id": "t",
+                         "hparams": {}, "epochs": 1})
+    probe.close()
+    # an unreachable worker at construction is named the same way
+    with pytest.raises(WorkerLostError, match=f"tcp://127.0.0.1:{port}"):
+        RemoteWorker(f"tcp://127.0.0.1:{port}", runner_spec={},
+                     connect_timeout=0.2, connect_retries=0)
+
+
+# ---------------------------------------- acceptance: live demo, end to end
+
+class _GatedScheduler:
+    """Wrap a scheduler so the test controls when wave N+1 is released —
+    the deterministic way to land a worker join 'mid-run'."""
+
+    def __init__(self, inner, gate_after_wave=1):
+        self.inner = inner
+        self.gate = threading.Event()
+        self._waves = 0
+        self._gate_after = gate_after_wave
+
+    def suggest(self):
+        wave = self.inner.suggest()
+        if wave:
+            if self._waves == self._gate_after:
+                assert self.gate.wait(timeout=60.0), "test gate timed out"
+            self._waves += 1
+        return wave
+
+    def report(self, trial_id, score):
+        self.inner.report(trial_id, score)
+
+    def best(self):
+        return self.inner.best()
+
+    @property
+    def done(self):
+        return self.inner.done
+
+
+def _spawn(args, expect, timeout=30.0):
+    """Start `python -m <args>` from the repo root; wait for a line
+    containing `expect` and return (proc, line)."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    proc = subprocess.Popen(
+        [sys.executable, "-m", *args],
+        stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True,
+        env={**os.environ, "PYTHONPATH": "src"}, cwd=root)
+    deadline = time.time() + timeout
+    while time.time() < deadline:
+        line = proc.stdout.readline()
+        if expect in line:
+            return proc, line
+    proc.terminate()
+    raise AssertionError(f"{args}: never printed {expect!r}")
+
+
+def _addr_of(line):
+    return "tcp://" + line.split(" on ", 1)[1].split()[0]
+
+
+@pytest.mark.slow
+def test_worker_joining_mid_run_receives_trials_live():
+    """Acceptance: start a coordinator, start an experiment with
+    --coordinator, launch a second `python -m repro.worker --announce`
+    mid-run, and observe the pool dispatching trials to it — real
+    subprocesses on ephemeral ports."""
+    procs = []
+    try:
+        coord_proc, line = _spawn(
+            ["repro.coordinator", "--port", "0", "--ttl", "10"],
+            "coordinator on")
+        procs.append(coord_proc)
+        coord = _addr_of(line)
+
+        w1, _ = _spawn(["repro.worker", "--port", "0", "--announce", coord],
+                       "announced to")
+        procs.append(w1)
+
+        from repro.launch.sysargs import add_executor_args, \
+            executor_from_args
+        args = add_executor_args(argparse.ArgumentParser()).parse_args(
+            ["--coordinator", coord])
+        ex = executor_from_args(args)
+        assert isinstance(ex, ElasticWorkerPoolExecutor)
+
+        job = _job()
+        sched = _GatedScheduler(make_scheduler("hyperband", job))
+        holder = {}
+
+        def run():
+            holder["res"] = (Experiment(job).with_tuner("v1")
+                             .with_backend("sim").with_scheduler(sched)
+                             .run(executor=ex))
+
+        t = threading.Thread(target=run)
+        t.start()
+        # second worker announces mid-run, before the gate releases wave 2
+        w2, _ = _spawn(["repro.worker", "--port", "0", "--announce", coord],
+                       "announced to")
+        procs.append(w2)
+        client = CoordinatorClient(coord)
+        deadline = time.time() + 30.0
+        while len(client.roster()) < 2 and time.time() < deadline:
+            time.sleep(0.1)
+        assert len(client.roster()) == 2
+        client.close()
+        sched.gate.set()
+        t.join(timeout=120.0)
+        assert not t.is_alive(), "experiment hung"
+
+        assert len(ex.workers) == 2             # the join was picked up
+        dispatched = list(ex.pool.dispatched.values())
+        assert len(dispatched) == 2 and all(n > 0 for n in dispatched), \
+            f"pool never dispatched to the joined worker: {dispatched}"
+        serial = (Experiment(_job()).with_tuner("v1").with_backend("sim")
+                  .with_scheduler("hyperband").run())
+        assert holder["res"].best_score == serial.best_score
+        assert sorted(holder["res"].records) == sorted(serial.records)
+    finally:
+        if "ex" in dir():
+            ex.close()
+        for p in procs:
+            p.terminate()
+        for p in procs:
+            p.wait(timeout=10)
+
+
+@pytest.mark.slow
+def test_killed_worker_is_retired_and_its_trials_finish_elsewhere():
+    """A worker that dies mid-job (SIGKILL, no goodbye) is dropped by
+    missed heartbeats; the pool retires it and re-places its trials — the
+    job still finishes with serial-identical scores."""
+    server = serve_coordinator(CoordinatorService(ttl_s=2.0), port=0,
+                               background=True)
+    w1_srv = serve_worker(TrialWorkerService(), port=0, background=True)
+    coord = f"tcp://127.0.0.1:{server.server_address[1]}"
+    ann = WorkerAnnouncer(coord,
+                          f"tcp://127.0.0.1:{w1_srv.server_address[1]}")
+    ann.start()
+    w2, _ = _spawn(["repro.worker", "--port", "0", "--announce", coord],
+                   "announced to")
+    try:
+        ex = ElasticWorkerPoolExecutor(coord, refresh_s=0.1)
+        job = _job()
+        sched = _GatedScheduler(make_scheduler("hyperband", job),
+                                gate_after_wave=2)
+        holder = {}
+
+        def run():
+            holder["res"] = (Experiment(job).with_tuner("v1")
+                             .with_backend("sim").with_scheduler(sched)
+                             .run(executor=ex))
+
+        t = threading.Thread(target=run)
+        t.start()
+        # let the first waves dispatch to both workers, then kill one
+        deadline = time.time() + 30.0
+        while len(ex.workers) < 2 and time.time() < deadline:
+            time.sleep(0.05)
+        assert len(ex.workers) == 2
+        os.kill(w2.pid, signal.SIGKILL)
+        client = CoordinatorClient(coord)
+        deadline = time.time() + 30.0
+        while len(client.roster()) > 1 and time.time() < deadline:
+            time.sleep(0.1)
+        assert len(client.roster()) == 1        # heartbeats stopped
+        client.close()
+        sched.gate.set()
+        t.join(timeout=120.0)
+        assert not t.is_alive(), "experiment hung after worker death"
+        assert len(ex.workers) == 1
+        serial = (Experiment(_job()).with_tuner("v1").with_backend("sim")
+                  .with_scheduler("hyperband").run())
+        assert holder["res"].best_score == serial.best_score
+        ex.close()
+    finally:
+        w2.terminate()
+        w2.wait(timeout=10)
+        ann.stop()
+        server.shutdown()
+        w1_srv.shutdown()
+        w1_srv.service.close()
+
+
+# ----------------------------------------------- launch-flag integration
+
+def test_sysargs_coordinator_flag():
+    from repro.launch.sysargs import add_executor_args, executor_from_args
+
+    def parse(argv):
+        return add_executor_args(argparse.ArgumentParser()).parse_args(argv)
+
+    with pytest.raises(ValueError, match="--coordinator.*cluster"):
+        executor_from_args(parse(["--coordinator", "tcp://h:1",
+                                  "--executor", "cluster"]))
+    with pytest.raises(ValueError, match="--executor workers needs"):
+        executor_from_args(parse(["--executor", "workers"]))
+    server = serve_coordinator(CoordinatorService(), port=0, background=True)
+    try:
+        coord = f"tcp://127.0.0.1:{server.server_address[1]}"
+        ex = executor_from_args(parse(["--coordinator", coord]))
+        assert isinstance(ex, ElasticWorkerPoolExecutor)
+        assert ex.workers == []                 # roster-only pool
+        # --workers entries ride along as static members
+        ex2 = executor_from_args(parse(["--coordinator", coord,
+                                        "--workers", "sim"]))
+        assert len(ex2.workers) == 1
+        assert isinstance(ex2.workers[0], InprocWorker)
+        ex.close()
+        ex2.close()
+    finally:
+        server.shutdown()
+
+
+def test_elastic_executor_requires_a_runner_spec():
+    server = serve_coordinator(CoordinatorService(), port=0, background=True)
+    try:
+        coord = f"tcp://127.0.0.1:{server.server_address[1]}"
+        ex = ElasticWorkerPoolExecutor(coord)
+        with pytest.raises(ValueError, match="runner_spec"):
+            ex.configure_runner_spec(None)      # underivable spec: loud, not
+        ex.close()                              # silently-wrong remote runs
+        explicit = ElasticWorkerPoolExecutor(coord, runner_spec={})
+        explicit.configure_runner_spec(None)    # {} opts into CLI defaults
+        assert explicit._runner_spec == {}
+        explicit.close()
+    finally:
+        server.shutdown()
