@@ -1,0 +1,109 @@
+"""Chaos recovery benchmark: SIGKILL a live worker mid-run and measure
+how fast the elastic path heals.
+
+Runs the ``sigkill_worker`` scenario from the reusable pack (two real
+``python -m repro.worker`` subprocesses behind a coordinator, one killed
+mid-wave) and reports the recovery-time headline: seconds from the kill
+to the victim's retirement plus how many orphaned trials re-placed —
+with the scenario's own SLO verdicts (no lost/repeated epochs,
+bit-identical results vs the no-fault serial run) required to hold.
+
+Also times the no-fault observation overhead: the same in-process tuning
+run with the event bus dark vs. fully instrumented (memory sink + JSONL
+trace), as a sanity bound on what emission costs the hot path.
+
+Run directly for the full version (every scenario in the pack):
+    PYTHONPATH=src python -m benchmarks.chaos --full
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import time
+
+
+def _overhead(repeats: int = 3) -> dict:
+    """Same cluster-executor tuning run, bus dark vs. instrumented."""
+    from repro.api import Experiment, registry
+    from repro.core.job import HPTJob, Param, SearchSpace
+    from repro.obs.events import EventBus
+    from repro.obs.sinks import MemorySink, attach_trace
+
+    space = SearchSpace([
+        Param("batch_size", "choice", choices=(32, 64)),
+        Param("learning_rate", "log", 0.001, 0.1),
+    ])
+    job = HPTJob(workload="lenet-mnist", space=space, max_epochs=6, seed=0)
+
+    def one_run(bus=None):
+        ex = registry.make_executor("cluster", n_nodes=4)
+        if bus is not None:
+            ex.attach_bus(bus)
+        t0 = time.perf_counter()
+        res = (Experiment(job).with_tuner("v1").with_backend("sim")
+               .with_scheduler("hyperband").run(executor=ex))
+        dt = time.perf_counter() - t0
+        ex.close()
+        return dt, res.best_score
+
+    dark, lit, events = [], [], 0
+    with tempfile.TemporaryDirectory() as td:
+        for i in range(repeats):
+            dt, score_dark = one_run()
+            dark.append(dt)
+            bus = EventBus()
+            mem = MemorySink()
+            bus.add_sink(mem)
+            sink = attach_trace(bus, os.path.join(td, f"t{i}.jsonl"))
+            dt, score_lit = one_run(bus)
+            sink.close()
+            lit.append(dt)
+            events = len(mem.records)
+            assert score_lit == score_dark          # observation is passive
+    base, instrumented = min(dark), min(lit)
+    return {"base_s": base, "instrumented_s": instrumented,
+            "overhead_pct": 100.0 * (instrumented / base - 1.0),
+            "events_per_run": events}
+
+
+def run(full: bool = False) -> dict:
+    from repro.obs.chaos import run_scenario
+    from repro.obs.scenarios import SCENARIOS
+
+    names = list(SCENARIOS) if full else ["sigkill_worker"]
+    reports = {}
+    for name in names:
+        report = run_scenario(SCENARIOS[name])
+        if not report.passed:
+            raise RuntimeError(f"chaos scenario {name} violated its SLOs:\n"
+                               + report.summary())
+        reports[name] = report
+    head = reports["sigkill_worker"]
+    out = {
+        "recovery_s": head.recovery_s,
+        "replaced": head.replaced,
+        "n_events": head.n_events,
+        "wall_s": head.wall_s,
+        "scenarios_passed": len(reports),
+        "overhead": _overhead(),
+        "reports": {n: {"passed": r.passed, "recovery_s": r.recovery_s,
+                        "replaced": r.replaced, "wall_s": r.wall_s}
+                    for n, r in reports.items()},
+    }
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--full", action="store_true",
+                    help="run every scenario in the pack, not just the "
+                         "sigkill_worker headline")
+    args = ap.parse_args()
+    out = run(full=args.full)
+    print(json.dumps(out, indent=1))
+
+
+if __name__ == "__main__":
+    main()

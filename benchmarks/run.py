@@ -147,6 +147,17 @@ def bench_store_service():
             f"cached_klookups_per_s={out['cached_lookups_per_s']/1e3:.1f}")
 
 
+def bench_chaos():
+    """SIGKILL recovery headline: real workers, one killed mid-run; SLOs
+    (retire-in-budget, trials re-placed, epochs exact, bit-identical)
+    asserted inside. Also bounds no-fault event-emission overhead."""
+    from benchmarks import chaos
+    out = chaos.run()
+    return (f"recovery_s={out['recovery_s']:.3f};"
+            f"replaced={out['replaced']};"
+            f"obs_overhead_pct={out['overhead']['overhead_pct']:.1f}")
+
+
 def bench_fig1_tuning_cost():
     from benchmarks import tuning_cost
     rows = tuning_cost.run(max_params=3, epochs=3)
@@ -289,6 +300,7 @@ def _run_all() -> None:
     _timed("async_vs_barrier", bench_async_vs_barrier)
     _timed("elastic", bench_elastic)
     _timed("store_service", bench_store_service)
+    _timed("chaos", bench_chaos)
     _timed("fig1_tuning_cost", bench_fig1_tuning_cost)
     _timed("fig2_profiling_stability", bench_fig2_profiling_stability)
     _timed("fig8_clustering", bench_fig8_clustering)

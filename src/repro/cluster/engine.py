@@ -47,6 +47,9 @@ from typing import (Callable, Dict, Generator, Iterable, Iterator, List,
 
 import numpy as np
 
+from repro.obs.events import (EpochCompleted, Resharded, TrialDispatched,
+                              WorkerJoined, WorkerRetired, get_bus)
+
 
 @dataclasses.dataclass(frozen=True)
 class NodeSpec:
@@ -172,6 +175,7 @@ class EventEngine:
         self._n_active = 0
         self.policy: Optional[Callable[["EventEngine"], None]] = None
         self._in_policy = False
+        self.bus = get_bus()                    # sim-time events (at_s=now)
 
     # ------------------------------------------------------------- submit
     def submit(self, task_id: str, process: Iterator[float],
@@ -325,6 +329,10 @@ class EventEngine:
         if not task.started:
             task.started = True
             task.stats.start_s = self.now
+        if self.bus.enabled:
+            self.bus.emit(TrialDispatched(trial_id=task.stats.task_id,
+                                          worker=f"node:{node}",
+                                          at_s=self.now))
         self._advance(task)
 
     def _advance(self, task: _Task) -> None:
@@ -348,6 +356,12 @@ class EventEngine:
             task.pending_charge = 0.0           # after the migration
         task.stats.service_s += eff
         task.stats.n_epochs += 1
+        if self.bus.enabled:
+            self.bus.emit(EpochCompleted(
+                trial_id=task.stats.task_id,
+                worker=f"node:{task.stats.node}",
+                epoch=task.stats.n_epochs - 1, duration_s=eff,
+                at_s=self.now + eff))
         self._push(self.now + eff, lambda: self._advance(task))
 
     def _vacate(self, task: _Task) -> None:
@@ -360,6 +374,9 @@ class EventEngine:
         task.vacate = False
         task.stats.n_preemptions += 1
         task.pending_charge += self.cfg.restore_s + self.cfg.reconfig_s
+        if self.bus.enabled:
+            self.bus.emit(Resharded(trial_id=task.stats.task_id,
+                                    src=f"node:{node}", at_s=self.now))
         self._release_slot(node)
         self._push(self.now, lambda: self._arrive(task))
 
@@ -394,12 +411,24 @@ class EventEngine:
 
     def _join(self, node: int) -> None:
         self._retired.discard(node)
+        if self.bus.enabled:
+            spec = self._nodes[node]
+            self.bus.emit(WorkerJoined(worker=f"node:{node}",
+                                       worker_kind="sim",
+                                       capacity=spec.capacity,
+                                       speed_factor=spec.speed,
+                                       at_s=self.now))
         while self._free_slots(node) and self._claim_waiter(node):
             pass
 
     def _do_retire(self, node: int) -> None:
         if node in self._retired or node in self._draining:
             return
+        if self.bus.enabled:
+            self.bus.emit(WorkerRetired(worker=f"node:{node}",
+                                        reason="retired",
+                                        inflight=self._in_use[node],
+                                        at_s=self.now))
         if self._in_use[node] == 0:
             self._retired.add(node)
         else:

@@ -91,6 +91,13 @@ class ClusterTrialExecutor:
         """Evict one trial the same way without touching its node."""
         self.worker.preempt(trial_id, at=at)
 
+    def attach_bus(self, bus) -> None:
+        """Route this executor's telemetry (pool dispatch/completion plus
+        the engine's sim-time node events) to `bus`."""
+        self.pool.bus = bus
+        self.worker.bus = bus
+        self.engine.bus = bus
+
     # ---------------------------------------------------------- drive loops
     def run_wave(self, runner, workload: str,
                  proposals: Sequence[TrialProposal]

@@ -26,14 +26,16 @@ def _flush_buffers(root: str, buffers: Dict[str, list],
     store itself (which would keep it alive forever)."""
     with lock:
         for measurement in list(buffers):
-            buf = buffers.get(measurement, [])
+            # drain before writing: each record leaves the buffer exactly
+            # once, so overlapping flush triggers (close + GC + atexit, or
+            # a write that raised mid-batch) can never duplicate rows
+            buf, buffers[measurement] = buffers.get(measurement, []), []
             if not buf:
                 continue
             path = os.path.join(root, f"{measurement}.jsonl")
             with open(path, "a") as f:
                 for rec in buf:
                     f.write(json.dumps(rec) + "\n")
-            buffers[measurement] = []
 
 
 class MetricsStore:
@@ -61,13 +63,14 @@ class MetricsStore:
                 self._flush(measurement)
 
     def _flush(self, measurement: str):
-        buf = self._buffers.get(measurement, [])
+        # drain-before-write (see _flush_buffers): never duplicate a row
+        buf, self._buffers[measurement] = \
+            self._buffers.get(measurement, []), []
         if not buf:
             return
         with open(self._path(measurement), "a") as f:
             for rec in buf:
                 f.write(json.dumps(rec) + "\n")
-        self._buffers[measurement] = []
 
     def flush(self):
         with self._lock:

@@ -44,6 +44,9 @@ import time
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.schedulers import TrialProposal
+from repro.obs.events import (Resharded, TrialCompleted, TrialDispatched,
+                              WorkerJoined, WorkerRetired, get_bus,
+                              worker_label)
 
 __all__ = ["WorkerCapabilities", "TrialCompletion", "Worker",
            "InprocWorker", "ThreadWorker", "WorkerPool",
@@ -85,6 +88,9 @@ class Worker:
     def __init__(self):
         self.runner = None
         self.workload: Optional[str] = None
+        # telemetry: inert by default; pools propagate theirs so workers
+        # that emit their own events (remote epoch completions) share it
+        self.bus = get_bus()
 
     def bind(self, runner, workload: str) -> None:
         self.runner, self.workload = runner, workload
@@ -268,6 +274,7 @@ class WorkerPool:
             raise ValueError("need at least one worker")
         self.workers: List[Worker] = list(workers)
         self.sticky = sticky
+        self.bus = get_bus()            # telemetry; off until observed
         self.retire_on_error = False
         self.maintenance: Optional[Any] = None      # no-arg callable
         self.join_timeout_s = join_timeout_s
@@ -334,21 +341,29 @@ class WorkerPool:
         raise — e.g. a remote worker with no runner spec — in which case the
         pool is unchanged), then immediately eligible for placement; any
         backlogged trials (stranded by earlier removals) dispatch to it."""
+        worker.bus = self.bus
         if self._bound is not None:
             worker.bind(*self._bound)
         self.workers.append(worker)
+        if self.bus.enabled:
+            caps = worker.capabilities()
+            self.bus.emit(WorkerJoined(
+                worker=worker_label(worker), worker_kind=caps.kind,
+                capacity=caps.capacity, speed_factor=caps.speed_factor))
         self._stall_t0 = None
         backlog, self._backlog = self._backlog, []
         for p, epochs in backlog:
             self._dispatch(p, epochs)
 
-    def remove_worker(self, worker: Worker, drain: bool = False) -> None:
+    def remove_worker(self, worker: Worker, drain: bool = False,
+                      reason: str = "retired") -> None:
         """Retire `worker`. ``drain=True`` first waits (bounded) for its
         in-flight trials to finish, collecting their completions; anything
         still unfinished — and everything, when not draining — is re-placed
         onto the surviving workers (or backlogged until one joins). Sticky
         bindings to the worker are dropped, so resumed trials re-place
-        freely."""
+        freely. ``reason`` labels the retirement in the event stream
+        (leave / heartbeat / worker_lost / roster / drain / retired)."""
         if worker not in self.workers:
             return
         if drain:
@@ -367,6 +382,10 @@ class WorkerPool:
                 del self._bindings[tid]
         orphans = [tid for tid, w in self._inflight_worker.items()
                    if w is worker]
+        src = worker_label(worker) if self.bus.enabled else ""
+        if self.bus.enabled:
+            self.bus.emit(WorkerRetired(worker=src, reason=reason,
+                                        inflight=len(orphans)))
         try:
             worker.close()
         except Exception:           # noqa: BLE001 — already-dead transport
@@ -375,6 +394,11 @@ class WorkerPool:
             p, epochs = self._inflight.pop(tid)
             del self._inflight_worker[tid]
             self._dispatch(p, epochs)
+            if self.bus.enabled:
+                dst = self._inflight_worker.get(tid)    # None: backlogged
+                self.bus.emit(Resharded(
+                    trial_id=tid, src=src,
+                    dst=worker_label(dst) if dst is not None else ""))
 
     # ---------------------------------------------------------- drive loops
     def run_wave(self, runner, workload: str,
@@ -440,6 +464,10 @@ class WorkerPool:
         self._inflight_worker[p.trial_id] = w
         self.dispatched[id(w)] = self.dispatched.get(id(w), 0) + 1
         self._stall_t0 = None
+        if self.bus.enabled:
+            self.bus.emit(TrialDispatched(trial_id=p.trial_id,
+                                          worker=worker_label(w),
+                                          epochs=epochs))
 
     def _apply_wave_clones(self, proposals: Sequence[TrialProposal]) -> None:
         # clone sources must be wave-boundary snapshots, so apply for the
@@ -461,12 +489,21 @@ class WorkerPool:
                 self._inflight.pop(c.trial_id, None)
                 self._inflight_worker.pop(c.trial_id, None)
                 out.append(c)
+                if self.bus.enabled:
+                    self.bus.emit(TrialCompleted(trial_id=c.trial_id,
+                                                 worker=worker_label(worker),
+                                                 score=c.score))
         for c in errors:
             if self.retire_on_error and \
                     getattr(c.error, "worker_lost", False):
-                self.remove_worker(worker)      # no-op once removed;
+                self.remove_worker(worker,      # no-op once removed;
+                                   reason="worker_lost")
             else:                               # re-places its trials
                 out.append(c)
+                if self.bus.enabled:
+                    self.bus.emit(TrialCompleted(
+                        trial_id=c.trial_id, worker=worker_label(worker),
+                        score=c.score, error=str(c.error)))
 
     def _poll_once(self, block: bool) -> List[TrialCompletion]:
         out, self._drained = self._drained, []
@@ -550,6 +587,15 @@ class WorkerPoolExecutor:
 
     def remove_worker(self, worker: Worker, drain: bool = False) -> None:
         self.pool.remove_worker(worker, drain=drain)
+
+    def attach_bus(self, bus) -> None:
+        """Route this executor's telemetry through `bus` (an
+        ``repro.obs.events.EventBus``) instead of the process default —
+        the hook ``--trace`` and the chaos orchestrator use. Propagates to
+        current workers; late joiners pick it up from the pool."""
+        self.pool.bus = bus
+        for w in self.workers:
+            w.bus = bus
 
     def configure_runner_spec(self, spec: Optional[dict]) -> None:
         """Hand workers that mirror the runner remotely the recipe for

@@ -54,6 +54,12 @@ def add_executor_args(ap: argparse.ArgumentParser, executor: str = "serial",
                          "waves, leaves/missed heartbeats retire the worker "
                          "and re-place its trials; combine with --workers "
                          "for static members")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="append the run's structured events (dispatches, "
+                         "epoch completions, worker joins/retires, reshards) "
+                         "to PATH as JSONL; requires an executor that can "
+                         "attach an event bus (cluster / sharded / workers / "
+                         "--coordinator)")
     return ap
 
 
@@ -97,27 +103,50 @@ def executor_from_args(args: argparse.Namespace):
             "serial, which --coordinator upgrades); the flag would be "
             "silently ignored")
     if name == "parallel" or (name == "serial" and args.parallelism > 1):
-        return registry.make_executor("parallel",
-                                      parallelism=args.parallelism)
-    if name == "cluster":
-        return registry.make_executor(
+        ex = registry.make_executor("parallel",
+                                    parallelism=args.parallelism)
+    elif name == "cluster":
+        ex = registry.make_executor(
             "cluster", n_nodes=args.cluster_nodes,
             straggler_prob=args.straggler_prob)
-    if name == "sharded":
+    elif name == "sharded":
         backends = args.backends.split(",") if args.backends else None
-        return registry.make_executor(
+        ex = registry.make_executor(
             "sharded", backends=backends, capacity=args.shard_capacity,
             straggler_prob=args.straggler_prob)
-    if name == "workers":
+    elif name == "workers":
         if not workers and not coordinator:
             raise ValueError("--executor workers needs --workers "
                              "tcp://HOST:PORT[,...] (or local shard names) "
                              "and/or --coordinator tcp://HOST:PORT")
         # the runner spec (tuner/backend/store recipe for the remote ends)
         # is filled in by Experiment.run via configure_runner_spec
-        return registry.make_executor("workers", workers=workers,
-                                      coordinator=coordinator)
-    return registry.make_executor(name)
+        ex = registry.make_executor("workers", workers=workers,
+                                    coordinator=coordinator)
+    else:
+        ex = registry.make_executor(name)
+    return _maybe_attach_trace(ex, args, name)
+
+
+def _maybe_attach_trace(ex, args: argparse.Namespace, name: str):
+    """``--trace PATH``: sink the run's event stream to a JSONL file. An
+    executor with no ``attach_bus`` would produce a silently empty trace —
+    that combination is a hard error, like the other ignored-flag cases."""
+    trace = getattr(args, "trace", None)
+    if not trace:
+        return ex
+    if getattr(ex, "attach_bus", None) is None:
+        raise ValueError(
+            f"--trace conflicts with --executor {name}: "
+            f"{type(ex).__name__} cannot attach an event bus, so the trace "
+            "would stay silently empty — use an executor that emits events "
+            "(cluster / sharded / workers / --coordinator)")
+    from repro.obs.events import EventBus
+    from repro.obs.sinks import attach_trace
+    bus = EventBus()
+    attach_trace(bus, trace)
+    ex.attach_bus(bus)
+    return ex
 
 
 def add_store_args(ap: argparse.ArgumentParser,

@@ -1,0 +1,58 @@
+"""Observability + chaos subsystem for the live elastic path.
+
+Structured telemetry (``repro.obs.events``), sinks (JSONL trace,
+``MetricsStore`` bridge), a scrapeable metrics/tail endpoint over the
+shared RPC framing (``repro.obs.metrics``), and a fault-injecting chaos
+orchestrator that asserts recovery SLOs (``repro.obs.chaos`` +
+``repro.obs.scenarios``). ``python -m repro.obs`` is the CLI (tail a live
+run, scrape metrics, run a chaos scenario).
+
+This ``__init__`` resolves lazily (PEP 562): ``repro.core.worker`` and
+``repro.cluster.engine`` import ``repro.obs.events`` (stdlib-only), while
+the sinks/metrics modules import ``repro.core.store`` and
+``repro.service.transport`` — eager imports here would cycle through
+``repro.core``.
+"""
+from repro.obs.events import (  # noqa: F401 — the always-safe base layer
+    DEFAULT_BUS, EVENT_TYPES, EpochCompleted, Event, EventBus,
+    HeartbeatMissed, Resharded, StoreRefit, TrialCompleted, TrialDispatched,
+    WorkerJoined, WorkerRetired, event_from_dict, get_bus, set_bus,
+    worker_label)
+
+_LAZY = {
+    "JsonlSink": "repro.obs.sinks",
+    "MetricsStoreSink": "repro.obs.sinks",
+    "MemorySink": "repro.obs.sinks",
+    "read_trace": "repro.obs.sinks",
+    "attach_trace": "repro.obs.sinks",
+    "render_metrics": "repro.obs.metrics",
+    "ObsService": "repro.obs.metrics",
+    "ObsServer": "repro.obs.metrics",
+    "ObsClient": "repro.obs.metrics",
+    "serve_obs": "repro.obs.metrics",
+    "ChaosProxy": "repro.obs.chaos",
+    "ChaosScenario": "repro.obs.chaos",
+    "ChaosReport": "repro.obs.chaos",
+    "SLOBudget": "repro.obs.chaos",
+    "SLOResult": "repro.obs.chaos",
+    "KillWorkers": "repro.obs.chaos",
+    "PartitionCoordinator": "repro.obs.chaos",
+    "PartitionStore": "repro.obs.chaos",
+    "SlowWorker": "repro.obs.chaos",
+    "run_scenario": "repro.obs.chaos",
+    "SCENARIOS": "repro.obs.scenarios",
+}
+
+__all__ = ["Event", "EventBus", "TrialDispatched", "TrialCompleted",
+           "EpochCompleted", "WorkerJoined", "WorkerRetired",
+           "HeartbeatMissed", "Resharded", "StoreRefit", "EVENT_TYPES",
+           "DEFAULT_BUS", "get_bus", "set_bus", "event_from_dict",
+           "worker_label"] + sorted(_LAZY)
+
+
+def __getattr__(name):
+    mod = _LAZY.get(name)
+    if mod is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+    return getattr(importlib.import_module(mod), name)

@@ -1,0 +1,111 @@
+"""CLI of the observability subsystem (``python -m repro.obs``).
+
+    tail tcp://HOST:PORT          follow a live run's event stream
+    metrics tcp://HOST:PORT       scrape the Prometheus-style text once
+    chaos NAME [--trace t.jsonl]  run one chaos scenario, assert its SLOs
+    chaos --list                  show the scenario pack
+
+``tail``/``metrics`` talk to a ``serve_obs`` endpoint (any run can host
+one: ``from repro.obs import serve_obs; serve_obs(background=True)``).
+``chaos`` exits nonzero when any SLO is violated — the CI smoke job is
+exactly ``python -m repro.obs chaos sigkill_worker --trace ...``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+
+def _cmd_tail(args) -> int:
+    from repro.obs.metrics import ObsClient
+    client = ObsClient(args.endpoint)
+    try:
+        while True:
+            for rec in client.tail():
+                print(json.dumps(rec), flush=True)
+            if args.once:
+                return 0
+            time.sleep(args.interval)
+    except KeyboardInterrupt:
+        return 0
+    finally:
+        client.close()
+
+
+def _cmd_metrics(args) -> int:
+    from repro.obs.metrics import ObsClient
+    client = ObsClient(args.endpoint)
+    try:
+        print(client.metrics(), end="")
+    finally:
+        client.close()
+    return 0
+
+
+def _cmd_chaos(args) -> int:
+    from repro.obs.chaos import run_scenario
+    from repro.obs.scenarios import SCENARIOS
+    if args.list or not args.scenario:
+        for name, scn in sorted(SCENARIOS.items()):
+            print(f"{name:24s} {scn.description}")
+        return 0 if args.list else 2
+    scn = SCENARIOS.get(args.scenario)
+    if scn is None:
+        print(f"unknown scenario {args.scenario!r}; available: "
+              f"{sorted(SCENARIOS)}", file=sys.stderr)
+        return 2
+    report = run_scenario(scn, trace_path=args.trace)
+    print(report.summary(), flush=True)
+    if args.json:
+        import dataclasses
+        print(json.dumps(dataclasses.asdict(report)), flush=True)
+    return 0 if report.passed else 1
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs",
+        description="tail, scrape, and chaos-test a live PipeTune run")
+    sub = ap.add_subparsers(dest="cmd")
+
+    tail = sub.add_parser("tail", help="follow a live event stream")
+    tail.add_argument("endpoint", help="tcp://HOST:PORT of a serve_obs "
+                                       "endpoint")
+    tail.add_argument("--interval", type=float, default=0.5,
+                      help="poll interval in seconds")
+    tail.add_argument("--once", action="store_true",
+                      help="print what the ring holds and exit")
+
+    met = sub.add_parser("metrics", help="scrape the metrics text once")
+    met.add_argument("endpoint", help="tcp://HOST:PORT of a serve_obs "
+                                      "endpoint")
+
+    chaos = sub.add_parser(
+        "chaos", help="run one fault scenario against a real elastic run "
+                      "and assert its recovery SLOs (exit 1 on violation)")
+    chaos.add_argument("scenario", nargs="?", default=None,
+                       help="scenario name (see --list)")
+    chaos.add_argument("--trace", default=None,
+                       help="also write the run's event stream to this "
+                            "JSONL file (the CI artifact)")
+    chaos.add_argument("--json", action="store_true",
+                       help="print the full report as JSON after the "
+                            "summary")
+    chaos.add_argument("--list", action="store_true",
+                       help="list the scenario pack and exit")
+
+    args = ap.parse_args(argv)
+    if args.cmd == "tail":
+        return _cmd_tail(args)
+    if args.cmd == "metrics":
+        return _cmd_metrics(args)
+    if args.cmd == "chaos":
+        return _cmd_chaos(args)
+    ap.print_help()
+    return 2
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,66 @@
+"""The reusable chaos scenario pack.
+
+Each entry is a declarative ``ChaosScenario`` (topology + one fault + an
+``SLOBudget``) runnable via ``run_scenario`` or from the CLI:
+
+    python -m repro.obs chaos sigkill_worker --trace /tmp/chaos.jsonl
+
+``sigkill_worker`` is the CI smoke scenario — the smallest topology that
+still exercises the whole recovery path (transport-death *or* heartbeat
+retirement, trial re-placement, deterministic results). The pack replaces
+PR 5's one-off failover tests with cases the orchestrator can re-run,
+trace, and judge uniformly.
+"""
+from __future__ import annotations
+
+from repro.obs.chaos import (ChaosScenario, KillWorkers,
+                             PartitionCoordinator, PartitionStore, SLOBudget,
+                             SlowWorker)
+
+__all__ = ["SCENARIOS"]
+
+_PACK = [
+    ChaosScenario(
+        name="sigkill_worker",
+        description="SIGKILL one of two workers mid-run; its trials must "
+                    "re-place and results stay bit-identical",
+        fault=KillWorkers(victims=1),
+        n_workers=2, ttl_s=2.0,
+    ),
+    ChaosScenario(
+        name="sigkill_storm",
+        description="SIGKILL two of three workers at once; the survivor "
+                    "absorbs every orphaned trial",
+        fault=KillWorkers(victims=2),
+        n_workers=3, ttl_s=2.0,
+    ),
+    ChaosScenario(
+        name="partition_coordinator",
+        description="refuse the coordinator for several seconds; the pool "
+                    "keeps running on its roster, heartbeats provably miss, "
+                    "and the run completes unchanged",
+        fault=PartitionCoordinator(duration_s=5.0, mode="refuse"),
+        n_workers=2, ttl_s=2.0,
+        slo=SLOBudget(require_replacement=False, min_heartbeats_missed=1),
+    ),
+    ChaosScenario(
+        name="partition_store",
+        description="blackhole the shared ground-truth store for a second "
+                    "mid-run; lookups ride it out and pipetune's results "
+                    "do not change",
+        fault=PartitionStore(duration_s=1.0, mode="blackhole"),
+        n_workers=1, tuner="pipetune", with_store=True,
+        slo=SLOBudget(require_replacement=False),
+    ),
+    ChaosScenario(
+        name="slow_node",
+        description="a 4x-degraded worker joins the pool; weighted "
+                    "placement sheds load onto the fast nodes and results "
+                    "do not change",
+        fault=SlowWorker(speed_factor=0.25),
+        n_workers=2,
+        slo=SLOBudget(require_replacement=False, max_dispatch_share=0.34),
+    ),
+]
+
+SCENARIOS = {s.name: s for s in _PACK}

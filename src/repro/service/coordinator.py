@@ -43,6 +43,8 @@ import time
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.worker import Worker, WorkerPoolExecutor
+from repro.obs.events import (HeartbeatMissed, WorkerJoined, WorkerRetired,
+                              get_bus)
 from repro.service.dispatch import (RemoteWorker, WorkerError,
                                     parse_tcp_address)
 from repro.service.transport import (JsonRPCServer, SocketTransport,
@@ -67,6 +69,7 @@ class CoordinatorService:
             raise ValueError("ttl_s must be > 0")
         self.ttl_s = float(ttl_s)
         self._clock = clock
+        self.bus = get_bus()
         self._lock = threading.Lock()
         self._ids = itertools.count()
         self._workers: Dict[str, dict] = {}     # worker_id -> entry
@@ -106,6 +109,11 @@ class CoordinatorService:
             worker_id = f"w-{next(self._ids)}"
             self._workers[worker_id] = {**entry, "last_seen": self._clock()}
             self._version += 1
+            if self.bus.enabled:
+                self.bus.emit(WorkerJoined(
+                    worker=address, worker_kind="roster",
+                    capacity=entry["capacity"],
+                    speed_factor=entry["speed_factor"]))
             return {"worker_id": worker_id, "ttl_s": self.ttl_s,
                     "version": self._version}
 
@@ -124,8 +132,12 @@ class CoordinatorService:
     def _op_leave(self, req) -> Dict[str, Any]:
         worker_id = str(req.get("worker_id", ""))
         with self._lock:
-            if self._workers.pop(worker_id, None) is not None:
+            entry = self._workers.pop(worker_id, None)
+            if entry is not None:
                 self._version += 1
+                if self.bus.enabled:
+                    self.bus.emit(WorkerRetired(worker=entry["address"],
+                                                reason="leave"))
             return {}
 
     def _op_roster(self, req) -> Dict[str, Any]:
@@ -145,11 +157,18 @@ class CoordinatorService:
 
     # ------------------------------------------------------------ internals
     def _prune(self) -> None:
-        cutoff = self._clock() - self.ttl_s
+        now = self._clock()
+        cutoff = now - self.ttl_s
         expired = [wid for wid, e in self._workers.items()
                    if e["last_seen"] < cutoff]
         for wid in expired:
-            del self._workers[wid]
+            entry = self._workers.pop(wid)
+            if self.bus.enabled:
+                self.bus.emit(HeartbeatMissed(
+                    worker=entry["address"],
+                    age_s=now - entry["last_seen"], ttl_s=self.ttl_s))
+                self.bus.emit(WorkerRetired(worker=entry["address"],
+                                            reason="heartbeat"))
         if expired:
             self._version += 1
 
@@ -381,7 +400,8 @@ class ElasticWorkerPoolExecutor(WorkerPoolExecutor):
         for address, w in list(self._discovered.items()):
             if address not in roster:
                 del self._discovered[address]
-                self.pool.remove_worker(w)      # re-places its trials
+                # re-places its trials on the survivors
+                self.pool.remove_worker(w, reason="roster")
         for address, entry in roster.items():
             if address in self._discovered or now < self._cooldown.get(
                     address, float("-inf")):

@@ -29,6 +29,7 @@ from __future__ import annotations
 
 import queue
 import threading
+import time
 from typing import Any, Dict, List, Optional, Tuple
 
 from repro.core.backends import EpochResult
@@ -36,6 +37,7 @@ from repro.core.pipetune import TrialRecord
 from repro.core.profiler import EpochProfile
 from repro.core.schedulers import TrialProposal
 from repro.core.worker import TrialCompletion, Worker, WorkerCapabilities
+from repro.obs.events import EpochCompleted
 from repro.service.transport import SocketTransport, TransportError
 
 __all__ = ["RemoteWorker", "WorkerError", "WorkerLostError",
@@ -49,11 +51,23 @@ class WorkerError(RuntimeError):
 class WorkerLostError(WorkerError):
     """The worker's transport died mid-run (connection refused, reset, or
     closed). Always names the worker's ``tcp://`` address, so pool-level
-    retirement and users can tell which worker went away. ``worker_lost``
-    is the layering-safe flag ``WorkerPool.retire_on_error`` keys on
-    (``repro.core`` cannot import this module)."""
+    retirement and users can tell which worker went away, and — when the
+    client has history with the worker — how stale it was when it died:
+    ``age_s`` (seconds since the last successful request) and
+    ``last_trial``/``last_epochs`` (the last trial it completed and that
+    record's epoch count). ``worker_lost`` is the layering-safe flag
+    ``WorkerPool.retire_on_error`` keys on (``repro.core`` cannot import
+    this module)."""
 
     worker_lost = True
+
+    def __init__(self, message: str, age_s: Optional[float] = None,
+                 last_trial: Optional[str] = None,
+                 last_epochs: Optional[int] = None):
+        super().__init__(message)
+        self.age_s = age_s
+        self.last_trial = last_trial
+        self.last_epochs = last_epochs
 
 
 def parse_tcp_address(spec: str) -> Tuple[str, int]:
@@ -141,6 +155,12 @@ class RemoteWorker(Worker):
         # distinct from None (no spec yet — Experiment may fill it in)
         self.runner_spec = dict(runner_spec) if runner_spec is not None \
             else None
+        # last-contact bookkeeping, set before the first request (hello)
+        # so a transport death always has it to report
+        self._last_ok_t: Optional[float] = None
+        self._last_trial: Optional[str] = None
+        self._last_epochs = 0
+        self._epochs_seen: Dict[str, int] = {}      # trial -> epochs emitted
         # request_timeout=None: a remote trial legitimately runs longer
         # than any sane connect timeout
         try:
@@ -224,10 +244,23 @@ class RemoteWorker(Worker):
             resp = self.transport.request(req)
         except (TransportError, ConnectionError, OSError) as e:
             # a raw socket error says nothing about *which* worker died;
-            # name the address so pool-level retirement (and the user) can
+            # name the address — and how stale it was — so pool-level
+            # retirement (and the user) can act on the report
+            age = None if self._last_ok_t is None \
+                else time.monotonic() - self._last_ok_t
+            detail = ""
+            if age is not None:
+                detail = f" (last ok {age:.1f}s ago"
+                if self._last_trial is not None:
+                    detail += (f"; last completed trial {self._last_trial} "
+                               f"@{self._last_epochs} epochs")
+                detail += ")"
             raise WorkerLostError(
                 f"worker tcp://{self.address[0]}:{self.address[1]} lost "
-                f"during {req.get('op')!r}: {e}") from e
+                f"during {req.get('op')!r}{detail}: {e}",
+                age_s=age, last_trial=self._last_trial,
+                last_epochs=self._last_epochs or None) from e
+        self._last_ok_t = time.monotonic()
         if not resp.get("ok"):
             raise WorkerError(
                 f"worker {self.address[0]}:{self.address[1]} rejected "
@@ -248,6 +281,18 @@ class RemoteWorker(Worker):
                 rec = record_from_payload(resp["record"])
                 runner = self.runner
                 runner.install_record(rec)
+                self._last_trial = rec.trial_id
+                self._last_epochs = len(rec.epochs)
+                if self.bus.enabled:
+                    # records accumulate epochs across rung resumes:
+                    # emit only what this completion added
+                    label = f"tcp://{self.address[0]}:{self.address[1]}"
+                    seen = self._epochs_seen.get(rec.trial_id, 0)
+                    for i in range(seen, len(rec.epochs)):
+                        self.bus.emit(EpochCompleted(
+                            trial_id=rec.trial_id, worker=label, epoch=i,
+                            duration_s=rec.epochs[i].duration_s))
+                    self._epochs_seen[rec.trial_id] = len(rec.epochs)
                 self._completions.put(TrialCompletion(
                     rec.trial_id, rec.score(runner.objective)))
             except BaseException as e:                  # noqa: BLE001

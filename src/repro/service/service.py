@@ -37,6 +37,7 @@ from typing import Any, Dict, Optional
 import numpy as np
 
 from repro.core.groundtruth import GroundTruth, GroundTruthError
+from repro.obs.events import StoreRefit, get_bus
 
 __all__ = ["GroundTruthService"]
 
@@ -55,6 +56,7 @@ class GroundTruthService:
                  path: Optional[str] = None, reset: bool = False, **gt_kw):
         self.store = store if store is not None else GroundTruth(**gt_kw)
         self.path = path
+        self.bus = get_bus()
         self._lock = threading.RLock()
         self._journal = None
         if path:
@@ -97,10 +99,16 @@ class GroundTruthService:
             self._journal.flush()
         self.store.add(profile, rec["workload"], rec["sys_config"],
                        rec["objective"], refit=bool(req.get("refit", True)))
+        if req.get("refit", True) and self.bus.enabled:
+            self.bus.emit(StoreRefit(version=self.store.version,
+                                     n_entries=len(self.store.entries)))
         return {"n_entries": len(self.store.entries)}
 
     def _op_refit(self, req) -> dict:
         self.store.refit()
+        if self.bus.enabled:
+            self.bus.emit(StoreRefit(version=self.store.version,
+                                     n_entries=len(self.store.entries)))
         return {}
 
     def _op_snapshot(self, req) -> dict:

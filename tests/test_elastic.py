@@ -4,7 +4,6 @@ policy, mutable worker pools, and coordinator-based worker discovery."""
 import argparse
 import dataclasses
 import os
-import signal
 import socket
 import subprocess
 import sys
@@ -24,8 +23,7 @@ from repro.core.job import HPTJob, Param, SearchSpace
 from repro.core.worker import (TrialCompletion, Worker, WorkerCapabilities)
 from repro.service import (CoordinatorClient, CoordinatorService,
                            ElasticWorkerPoolExecutor, RemoteWorker,
-                           TrialWorkerService, WorkerAnnouncer,
-                           serve_coordinator, serve_worker)
+                           WorkerAnnouncer, serve_coordinator)
 from repro.service.transport import _recv_msg, _send_msg
 
 
@@ -627,59 +625,18 @@ def test_worker_joining_mid_run_receives_trials_live():
 
 @pytest.mark.slow
 def test_killed_worker_is_retired_and_its_trials_finish_elsewhere():
-    """A worker that dies mid-job (SIGKILL, no goodbye) is dropped by
-    missed heartbeats; the pool retires it and re-places its trials — the
-    job still finishes with serial-identical scores."""
-    server = serve_coordinator(CoordinatorService(ttl_s=2.0), port=0,
-                               background=True)
-    w1_srv = serve_worker(TrialWorkerService(), port=0, background=True)
-    coord = f"tcp://127.0.0.1:{server.server_address[1]}"
-    ann = WorkerAnnouncer(coord,
-                          f"tcp://127.0.0.1:{w1_srv.server_address[1]}")
-    ann.start()
-    w2, _ = _spawn(["repro.worker", "--port", "0", "--announce", coord],
-                   "announced to")
-    try:
-        ex = ElasticWorkerPoolExecutor(coord, refresh_s=0.1)
-        job = _job()
-        sched = _GatedScheduler(make_scheduler("hyperband", job),
-                                gate_after_wave=2)
-        holder = {}
+    """A worker that dies mid-job (SIGKILL, no goodbye) is retired and its
+    trials re-placed, with serial-identical scores. The orchestration that
+    used to live inline here is now the declarative `sigkill_worker` chaos
+    scenario (repro.obs.scenarios) — this asserts its SLO report."""
+    from repro.obs.chaos import run_scenario
+    from repro.obs.scenarios import SCENARIOS
 
-        def run():
-            holder["res"] = (Experiment(job).with_tuner("v1")
-                             .with_backend("sim").with_scheduler(sched)
-                             .run(executor=ex))
-
-        t = threading.Thread(target=run)
-        t.start()
-        # let the first waves dispatch to both workers, then kill one
-        deadline = time.time() + 30.0
-        while len(ex.workers) < 2 and time.time() < deadline:
-            time.sleep(0.05)
-        assert len(ex.workers) == 2
-        os.kill(w2.pid, signal.SIGKILL)
-        client = CoordinatorClient(coord)
-        deadline = time.time() + 30.0
-        while len(client.roster()) > 1 and time.time() < deadline:
-            time.sleep(0.1)
-        assert len(client.roster()) == 1        # heartbeats stopped
-        client.close()
-        sched.gate.set()
-        t.join(timeout=120.0)
-        assert not t.is_alive(), "experiment hung after worker death"
-        assert len(ex.workers) == 1
-        serial = (Experiment(_job()).with_tuner("v1").with_backend("sim")
-                  .with_scheduler("hyperband").run())
-        assert holder["res"].best_score == serial.best_score
-        ex.close()
-    finally:
-        w2.terminate()
-        w2.wait(timeout=10)
-        ann.stop()
-        server.shutdown()
-        w1_srv.shutdown()
-        w1_srv.service.close()
+    report = run_scenario(SCENARIOS["sigkill_worker"])
+    assert report.passed, report.summary()
+    assert report.recovery_s is not None
+    assert report.recovery_s <= SCENARIOS["sigkill_worker"].retire_budget_s()
+    assert report.replaced >= 1                 # trials really moved
 
 
 # ----------------------------------------------- launch-flag integration

@@ -1,0 +1,754 @@
+"""Observability + chaos subsystem (PR 6 acceptance surface): the typed
+event layer and its bus, sinks (JSONL trace / MetricsStore / memory), the
+scrapeable metrics endpoint, emitters across the pool / engine /
+coordinator / store service, WorkerLostError enrichment, coordinator TTL
+edge cases, the idempotent MetricsStore flush, the ``--trace`` launch flag,
+and SLO evaluation over synthetic event streams."""
+import argparse
+import json
+import math
+import os
+import socket
+import threading
+import time
+import types
+
+import pytest
+
+from repro.obs import (EVENT_TYPES, EpochCompleted, Event, EventBus,
+                       HeartbeatMissed, Resharded, StoreRefit,
+                       TrialCompleted, TrialDispatched, WorkerJoined,
+                       WorkerRetired, event_from_dict, get_bus, set_bus,
+                       worker_label)
+from repro.obs.sinks import (JsonlSink, MemorySink, MetricsStoreSink,
+                             attach_trace, read_trace)
+
+
+# --------------------------------------------------------- the event bus
+
+def test_bus_is_inert_until_observed():
+    bus = EventBus()
+    assert not bus.enabled
+    bus.emit(TrialDispatched(trial_id="t", worker="w"))
+    assert bus.seq == 0 and bus.counters == {}      # emit was a no-op
+    mem = MemorySink()
+    bus.add_sink(mem)                               # subscribing enables
+    assert bus.enabled
+    bus.emit(TrialDispatched(trial_id="t", worker="w"))
+    assert len(mem.records) == 1
+    assert EventBus().enable().enabled              # explicit observer
+
+
+def test_bus_stamps_ts_seq_and_counts():
+    bus = EventBus()
+    mem = MemorySink()
+    bus.add_sink(mem)
+    t0 = time.time()
+    bus.emit(TrialDispatched(trial_id="a", worker="w", epochs=3))
+    bus.emit(TrialCompleted(trial_id="a", worker="w", score=0.5))
+    bus.emit(TrialDispatched(trial_id="b", worker="w"))
+    a, done, b = mem.records
+    assert a["seq"] == 1 and done["seq"] == 2 and b["seq"] == 3
+    assert a["ts"] >= t0 and a["kind"] == "trial_dispatched"
+    assert a["epochs"] == 3
+    assert bus.counters == {"trial_dispatched": 2, "trial_completed": 1}
+    # an explicit ts (the engine's simulated clock) is honored verbatim
+    bus.emit(EpochCompleted(trial_id="a", worker="w", at_s=12.5), ts=99.0)
+    assert mem.records[-1]["ts"] == 99.0 and mem.records[-1]["at_s"] == 12.5
+
+
+def test_event_roundtrip_and_unknown_kind():
+    bus = EventBus()
+    mem = MemorySink()
+    bus.add_sink(mem)
+    bus.emit(WorkerRetired(worker="tcp://h:1", reason="worker_lost",
+                           inflight=2))
+    ts, seq, ev = event_from_dict(mem.records[0])
+    assert isinstance(ev, WorkerRetired) and seq == 1 and ts > 0
+    assert ev.reason == "worker_lost" and ev.inflight == 2
+    with pytest.raises(ValueError, match="unknown event kind"):
+        event_from_dict({"kind": "from_the_future"})
+    assert set(EVENT_TYPES) == {
+        "trial_dispatched", "trial_completed", "epoch_completed",
+        "worker_joined", "worker_retired", "heartbeat_missed", "resharded",
+        "store_refit"}
+    assert all(issubclass(c, Event) for c in EVENT_TYPES.values())
+
+
+def test_bus_ring_tail_and_failing_sink_is_dropped():
+    bus = EventBus(capacity=4)
+    bad_calls = []
+
+    def bad_sink(rec):
+        bad_calls.append(rec)
+        raise RuntimeError("boom")
+
+    mem = MemorySink()
+    bus.add_sink(bad_sink)
+    bus.add_sink(mem)
+    for i in range(6):
+        bus.emit(TrialDispatched(trial_id=f"t{i}", worker="w"))
+    # one failure evicts the sink; the healthy one saw everything
+    assert len(bad_calls) == 1 and len(mem.records) == 6
+    # the ring holds the last `capacity` records; cursors advance past them
+    assert [r["seq"] for r in bus.events_since(0)] == [3, 4, 5, 6]
+    assert [r["seq"] for r in bus.events_since(5)] == [6]
+    assert bus.events("trial_dispatched")[-1]["trial_id"] == "t5"
+
+
+def test_default_bus_swap_is_scoped():
+    fresh = EventBus()
+    prev = set_bus(fresh)
+    try:
+        assert get_bus() is fresh
+    finally:
+        set_bus(prev)
+    assert get_bus() is prev
+
+
+def test_worker_label_precedence():
+    assert worker_label(types.SimpleNamespace(address=("10.0.0.1", 7078))) \
+        == "tcp://10.0.0.1:7078"
+    assert worker_label(types.SimpleNamespace(address=None, tag="sim#1",
+                                              name="x")) == "sim#1"
+    assert worker_label(types.SimpleNamespace(name="w2")) == "w2"
+    anon = types.SimpleNamespace(kind="inproc")
+    assert worker_label(anon).startswith("inproc:")
+
+
+# ---------------------------------------------------------------- sinks
+
+def test_jsonl_sink_roundtrip_and_torn_tail(tmp_path):
+    path = str(tmp_path / "trace.jsonl")
+    bus = EventBus()
+    sink = attach_trace(bus, path)
+    bus.emit(TrialDispatched(trial_id="a", worker="w"))
+    bus.emit(StoreRefit(version=3, n_entries=7))
+    sink.close()
+    recs = read_trace(path)
+    assert [r["kind"] for r in recs] == ["trial_dispatched", "store_refit"]
+    assert read_trace(path, kind="store_refit")[0]["n_entries"] == 7
+    # a torn final line (crash mid-append) is dropped silently
+    with open(path, "a") as f:
+        f.write('{"kind": "trial_co')
+    assert len(read_trace(path)) == 2
+    # an earlier malformed line is corruption and raises
+    with open(path, "w") as f:
+        f.write('not json\n{"kind": "store_refit", "version": 1}\n')
+    with pytest.raises(ValueError):
+        read_trace(path)
+
+
+def test_metrics_store_sink_bridges_events(tmp_path):
+    from repro.core.store import MetricsStore
+    bus = EventBus()
+    with MetricsStore(str(tmp_path / "ms")) as store:
+        bus.add_sink(MetricsStoreSink(store))
+        bus.emit(WorkerRetired(worker="tcp://h:1", reason="heartbeat"))
+        bus.emit(TrialDispatched(trial_id="t0", worker="tcp://h:2"))
+        store.flush()
+        rows = store.query("events", tags={"kind": "worker_retired"})
+        assert len(rows) == 1
+        assert rows[0]["tags"]["worker"] == "tcp://h:1"
+        assert rows[0]["fields"]["reason"] == "heartbeat"
+        assert store.query("events", tags={"trial_id": "t0"})
+
+
+# -------------------------------------------------- the metrics endpoint
+
+def test_render_metrics_and_obs_endpoint():
+    from repro.obs.metrics import ObsClient, render_metrics, serve_obs
+    bus = EventBus().enable()
+    bus.emit(WorkerJoined(worker="a"))
+    bus.emit(WorkerJoined(worker="b"))
+    bus.emit(WorkerRetired(worker="a", reason="leave"))
+    bus.emit(TrialDispatched(trial_id="t", worker="b"))
+    bus.emit(HeartbeatMissed(worker="a", age_s=3.0, ttl_s=2.0))
+    text = render_metrics(bus)
+    assert "repro_events_total 5" in text
+    assert 'repro_events{kind="worker_joined"} 2' in text
+    assert "repro_workers_live 1" in text          # 2 joined - 1 retired
+    assert "repro_trials_inflight 1" in text
+    assert "repro_heartbeats_missed 1" in text
+    server = serve_obs(bus, port=0, background=True)
+    try:
+        client = ObsClient(f"tcp://127.0.0.1:{server.server_address[1]}")
+        assert client.metrics() == text
+        assert client.counters()["trial_dispatched"] == 1
+        events = client.tail()
+        assert [e["kind"] for e in events][:2] == ["worker_joined"] * 2
+        assert client.cursor == 5
+        assert client.tail() == []                  # cursor advanced
+        bus.emit(TrialCompleted(trial_id="t", worker="b", score=1.0))
+        assert [e["kind"] for e in client.tail()] == ["trial_completed"]
+        client.close()
+    finally:
+        server.shutdown()
+
+
+def test_obs_cli_chaos_list_and_unknown(capsys):
+    from repro.obs.__main__ import main
+    assert main(["chaos", "--list"]) == 0
+    out = capsys.readouterr().out
+    assert "sigkill_worker" in out and "slow_node" in out
+    assert main(["chaos", "no_such_scenario"]) == 2
+
+
+# ------------------------------------------------------- pool emissions
+
+class _FakeWorker:
+    """Minimal scriptable Worker for pool-emission tests."""
+
+    kind = "fake"
+
+    def __init__(self, name, fail_with=None):
+        from repro.obs.events import get_bus
+        self.name = name
+        self.fail_with = fail_with
+        self.runner, self.workload = None, None
+        self.bus = get_bus()
+        self._pending = []
+
+    def capabilities(self):
+        from repro.core.worker import WorkerCapabilities
+        return WorkerCapabilities(kind=self.kind, capacity=2,
+                                  speed_factor=1.5)
+
+    @property
+    def outstanding(self):
+        return len(self._pending)
+
+    def bind(self, runner, workload):
+        self.runner, self.workload = runner, workload
+
+    def submit(self, trial, epochs=None):
+        self._pending.append(trial)
+
+    def poll(self, timeout=0.0):
+        from repro.core.worker import TrialCompletion
+        if not self._pending:
+            return []
+        if self.fail_with is not None:
+            trial = self._pending.pop(0)
+            return [TrialCompletion(trial.trial_id, float("nan"),
+                                    error=self.fail_with)]
+        if timeout <= 0:
+            return []
+        trial = self._pending.pop(0)
+        return [TrialCompletion(trial.trial_id, 1.0)]
+
+    def clone(self, dst, src):
+        pass
+
+    def close(self):
+        pass
+
+
+class _P:
+    def __init__(self, tid, epochs=1):
+        self.trial_id, self.clone_from = tid, None
+        self.hparams, self.epochs = {}, epochs
+
+
+def test_pool_emits_join_dispatch_complete():
+    from repro.cluster.sim import SimBackend
+    from repro.core import TuneV1
+    from repro.core.worker import WorkerPool
+    bus = EventBus()
+    mem = MemorySink()
+    bus.add_sink(mem)
+    pool = WorkerPool([], allow_empty=True, sticky=True)
+    pool.bus = bus
+    w = _FakeWorker("w0")
+    pool.add_worker(w)
+    assert w.bus is bus                             # propagated on join
+    joined = mem.of_kind("worker_joined")
+    assert len(joined) == 1
+    assert joined[0]["worker"] == "w0"              # worker_label: .name
+    assert joined[0]["worker_kind"] == "fake"
+    assert joined[0]["capacity"] == 2
+    assert joined[0]["speed_factor"] == 1.5
+    out = pool.run_wave(TuneV1(SimBackend()), "lenet-mnist",
+                        [_P("t0", epochs=2)])
+    assert len(out) == 1
+    d = mem.of_kind("trial_dispatched")
+    assert [(r["trial_id"], r["worker"], r["epochs"]) for r in d] == \
+        [("t0", "w0", 2)]
+    c = mem.of_kind("trial_completed")
+    assert [(r["trial_id"], r["score"], r["error"]) for r in c] == \
+        [("t0", 1.0, None)]
+
+
+def test_pool_emits_retire_and_reshard():
+    from repro.core.worker import WorkerPool
+    bus = EventBus()
+    mem = MemorySink()
+    bus.add_sink(mem)
+    a, b = _FakeWorker("a"), _FakeWorker("b")
+    pool = WorkerPool([a, b], sticky=True)
+    pool.bus = bus
+    pool._dispatch(_P("t0"), 1)
+    pool._dispatch(_P("t1"), 1)
+    victim = pool._inflight_worker["t0"]
+    survivor = b if victim is a else a
+    pool.remove_worker(victim, reason="worker_lost")
+    retired = mem.of_kind("worker_retired")
+    assert len(retired) == 1
+    assert retired[0]["worker"] == victim.name
+    assert retired[0]["reason"] == "worker_lost"
+    assert retired[0]["inflight"] == 1              # t0 was in flight on it
+    moved = mem.of_kind("resharded")
+    assert [(r["trial_id"], r["src"], r["dst"]) for r in moved] == \
+        [("t0", victim.name, survivor.name)]
+    # failed-but-not-lost completions carry the error string
+    bad = RuntimeError("exploded")
+    failer = _FakeWorker("f", fail_with=bad)
+    pool2 = WorkerPool([failer], sticky=True)
+    pool2.bus = bus
+    pool2._dispatch(_P("tx"), 1)
+    with pytest.raises(RuntimeError, match="exploded"):
+        pool2._poll_once(block=True)
+    errs = [r for r in mem.of_kind("trial_completed") if r["error"]]
+    assert errs and errs[-1]["trial_id"] == "tx"
+    assert "exploded" in errs[-1]["error"]
+
+
+def test_executor_attach_bus_propagates():
+    from repro.cluster.executor import ClusterTrialExecutor
+    from repro.core.worker import WorkerPoolExecutor
+    bus = EventBus()
+    ex = WorkerPoolExecutor([_FakeWorker("w")])
+    ex.attach_bus(bus)
+    assert ex.pool.bus is bus and ex.workers[0].bus is bus
+    ex2 = ClusterTrialExecutor(n_nodes=2)
+    ex2.attach_bus(bus)
+    assert ex2.pool.bus is bus and ex2.worker.bus is bus
+    assert ex2.engine.bus is bus
+    ex2.close()
+
+
+# ----------------------------------------------------- engine emissions
+
+def test_engine_emits_sim_time_events():
+    from repro.cluster.engine import ClusterConfig, EventEngine, NodeSpec
+    bus = EventBus()
+    mem = MemorySink()
+    bus.add_sink(mem)
+    eng = EventEngine(ClusterConfig(n_nodes=1, seed=0))
+    eng.bus = bus
+    t = eng.submit("t", iter([10.0] * 3))
+    eng.add_node(NodeSpec(speed=2.0, capacity=2), at=5.0)
+    eng.retire_node(0, at=15.0)                     # mid-epoch 2: reshard
+    eng.run()
+    assert t.n_preemptions == 1
+    joined = mem.of_kind("worker_joined")
+    assert [(r["worker"], r["worker_kind"], r["at_s"]) for r in joined] == \
+        [("node:1", "sim", 5.0)]
+    assert joined[0]["speed_factor"] == 2.0 and joined[0]["capacity"] == 2
+    retired = mem.of_kind("worker_retired")
+    assert [(r["worker"], r["reason"], r["at_s"]) for r in retired] == \
+        [("node:0", "retired", 15.0)]
+    assert retired[0]["inflight"] == 1              # t was running on it
+    moved = mem.of_kind("resharded")
+    assert [(r["trial_id"], r["src"], r["at_s"]) for r in moved] == \
+        [("t", "node:0", 20.0)]                     # the epoch-2 boundary
+    # dispatches and epochs carry simulated time, not wall clock
+    d = mem.of_kind("trial_dispatched")
+    assert [(r["worker"], r["at_s"]) for r in d] == \
+        [("node:0", 0.0), ("node:1", 20.0)]
+    epochs = mem.of_kind("epoch_completed")
+    assert len(epochs) == t.n_epochs == 3
+    assert all(r["worker"].startswith("node:") for r in epochs)
+    assert epochs[0]["at_s"] == 10.0                # sim completion times
+    assert [r["epoch"] for r in epochs] == [0, 1, 2]
+
+
+# ------------------------------------- coordinator: events + TTL edges
+
+def _coord(ttl=10.0):
+    from repro.service import CoordinatorService
+    clock = [0.0]
+    svc = CoordinatorService(ttl_s=ttl, clock=lambda: clock[0])
+    bus = EventBus()
+    mem = MemorySink()
+    bus.add_sink(mem)
+    svc.bus = bus
+
+    def call(op, **kw):
+        resp = svc.handle({"op": op, **kw})
+        assert resp.get("ok"), resp
+        return resp
+
+    return svc, clock, mem, call
+
+
+def test_coordinator_emits_join_leave_and_heartbeat_events():
+    svc, clock, mem, call = _coord(ttl=10.0)
+    a = call("register", address="tcp://10.0.0.1:7078",
+             speed_factor=2.0, capacity=3)["worker_id"]
+    joined = mem.of_kind("worker_joined")
+    assert joined[0]["worker"] == "tcp://10.0.0.1:7078"
+    assert joined[0]["worker_kind"] == "roster"
+    assert joined[0]["capacity"] == 3 and joined[0]["speed_factor"] == 2.0
+    call("leave", worker_id=a)
+    retired = mem.of_kind("worker_retired")
+    assert [(r["worker"], r["reason"]) for r in retired] == \
+        [("tcp://10.0.0.1:7078", "leave")]
+    # leaving twice emits nothing more (the entry is already gone)
+    call("leave", worker_id=a)
+    assert len(mem.of_kind("worker_retired")) == 1
+    # silence past the TTL: HeartbeatMissed names the killing age
+    call("register", address="tcp://10.0.0.2:7078")
+    clock[0] = 11.0
+    call("version")
+    missed = mem.of_kind("heartbeat_missed")
+    assert len(missed) == 1
+    assert missed[0]["worker"] == "tcp://10.0.0.2:7078"
+    assert missed[0]["age_s"] == 11.0 and missed[0]["ttl_s"] == 10.0
+    pruned = mem.of_kind("worker_retired")[-1]
+    assert pruned["worker"] == "tcp://10.0.0.2:7078"
+    assert pruned["reason"] == "heartbeat"
+
+
+def test_heartbeat_exactly_at_ttl_survives():
+    """The prune cutoff is strict (<): a worker whose last heartbeat is
+    exactly ttl_s old is still on the roster — at-the-boundary workers are
+    kept, not flapped."""
+    svc, clock, mem, call = _coord(ttl=10.0)
+    a = call("register", address="tcp://10.0.0.1:7078")["worker_id"]
+    clock[0] = 10.0                                 # age == ttl exactly
+    roster = call("roster")
+    assert [w["worker_id"] for w in roster["workers"]] == [a]
+    assert call("heartbeat", worker_id=a)           # still known
+    assert mem.of_kind("heartbeat_missed") == []
+    clock[0] = 20.0 + 1e-9                          # now strictly past it
+    assert call("roster")["workers"] == []
+    assert len(mem.of_kind("heartbeat_missed")) == 1
+
+
+def test_reregistration_of_pruned_worker_same_address():
+    """A pruned worker that comes back (same address) re-registers cleanly:
+    new worker id, exactly one roster slot, no ghost duplicate."""
+    svc, clock, mem, call = _coord(ttl=10.0)
+    a = call("register", address="tcp://10.0.0.1:7078")["worker_id"]
+    clock[0] = 11.0
+    assert call("roster")["workers"] == []          # pruned
+    assert not svc.handle({"op": "heartbeat", "worker_id": a})["ok"]
+    b = call("register", address="tcp://10.0.0.1:7078")["worker_id"]
+    assert b != a                                   # a fresh identity
+    roster = call("roster")["workers"]
+    assert [w["worker_id"] for w in roster] == [b]
+    assert [w["address"] for w in roster] == ["tcp://10.0.0.1:7078"]
+    # the old id stays dead even though the address is live again
+    assert not svc.handle({"op": "heartbeat", "worker_id": a})["ok"]
+    assert call("heartbeat", worker_id=b)
+    assert len(mem.of_kind("worker_joined")) == 2
+
+
+def test_roster_version_monotonic_across_prune_and_rejoin():
+    svc, clock, mem, call = _coord(ttl=10.0)
+    versions = [call("version")["version"]]
+
+    def bump(op, **kw):
+        call(op, **kw)
+        versions.append(call("version")["version"])
+
+    bump("register", address="tcp://10.0.0.1:7078")
+    bump("register", address="tcp://10.0.0.2:7078")
+    clock[0] = 11.0                                 # both prune
+    versions.append(call("version")["version"])
+    bump("register", address="tcp://10.0.0.1:7078")  # rejoin
+    clock[0] = 22.0                                 # prune again
+    versions.append(call("version")["version"])
+    assert versions == sorted(versions)             # never regresses
+    assert len(set(versions)) == len(versions)      # every change bumps
+
+
+# ----------------------------------------------- store service emission
+
+def test_store_service_emits_refit_events():
+    from repro.service import GroundTruthService
+    svc = GroundTruthService()
+    bus = EventBus()
+    mem = MemorySink()
+    bus.add_sink(mem)
+    svc.bus = bus
+    add = {"op": "add", "profile": [1.0, 2.0], "workload": "w",
+           "sys_config": {"k": 1}, "objective": 0.5}
+    assert svc.handle(add)["ok"]
+    refits = mem.of_kind("store_refit")
+    assert len(refits) == 1 and refits[0]["n_entries"] == 1
+    assert svc.handle({**add, "profile": [3.0, 4.0], "refit": False})["ok"]
+    assert len(mem.of_kind("store_refit")) == 1     # deferred: no event
+    assert svc.handle({"op": "refit"})["ok"]
+    refits = mem.of_kind("store_refit")
+    assert len(refits) == 2
+    assert refits[1]["n_entries"] == 2
+    assert refits[1]["version"] > refits[0]["version"]
+
+
+# ------------------------------- satellite: WorkerLostError enrichment
+
+def test_worker_lost_error_carries_heartbeat_age_and_last_trial():
+    from repro.service import RemoteWorker, WorkerLostError
+    from repro.service.transport import _recv_msg, _send_msg
+    probe = socket.socket()
+    probe.bind(("127.0.0.1", 0))
+    probe.listen(1)
+    port = probe.getsockname()[1]
+
+    def one_hello_then_die():
+        conn, _ = probe.accept()
+        _recv_msg(conn)
+        _send_msg(conn, {"ok": True, "kind": "remote", "capacity": 1})
+        conn.close()
+
+    threading.Thread(target=one_hello_then_die, daemon=True).start()
+    worker = RemoteWorker(f"tcp://127.0.0.1:{port}", runner_spec={})
+    # the hello succeeded, so the client has last-contact history; give it
+    # completed-trial history the way _loop would after an install
+    worker._last_trial, worker._last_epochs = "t7", 3
+    with pytest.raises(WorkerLostError) as ei:
+        worker._request({"op": "run", "workload": "w", "trial_id": "t",
+                         "hparams": {}, "epochs": 1})
+    err = ei.value
+    assert err.age_s is not None and err.age_s >= 0.0
+    assert err.last_trial == "t7" and err.last_epochs == 3
+    msg = str(err)
+    assert f"tcp://127.0.0.1:{port}" in msg
+    assert "last ok" in msg and "last completed trial t7 @3 epochs" in msg
+    probe.close()
+    # with no successful request ever, the enrichment is absent, not fake
+    with pytest.raises(WorkerLostError) as ei2:
+        RemoteWorker(f"tcp://127.0.0.1:{port}", runner_spec={},
+                     connect_timeout=0.2, connect_retries=0)
+    assert ei2.value.age_s is None
+    assert ei2.value.last_trial is None and ei2.value.last_epochs is None
+    assert "last ok" not in str(ei2.value)
+
+
+# ------------------------------ satellite: idempotent MetricsStore flush
+
+def _rows(path):
+    with open(path) as f:
+        return [json.loads(line) for line in f if line.strip()]
+
+
+def test_metrics_store_flush_is_idempotent(tmp_path):
+    from repro.core.store import MetricsStore, _flush_buffers
+    root = str(tmp_path / "ms")
+    ms = MetricsStore(root)
+    ms.write("m", {"v": 1})
+    # overlapping triggers: explicit close, a second close, and the
+    # GC/atexit finalizer path — one row, no matter how many fire
+    ms.flush()
+    ms.close()
+    ms.close()
+    _flush_buffers(ms.root, ms._buffers, ms._lock)
+    assert len(_rows(os.path.join(root, "m.jsonl"))) == 1
+
+
+def test_metrics_store_partial_write_failure_never_duplicates(tmp_path):
+    """Regression: a flush that dies mid-batch (record 2 unserializable)
+    must not leave record 1 in the buffer — the old write-then-clear order
+    re-wrote already-written rows on the next flush trigger."""
+    from repro.core.store import MetricsStore
+    root = str(tmp_path / "ms")
+    ms = MetricsStore(root)
+    ms.write("m", {"v": 1})
+    ms.write("m", {"v": object()})                  # json.dumps will raise
+    with pytest.raises(TypeError):
+        ms.flush()
+    ms.close()                                      # close re-triggers flush
+    rows = _rows(os.path.join(root, "m.jsonl"))
+    assert [r["fields"] for r in rows] == [{"v": 1}]    # once, not twice
+
+
+# ---------------------------------------- satellite: the --trace flag
+
+def _parse(argv):
+    from repro.launch.sysargs import add_executor_args
+    return add_executor_args(argparse.ArgumentParser()).parse_args(argv)
+
+
+def test_trace_flag_rejected_without_a_bus_capable_executor():
+    from repro.launch.sysargs import executor_from_args
+    with pytest.raises(ValueError, match="--trace.*serial"):
+        executor_from_args(_parse(["--trace", "/tmp/t.jsonl"]))
+    with pytest.raises(ValueError, match="--trace.*parallel"):
+        executor_from_args(_parse(["--executor", "parallel",
+                                   "--trace", "/tmp/t.jsonl"]))
+
+
+def test_trace_flag_writes_events_on_a_cluster_run(tmp_path):
+    from repro.api import Experiment
+    from repro.core.job import HPTJob, Param, SearchSpace
+    from repro.launch.sysargs import executor_from_args
+    path = str(tmp_path / "run.jsonl")
+    ex = executor_from_args(_parse(["--executor", "cluster", "--trace",
+                                    path]))
+    space = SearchSpace([
+        Param("batch_size", "choice", choices=(32, 64)),
+        Param("learning_rate", "log", 0.001, 0.1),
+    ])
+    job = HPTJob(workload="lenet-mnist", space=space, max_epochs=3, seed=0)
+    (Experiment(job).with_tuner("v1").with_backend("sim")
+     .with_scheduler("hyperband").run(executor=ex))
+    recs = read_trace(path)
+    kinds = {r["kind"] for r in recs}
+    assert "trial_dispatched" in kinds and "trial_completed" in kinds
+    assert "epoch_completed" in kinds               # engine sim-time events
+    n = len(recs)
+    ex.close()
+    # a second traced run appends to the same file
+    ex2 = executor_from_args(_parse(["--executor", "cluster", "--trace",
+                                     path]))
+    (Experiment(job).with_tuner("v1").with_backend("sim")
+     .with_scheduler("hyperband").run(executor=ex2))
+    assert len(read_trace(path)) > n
+    ex2.close()
+
+
+# ------------------------------------ SLO evaluation (synthetic streams)
+
+def _fake_result(trials, best=0.9):
+    rec = lambda accs: types.SimpleNamespace(     # noqa: E731
+        epochs=[types.SimpleNamespace(accuracy=a) for a in accs])
+    return types.SimpleNamespace(
+        records={tid: rec(accs) for tid, accs in trials.items()},
+        best_score=best)
+
+
+def _mk_records(t_kill):
+    mk = lambda kind, ts, **kw: {"kind": kind, "ts": ts, **kw}  # noqa: E731
+    v, s = "tcp://victim:1", "tcp://survivor:2"
+    return [
+        mk("worker_joined", t_kill - 5.0, worker=v),
+        mk("worker_joined", t_kill - 5.0, worker=s),
+        mk("trial_dispatched", t_kill - 4.0, trial_id="t0", worker=v),
+        mk("trial_dispatched", t_kill - 4.0, trial_id="t1", worker=s),
+        mk("trial_completed", t_kill - 3.0, trial_id="t1", worker=s,
+           error=None),
+        mk("worker_retired", t_kill + 1.5, worker=v, reason="worker_lost"),
+        mk("trial_dispatched", t_kill + 1.6, trial_id="t0", worker=s),
+        mk("trial_completed", t_kill + 2.0, trial_id="t0", worker=s,
+           error=None),
+    ]
+
+
+def test_slo_evaluation_passes_on_a_clean_recovery():
+    from repro.obs.chaos import ChaosScenario, KillWorkers, _evaluate
+    scn = ChaosScenario(name="synthetic", description="", ttl_s=2.0,
+                        fault=KillWorkers(victims=1))
+    t_kill = 1000.0
+    trials = {"t0": [0.5, 0.6], "t1": [0.7]}
+    report = _evaluate(scn, _mk_records(t_kill),
+                       _fake_result(trials), _fake_result(trials),
+                       t_kill, ["tcp://victim:1"], None, EventBus(), 3.0)
+    assert report.passed, report.summary()
+    by_name = {s.name: s for s in report.slos}
+    assert by_name["time_to_retire_s"].value == 1.5
+    assert report.recovery_s == 1.5
+    assert by_name["trials_replaced"].value == report.replaced == 1
+    assert by_name["no_lost_or_repeated_epochs"].ok
+    assert by_name["bit_identical_scores"].ok
+
+
+def test_slo_evaluation_flags_violations():
+    from repro.obs.chaos import ChaosScenario, KillWorkers, _evaluate
+    scn = ChaosScenario(name="synthetic", description="", ttl_s=2.0,
+                        fault=KillWorkers(victims=1))
+    t_kill = 1000.0
+    trials = {"t0": [0.5, 0.6], "t1": [0.7]}
+    v = "tcp://victim:1"
+    # 1) the victim is never retired, and its trial never finishes
+    records = [r for r in _mk_records(t_kill)
+               if not (r["ts"] > t_kill or r["kind"] == "worker_retired")]
+    divergent = _fake_result({"t0": [0.5, 0.99], "t1": [0.7]}, best=0.1)
+    report = _evaluate(scn, records, divergent, _fake_result(trials),
+                       t_kill, [v], None, EventBus(), 3.0)
+    assert not report.passed
+    by_name = {s.name: s for s in report.slos}
+    assert not by_name["time_to_retire_s"].ok
+    assert "never retired" in by_name["time_to_retire_s"].detail
+    assert not by_name["trials_replaced"].ok
+    assert not by_name["no_lost_or_repeated_epochs"].ok   # 0.99 != 0.6
+    assert not by_name["bit_identical_scores"].ok         # 0.1 != 0.9
+    # 2) a retirement past the budget fails the timing SLO alone
+    late = _mk_records(t_kill)
+    late[5] = {**late[5], "ts": t_kill + scn.retire_budget_s() + 1.0}
+    report2 = _evaluate(scn, late, _fake_result(trials),
+                        _fake_result(trials), t_kill, [v], None,
+                        EventBus(), 3.0)
+    assert not {s.name: s for s in report2.slos}["time_to_retire_s"].ok
+    # 3) a heartbeat-missed floor bites when the partition never bit
+    from repro.obs.chaos import PartitionCoordinator, SLOBudget
+    pscn = ChaosScenario(
+        name="part", description="", fault=PartitionCoordinator(),
+        slo=SLOBudget(require_replacement=False, min_heartbeats_missed=1))
+    report3 = _evaluate(pscn, _mk_records(t_kill), _fake_result(trials),
+                        _fake_result(trials), None, [], None,
+                        EventBus(), 3.0)
+    assert not report3.passed
+    assert not {s.name: s for s in report3.slos}["heartbeats_missed"].ok
+    # 4) the slow-node dispatch-share cap
+    sscn = ChaosScenario(
+        name="slow", description="",
+        slo=SLOBudget(require_replacement=False, max_dispatch_share=0.25))
+    slow = "tcp://slow:3"
+    records4 = _mk_records(t_kill) + [
+        {"kind": "trial_dispatched", "ts": t_kill, "trial_id": f"s{i}",
+         "worker": slow} for i in range(3)]
+    report4 = _evaluate(sscn, records4, _fake_result(trials),
+                        _fake_result(trials), None, [], slow,
+                        EventBus(), 3.0)
+    share = {s.name: s for s in report4.slos}["slow_node_dispatch_share"]
+    assert not share.ok                             # 3 of 6 tcp dispatches
+
+
+def test_scenario_pack_shape():
+    from repro.obs.chaos import ChaosScenario
+    from repro.obs.scenarios import SCENARIOS
+    assert {"sigkill_worker", "sigkill_storm", "partition_coordinator",
+            "partition_store", "slow_node"} <= set(SCENARIOS)
+    for name, scn in SCENARIOS.items():
+        assert isinstance(scn, ChaosScenario) and scn.name == name
+        assert scn.description
+        assert scn.retire_budget_s() > 0
+    assert SCENARIOS["sigkill_worker"].n_workers == 2
+    assert SCENARIOS["partition_store"].with_store
+
+
+# ------------------------------------------ live chaos (slow, real procs)
+
+@pytest.mark.slow
+def test_chaos_partition_coordinator_scenario_live():
+    """A refused coordinator mid-run: the pool keeps driving on the roster
+    it has, heartbeats provably miss, and results stay serial-identical."""
+    from repro.obs.chaos import run_scenario
+    from repro.obs.scenarios import SCENARIOS
+
+    report = run_scenario(SCENARIOS["partition_coordinator"])
+    assert report.passed, report.summary()
+    assert report.counters.get("heartbeat_missed", 0) >= 1
+
+
+@pytest.mark.slow
+def test_chaos_trace_artifact_is_readable(tmp_path):
+    """The CI smoke invocation: run sigkill_worker with --trace and check
+    the artifact decodes into typed events end to end."""
+    from repro.obs.chaos import run_scenario
+    from repro.obs.scenarios import SCENARIOS
+
+    path = str(tmp_path / "chaos.jsonl")
+    report = run_scenario(SCENARIOS["sigkill_worker"], trace_path=path)
+    assert report.passed, report.summary()
+    recs = read_trace(path)
+    assert len(recs) == report.n_events
+    typed = [event_from_dict(r)[2] for r in recs]
+    kinds = {e.kind for e in typed}
+    assert {"worker_joined", "trial_dispatched", "trial_completed",
+            "worker_retired", "resharded", "epoch_completed"} <= kinds
+    lost = [e for e in typed if isinstance(e, WorkerRetired)
+            and e.reason in ("worker_lost", "roster")]
+    assert lost and not math.isnan(report.wall_s)
