@@ -1,0 +1,120 @@
+"""Dispatch-overhead microbenchmark: µs per trial action over the worker
+wire — JSON vs negotiated binary codec, one request per trial vs batched
+``run_many`` — the fixed cost every real trial pays before any training
+happens.
+
+The server is a canned-response trial service behind the real
+``JsonRPCServer`` (selector loop + handler pool) and the real
+``SocketTransport`` framing, so the numbers isolate codec + framing +
+server turnaround from backend simulation time. Payloads mimic the real
+protocol's shapes (hparams dict out, record-with-epochs back).
+
+Run directly for the full version:  PYTHONPATH=src python -m benchmarks.dispatch
+"""
+from __future__ import annotations
+
+import time
+
+from repro.service import JsonRPCServer, SocketTransport
+from repro.service.codec import best_binary_codec
+
+
+def _canned_record(trial_id: str, epochs: int = 5) -> dict:
+    return {
+        "trial_id": trial_id,
+        "workload": "lenet-mnist",
+        "hparams": {"batch_size": 256, "learning_rate": 0.0125},
+        "epochs": [{"epoch": e, "accuracy": 0.62 + 0.04 * e,
+                    "loss": 1.9 / (e + 1), "duration_s": 11.372 + 0.01 * e}
+                   for e in range(epochs)],
+        "sys_history": [[e, {"microbatches": 4, "remat": "block",
+                             "precision": "bf16"}] for e in range(epochs)],
+        "gt_hit": False,
+        "probe_epochs": 2,
+    }
+
+
+class _CannedTrialService:
+    """The worker protocol's request/response shapes with zero backend
+    work: what remains is exactly the dispatch overhead under test."""
+
+    def handle(self, req: dict) -> dict:
+        op = req.get("op")
+        if op == "run":
+            return {"ok": True,
+                    "record": _canned_record(str(req.get("trial_id")))}
+        if op == "run_many":
+            return {"ok": True, "results": [
+                {"ok": True, "record": _canned_record(str(t.get("trial_id")))}
+                for t in req.get("trials", [])]}
+        return {"ok": False, "error": f"unknown op {op!r}"}
+
+
+def _run_request(trial_id: str) -> dict:
+    return {"op": "run", "workload": "lenet-mnist", "trial_id": trial_id,
+            "hparams": {"batch_size": 256, "learning_rate": 0.0125},
+            "epochs": 5}
+
+
+def _measure_single(addr, wire: str, n: int) -> float:
+    """µs per trial action, one round-trip per trial."""
+    t = SocketTransport(*addr, wire=wire)
+    t.request(_run_request("warmup"))            # connection + codec settled
+    t0 = time.perf_counter()
+    for i in range(n):
+        resp = t.request(_run_request(f"t{i}"))
+        assert resp.get("ok"), resp
+    dt = time.perf_counter() - t0
+    t.close()
+    return dt * 1e6 / n
+
+
+def _measure_batched(addr, wire: str, n: int, batch: int) -> float:
+    """µs per trial action, one ``run_many`` round-trip per wave."""
+    t = SocketTransport(*addr, wire=wire)
+    t.request(_run_request("warmup"))
+    waves, count = [], 0
+    while count < n:
+        size = min(batch, n - count)
+        waves.append([{"trial_id": f"b{count + j}",
+                       "hparams": {"batch_size": 256,
+                                   "learning_rate": 0.0125},
+                       "epochs": 5} for j in range(size)])
+        count += size
+    t0 = time.perf_counter()
+    for trials in waves:
+        resp = t.request({"op": "run_many", "workload": "lenet-mnist",
+                          "trials": trials})
+        assert resp.get("ok") and len(resp["results"]) == len(trials), resp
+    dt = time.perf_counter() - t0
+    t.close()
+    return dt * 1e6 / n
+
+
+def run(n_actions: int = 2000, batch: int = 32, quick: bool = True) -> dict:
+    server = JsonRPCServer(("127.0.0.1", 0), _CannedTrialService().handle)
+    import threading
+    threading.Thread(target=server.serve_forever, daemon=True).start()
+    addr = ("127.0.0.1", server.server_address[1])
+    binary = best_binary_codec().name
+    try:
+        out = {
+            "n_actions": n_actions, "batch": batch,
+            "binary_codec": binary,
+            "us_json_single": _measure_single(addr, "json", n_actions),
+            "us_binary_single": _measure_single(addr, binary, n_actions),
+            "us_json_batched": _measure_batched(addr, "json", n_actions,
+                                                batch),
+            "us_binary_batched": _measure_batched(addr, binary, n_actions,
+                                                  batch),
+        }
+    finally:
+        server.shutdown()
+    out["batch_speedup"] = out["us_json_single"] / out["us_binary_batched"]
+    return out
+
+
+if __name__ == "__main__":
+    res = run(n_actions=20000, batch=64, quick=False)
+    for k, v in res.items():
+        print(f"{k}: {v:.2f}" if isinstance(v, float) else f"{k}: {v}")

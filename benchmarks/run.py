@@ -137,14 +137,31 @@ def bench_elastic():
 
 
 def bench_store_service():
-    """Shared-store client cache: hot lookups stay local, socket agrees."""
+    """Shared-store client cache: hot lookups stay local, socket agrees.
+    The headline is the wave-batched ``lookup_many`` path; the scalar
+    (one-at-a-time, ping-free) rate rides along."""
     from benchmarks import store_service
     out = store_service.run(n_lookups=500, quick=True)
     if not out["socket_agrees"]:
         raise RuntimeError("socket client diverged from in-proc client")
     return (f"cache_speedup={out['cache_speedup']:.1f}x;"
             f"hit_rate={out['hit_rate']:.2f};"
-            f"cached_klookups_per_s={out['cached_lookups_per_s']/1e3:.1f}")
+            f"cached_klookups_per_s={out['cached_lookups_per_s']/1e3:.1f};"
+            f"scalar_klookups_per_s={out['scalar_lookups_per_s']/1e3:.1f}")
+
+
+def bench_dispatch():
+    """Dispatch overhead: µs per trial action over the worker wire (real
+    framing + selector server, canned trial service), JSON vs binary,
+    single vs batched run_many."""
+    from benchmarks import dispatch
+    out = dispatch.run(n_actions=2000, batch=32, quick=True)
+    return (f"us_json_single={out['us_json_single']:.1f};"
+            f"us_binary_single={out['us_binary_single']:.1f};"
+            f"us_json_batched={out['us_json_batched']:.1f};"
+            f"us_binary_batched={out['us_binary_batched']:.1f};"
+            f"batch_speedup={out['batch_speedup']:.1f}x;"
+            f"codec={out['binary_codec']}")
 
 
 def bench_chaos():
@@ -300,6 +317,7 @@ def _run_all() -> None:
     _timed("async_vs_barrier", bench_async_vs_barrier)
     _timed("elastic", bench_elastic)
     _timed("store_service", bench_store_service)
+    _timed("dispatch", bench_dispatch)
     _timed("chaos", bench_chaos)
     _timed("fig1_tuning_cost", bench_fig1_tuning_cost)
     _timed("fig2_profiling_stability", bench_fig2_profiling_stability)

@@ -109,8 +109,23 @@ class Worker:
                epochs: Optional[int] = None) -> None:
         raise NotImplementedError
 
+    def submit_many(self, batch: Sequence[
+            Tuple[TrialProposal, Optional[int]]]) -> None:
+        """Accept a wave's worth of proposals at once. The default just
+        loops ``submit``; workers with a wire between them and the trials
+        (``RemoteWorker``) override this to pay one round-trip for the
+        whole batch."""
+        for trial, epochs in batch:
+            self.submit(trial, epochs)
+
     def poll(self, timeout: float = 0.0) -> List[TrialCompletion]:
         return []
+
+    def poll_many(self, timeout: float = 0.0) -> List[TrialCompletion]:
+        """Drain every ready completion. ``poll`` already returns all
+        completions since the last call, so the default is an alias; it
+        exists on the protocol so batched callers don't assume that."""
+        return self.poll(timeout)
 
     def close(self) -> None:
         pass
@@ -410,8 +425,7 @@ class WorkerPool:
         self.bind(runner, workload)
         self._maintain()                # pick up joins/leaves between waves
         self._apply_wave_clones(proposals)
-        for p in proposals:
-            self._dispatch(p, p.epochs)
+        self._dispatch_wave([(p, p.epochs) for p in proposals])
         want = {p.trial_id for p in proposals}
         done: Dict[str, TrialCompletion] = {}
         while want - done.keys():
@@ -431,9 +445,8 @@ class WorkerPool:
             if wave:
                 self._maintain()
                 self._apply_wave_clones(wave)
-                for p in wave:
-                    self._dispatch(p, p.epochs)
-                    outstanding.add(p.trial_id)
+                self._dispatch_wave([(p, p.epochs) for p in wave])
+                outstanding.update(p.trial_id for p in wave)
                 continue
             if not outstanding:
                 break
@@ -460,6 +473,10 @@ class WorkerPool:
             return
         w = self.place(p)
         w.submit(p, epochs)
+        self._record_dispatch(w, p, epochs)
+
+    def _record_dispatch(self, w: Worker, p: TrialProposal,
+                         epochs: int) -> None:
         self._inflight[p.trial_id] = (p, epochs)
         self._inflight_worker[p.trial_id] = w
         self.dispatched[id(w)] = self.dispatched.get(id(w), 0) + 1
@@ -468,6 +485,43 @@ class WorkerPool:
             self.bus.emit(TrialDispatched(trial_id=p.trial_id,
                                           worker=worker_label(w),
                                           epochs=epochs))
+
+    def _dispatch_wave(self, proposals: Sequence[
+            Tuple[TrialProposal, Optional[int]]]) -> None:
+        """Dispatch a wave with one ``submit_many`` per worker.
+
+        Placement happens sequentially *before* any submit, with an
+        ``extra`` pending count standing in for the per-submit
+        ``outstanding`` increments the one-at-a-time path would have
+        observed — so which worker gets which trial is exactly what
+        ``_dispatch`` in a loop would have chosen (sticky placement
+        already accounts for earlier picks through ``_bindings``)."""
+        extra: Dict[int, int] = {}
+        batches: Dict[int, Tuple[Worker,
+                                 List[Tuple[TrialProposal, int]]]] = {}
+        for p, epochs in proposals:
+            epochs = p.epochs if epochs is None else epochs
+            if not self.workers:
+                self._backlog.append((p, epochs))
+                continue
+            if self.sticky:
+                w = self.place(p)       # bindings track in-wave picks
+            else:
+                w = min(self.workers,
+                        key=lambda w_: (w_.outstanding +
+                                        extra.get(id(w_), 0)) /
+                        self._weight(w_))
+            extra[id(w)] = extra.get(id(w), 0) + 1
+            batches.setdefault(id(w), (w, []))[1].append((p, epochs))
+        for w, items in batches.values():   # insertion = first-pick order
+            submit_many = getattr(w, "submit_many", None)
+            if submit_many is not None:
+                submit_many(items)
+            else:                   # duck-typed Worker without the batch op
+                for p, epochs in items:
+                    w.submit(p, epochs=epochs)
+            for p, epochs in items:
+                self._record_dispatch(w, p, epochs)
 
     def _apply_wave_clones(self, proposals: Sequence[TrialProposal]) -> None:
         # clone sources must be wave-boundary snapshots, so apply for the

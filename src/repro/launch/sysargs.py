@@ -60,7 +60,24 @@ def add_executor_args(ap: argparse.ArgumentParser, executor: str = "serial",
                          "to PATH as JSONL; requires an executor that can "
                          "attach an event bus (cluster / sharded / workers / "
                          "--coordinator)")
+    _add_wire_arg(ap)
     return ap
+
+
+def _add_wire_arg(ap: argparse.ArgumentParser) -> None:
+    """``--wire``: payload codec for every TCP connection this process
+    dials (workers, coordinator, store). Shared between the executor and
+    store flag groups, so adding is idempotent."""
+    if any(action.dest == "wire" for action in ap._actions):
+        return
+    ap.add_argument("--wire", default="auto",
+                    choices=["auto", "json", "binary", "msgpack", "tlv"],
+                    help="wire codec for TCP connections: 'auto' (default) "
+                         "negotiates the best binary codec and falls back "
+                         "to JSON on old peers; 'json' forces the readable "
+                         "legacy encoding (debugging with tcpdump/netcat); "
+                         "'binary'/'msgpack'/'tlv' demand that codec and "
+                         "fail if the peer can't speak it")
 
 
 def executor_from_args(args: argparse.Namespace):
@@ -122,7 +139,8 @@ def executor_from_args(args: argparse.Namespace):
         # the runner spec (tuner/backend/store recipe for the remote ends)
         # is filled in by Experiment.run via configure_runner_spec
         ex = registry.make_executor("workers", workers=workers,
-                                    coordinator=coordinator)
+                                    coordinator=coordinator,
+                                    wire=getattr(args, "wire", "auto"))
     else:
         ex = registry.make_executor(name)
     return _maybe_attach_trace(ex, args, name)
@@ -163,6 +181,7 @@ def add_store_args(ap: argparse.ArgumentParser,
     ap.add_argument("--store-reset", action="store_true",
                     help="escape hatch for a corrupt/unwanted journal: "
                          "delete it and start from an empty store")
+    _add_wire_arg(ap)
     return ap
 
 
@@ -179,7 +198,8 @@ def store_client_from_args(args: argparse.Namespace):
                 "--reset`")
         from repro.service.dispatch import parse_tcp_address
         host, port = parse_tcp_address(spec)
-        return StoreClient(SocketTransport(host, port))
+        return StoreClient(SocketTransport(
+            host, port, wire=getattr(args, "wire", "auto")))
     if spec != "inproc":
         raise ValueError(f"--store {spec!r}: expected 'inproc' or "
                          "tcp://HOST:PORT")

@@ -47,9 +47,9 @@ from typing import Any, Dict, List, Optional, Tuple
 from repro.obs.events import EventBus, worker_label  # noqa: F401
 from repro.obs.sinks import JsonlSink, MemorySink
 
-__all__ = ["KillWorkers", "PartitionCoordinator", "PartitionStore",
-           "SlowWorker", "SLOBudget", "ChaosScenario", "SLOResult",
-           "ChaosReport", "ChaosProxy", "run_scenario"]
+__all__ = ["KillWorkers", "PartitionWorker", "PartitionCoordinator",
+           "PartitionStore", "SlowWorker", "SLOBudget", "ChaosScenario",
+           "SLOResult", "ChaosReport", "ChaosProxy", "run_scenario"]
 
 
 # ---------------------------------------------------------------------------
@@ -62,6 +62,21 @@ class KillWorkers:
     goodbye, no TCP FIN courtesy beyond the kernel's): the crash-failure
     the heartbeat TTL and the transport-death retirement both exist for."""
     victims: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionWorker:
+    """Sever one worker's *dispatch* path mid-run and never heal it while
+    the run lasts: a ``ChaosProxy`` sits between the pool and the worker
+    (the worker announces the proxy's address via ``--advertise-host``/
+    ``--advertise-port``) and flips to ``refuse`` — live connections are
+    closed, new ones reset — while the worker process itself stays alive
+    and heartbeating directly to the coordinator. The roster therefore
+    never prunes the victim; only the transport-death retirement path can
+    save the run, and the gated wave's ``run_many`` batch dies mid-batch
+    (the live connection is severed under it): every member must re-place
+    onto a survivor exactly once (no trial lost, none double-run)."""
+    mode: str = "refuse"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -294,13 +309,30 @@ def _repo_root() -> str:
     return os.path.dirname(os.path.dirname(os.path.dirname(here)))
 
 
+def _reserve_port(host: str = "127.0.0.1") -> int:
+    """Bind-and-release an ephemeral port so a proxy can be built in front
+    of a worker before the worker process exists (small reuse race,
+    acceptable for chaos runs)."""
+    s = socket.socket()
+    s.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+    s.bind((host, 0))
+    port = s.getsockname()[1]
+    s.close()
+    return port
+
+
 class _WorkerProc:
     """One spawned ``python -m repro.worker`` subprocess + its address."""
 
     def __init__(self, announce: str, store: Optional[str] = None,
-                 speed_factor: float = 1.0, timeout: float = 30.0):
-        argv = [sys.executable, "-m", "repro.worker", "--port", "0",
+                 speed_factor: float = 1.0, timeout: float = 30.0,
+                 port: int = 0,
+                 advertise: Optional[Tuple[str, int]] = None):
+        argv = [sys.executable, "-m", "repro.worker", "--port", str(port),
                 "--announce", announce]
+        if advertise is not None:
+            argv += ["--advertise-host", advertise[0],
+                     "--advertise-port", str(advertise[1])]
         if store:
             argv += ["--store", store]
         if speed_factor != 1.0:
@@ -420,7 +452,20 @@ def run_scenario(scenario: ChaosScenario,
                 store_addr = f"tcp://{up[0]}:{up[1]}"
 
         # -- workers -------------------------------------------------------
-        for _ in range(scenario.n_workers):
+        worker_proxy = None
+        worker_proxy_addr = None
+        if isinstance(fault, PartitionWorker):
+            # the pool must dial the proxy, so the victim announces the
+            # proxy's address; the proxy needs its upstream up front, so
+            # reserve the victim's port before the subprocess exists
+            victim_port = _reserve_port()
+            worker_proxy = ChaosProxy(("127.0.0.1", victim_port))
+            proxies.append(worker_proxy)
+            worker_proxy_addr = worker_proxy.tcp
+            procs.append(_WorkerProc(
+                coord_addr, store=store_addr, port=victim_port,
+                advertise=tuple(worker_proxy.address[:2])))
+        for _ in range(scenario.n_workers - len(procs)):
             procs.append(_WorkerProc(coord_addr, store=store_addr))
         slow_addr = None
         if isinstance(fault, SlowWorker):
@@ -471,6 +516,16 @@ def run_scenario(scenario: ChaosScenario,
             for p in procs[:fault.victims]:
                 victims.append(p.address)
                 p.sigkill()
+            sched.gate.set()
+        elif isinstance(fault, PartitionWorker):
+            # sever the victim's live dispatch connection, then release
+            # the gate: the freed wave's run_many batch dies on the dead
+            # path — and the partition never heals, so with the worker
+            # still heartbeating only transport-death retirement can
+            # re-place the batch
+            t_kill = time.time()
+            victims.append(worker_proxy_addr)
+            worker_proxy.set_mode(fault.mode)
             sched.gate.set()
         elif isinstance(fault, (PartitionCoordinator, PartitionStore)):
             proxy = coord_proxy if isinstance(fault, PartitionCoordinator) \

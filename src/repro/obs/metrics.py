@@ -119,10 +119,12 @@ def serve_obs(bus: Optional[EventBus] = None, host: str = "127.0.0.1",
 class ObsClient:
     """Client of an ``ObsServer``: scrape metrics text, tail events."""
 
-    def __init__(self, address: str, timeout: float = 10.0):
+    def __init__(self, address: str, timeout: float = 10.0,
+                 wire: str = "auto"):
         from repro.service.dispatch import parse_tcp_address
         host, port = parse_tcp_address(address)
-        self.transport = SocketTransport(host, port, timeout=timeout)
+        self.transport = SocketTransport(host, port, timeout=timeout,
+                                         wire=wire)
         self.cursor = 0
 
     def _request(self, req: Dict[str, Any]) -> Dict[str, Any]:

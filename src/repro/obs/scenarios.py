@@ -14,8 +14,8 @@ trace, and judge uniformly.
 from __future__ import annotations
 
 from repro.obs.chaos import (ChaosScenario, KillWorkers,
-                             PartitionCoordinator, PartitionStore, SLOBudget,
-                             SlowWorker)
+                             PartitionCoordinator, PartitionStore,
+                             PartitionWorker, SLOBudget, SlowWorker)
 
 __all__ = ["SCENARIOS"]
 
@@ -33,6 +33,22 @@ _PACK = [
                     "absorbs every orphaned trial",
         fault=KillWorkers(victims=2),
         n_workers=3, ttl_s=2.0,
+    ),
+    ChaosScenario(
+        name="partition_worker",
+        description="sever one worker's dispatch path mid-run (a proxy "
+                    "refuses and closes its connections; the worker stays "
+                    "alive and heartbeating, so the roster never prunes "
+                    "it): the next run_many batch dies mid-batch and the "
+                    "transport-death path must retire the worker and "
+                    "re-place every member — no trial lost, none "
+                    "double-run, results bit-identical",
+        fault=PartitionWorker(mode="refuse"),
+        # a TTL far longer than the run proves heartbeat pruning is not
+        # what saved it — only transport-death retirement can, and the
+        # tight retire budget (well under the TTL) pins that down
+        n_workers=2, ttl_s=30.0,
+        slo=SLOBudget(retire_within_s=10.0),
     ),
     ChaosScenario(
         name="partition_coordinator",

@@ -7,9 +7,14 @@ The pieces (see each module's docstring):
     StoreClient           repro.service.transport  GroundTruth-compatible
                                                    client, centroid cache
     InprocTransport       repro.service.transport  zero-copy, same process
-    SocketTransport       repro.service.transport  length-prefixed JSON/TCP
-                                                   (retrying connect)
+    SocketTransport       repro.service.transport  length-prefixed TCP frames
+                                                   (retrying connect; JSON or
+                                                   negotiated binary codec)
+    Codec / get_codec     repro.service.codec      wire payload encodings
+                                                   (json / msgpack / tlv)
     JsonRPCServer         repro.service.transport  shared TCP framing host
+                                                   (selector loop + handler
+                                                   pool; batch-friendly)
     GroundTruthTCPServer  repro.service.transport  store server
     ShardedTrialExecutor  repro.service.sharded    waves across backends
     RemoteWorker          repro.service.dispatch   trial-dispatch client
@@ -27,6 +32,8 @@ Start a trial worker:      python -m repro.worker --port 7078 \
 Point a job at them:       --store tcp://H:7077 --coordinator tcp://H:7079
                            (or a static list: --workers tcp://H:7078)
 """
+from repro.service.codec import (  # noqa: F401
+    Codec, CodecError, available_codecs, get_codec)
 from repro.service.coordinator import (  # noqa: F401
     CoordinatorClient, CoordinatorError, CoordinatorService,
     CoordinatorTCPServer, ElasticWorkerPoolExecutor, WorkerAnnouncer,
@@ -36,14 +43,15 @@ from repro.service.dispatch import (  # noqa: F401
 from repro.service.service import GroundTruthService  # noqa: F401
 from repro.service.sharded import ShardedTrialExecutor  # noqa: F401
 from repro.service.transport import (  # noqa: F401
-    GroundTruthTCPServer, InprocTransport, JsonRPCServer, SocketTransport,
-    StoreClient, StoreError, TransportError, serve)
+    DropConnection, GroundTruthTCPServer, InprocTransport, JsonRPCServer,
+    SocketTransport, StoreClient, StoreError, TransportError, serve)
 from repro.service.worker import (  # noqa: F401
     TrialWorkerService, TrialWorkerTCPServer, serve_worker)
 
 __all__ = ["GroundTruthService", "StoreClient", "StoreError",
-           "TransportError", "InprocTransport", "SocketTransport",
-           "JsonRPCServer", "GroundTruthTCPServer", "serve",
+           "TransportError", "DropConnection", "InprocTransport",
+           "SocketTransport", "Codec", "CodecError", "available_codecs",
+           "get_codec", "JsonRPCServer", "GroundTruthTCPServer", "serve",
            "ShardedTrialExecutor", "RemoteWorker", "WorkerError",
            "WorkerLostError", "TrialWorkerService", "TrialWorkerTCPServer",
            "serve_worker", "CoordinatorService", "CoordinatorTCPServer",

@@ -200,11 +200,12 @@ class CoordinatorClient:
     a coordinator restart costs one failed call, not the session."""
 
     def __init__(self, address: str, connect_timeout: float = 10.0,
-                 request_timeout: float = 10.0):
+                 request_timeout: float = 10.0, wire: str = "auto"):
         host, port = parse_tcp_address(address)
         self.address = (host, port)
         self._connect_timeout = connect_timeout
         self._request_timeout = request_timeout
+        self._wire = wire
         self._transport: Optional[SocketTransport] = None
         self._lock = threading.Lock()
 
@@ -215,7 +216,8 @@ class CoordinatorClient:
                     self._transport = SocketTransport(
                         *self.address, timeout=self._connect_timeout,
                         connect_retries=1,
-                        request_timeout=self._request_timeout)
+                        request_timeout=self._request_timeout,
+                        wire=self._wire)
                 resp = self._transport.request(req)
             except (TransportError, ConnectionError, OSError) as e:
                 self.close()

@@ -3,8 +3,10 @@
 The shared ground-truth store (PR 3) let separate processes *learn*
 together; this module lets them *execute* together. A ``RemoteWorker`` is
 the client side of a small request/response protocol — the same
-length-prefixed JSON framing ``repro.service.transport`` already speaks —
-served by a ``python -m repro.worker`` process (``repro.service.worker``):
+length-prefixed framing ``repro.service.transport`` already speaks (JSON
+by default; connections negotiate the binary codec via the ``_wire``
+hello, see ``repro.service.codec``) — served by a ``python -m
+repro.worker`` process (``repro.service.worker``):
 
     hello                      -> {ok, kind, capacity, defaults}
     bind  {spec}               -> build the worker's runner (tuner/backend/
@@ -13,6 +15,11 @@ served by a ``python -m repro.worker`` process (``repro.service.worker``):
     clone {dst, src}           -> PBT exploit on the worker's runner
     run   {workload, trial_id,
            hparams, epochs}    -> {record}: the completed TrialRecord
+    run_many {workload,
+              trials: [...]}   -> {results}: per-trial {ok, record|error},
+                                  in order — one round-trip per wave
+                                  (``submit_many``; falls back to ``run``
+                                  on workers that predate it)
 
 The worker process owns the trial state (rung resumes and clones must keep
 landing on the same worker — sticky pool placement guarantees that) and
@@ -147,7 +154,7 @@ class RemoteWorker(Worker):
 
     def __init__(self, address: str, runner_spec: Optional[dict] = None,
                  connect_timeout: float = 30.0, connect_retries: int = 5,
-                 retry_backoff_s: float = 0.2):
+                 retry_backoff_s: float = 0.2, wire: str = "auto"):
         super().__init__()
         host, port = parse_tcp_address(address)
         self.address = (host, port)
@@ -167,7 +174,8 @@ class RemoteWorker(Worker):
             self.transport = SocketTransport(
                 host, port, timeout=connect_timeout,
                 connect_retries=connect_retries,
-                retry_backoff_s=retry_backoff_s, request_timeout=None)
+                retry_backoff_s=retry_backoff_s, request_timeout=None,
+                wire=wire)
         except TransportError as e:
             raise WorkerLostError(
                 f"worker tcp://{host}:{port} unreachable: {e}") from e
@@ -183,6 +191,7 @@ class RemoteWorker(Worker):
         self._inbox: "queue.Queue" = queue.Queue()
         self._completions: "queue.Queue[TrialCompletion]" = queue.Queue()
         self._outstanding = 0
+        self._batched_runs = True       # cleared if the peer lacks run_many
         self._thread = threading.Thread(
             target=self._loop, daemon=True,
             name=f"remote-worker-{host}:{port}")
@@ -218,7 +227,17 @@ class RemoteWorker(Worker):
     def submit(self, trial: TrialProposal,
                epochs: Optional[int] = None) -> None:
         self._outstanding += 1
-        self._inbox.put((trial, trial.epochs if epochs is None else epochs))
+        self._inbox.put([(trial, trial.epochs if epochs is None else epochs)])
+
+    def submit_many(self, batch) -> None:
+        """One wire round-trip for the whole batch: the dispatcher thread
+        sends a single ``run_many`` request (falling back to per-trial
+        ``run`` on workers that predate it)."""
+        items = [(t, t.epochs if e is None else e) for t, e in batch]
+        if not items:
+            return
+        self._outstanding += len(items)
+        self._inbox.put(items)
 
     def poll(self, timeout: float = 0.0) -> List[TrialCompletion]:
         out = self._poll_queue(self._completions, timeout)
@@ -267,34 +286,92 @@ class RemoteWorker(Worker):
                 f"{req.get('op')!r}: {resp.get('error', 'unknown error')}")
         return resp
 
-    def _loop(self) -> None:
-        while True:
-            item = self._inbox.get()
-            if item is None:
-                return
-            trial, epochs = item
-            try:
-                resp = self._request({
-                    "op": "run", "workload": self.workload,
-                    "trial_id": trial.trial_id,
-                    "hparams": dict(trial.hparams), "epochs": int(epochs)})
-                rec = record_from_payload(resp["record"])
-                runner = self.runner
-                runner.install_record(rec)
-                self._last_trial = rec.trial_id
-                self._last_epochs = len(rec.epochs)
-                if self.bus.enabled:
-                    # records accumulate epochs across rung resumes:
-                    # emit only what this completion added
-                    label = f"tcp://{self.address[0]}:{self.address[1]}"
-                    seen = self._epochs_seen.get(rec.trial_id, 0)
-                    for i in range(seen, len(rec.epochs)):
-                        self.bus.emit(EpochCompleted(
-                            trial_id=rec.trial_id, worker=label, epoch=i,
-                            duration_s=rec.epochs[i].duration_s))
-                    self._epochs_seen[rec.trial_id] = len(rec.epochs)
+    def _install(self, payload: Dict[str, Any]) -> TrialCompletion:
+        """Adopt one completed record from the wire into the local runner."""
+        rec = record_from_payload(payload)
+        runner = self.runner
+        runner.install_record(rec)
+        self._last_trial = rec.trial_id
+        self._last_epochs = len(rec.epochs)
+        if self.bus.enabled:
+            # records accumulate epochs across rung resumes:
+            # emit only what this completion added
+            label = f"tcp://{self.address[0]}:{self.address[1]}"
+            seen = self._epochs_seen.get(rec.trial_id, 0)
+            for i in range(seen, len(rec.epochs)):
+                self.bus.emit(EpochCompleted(
+                    trial_id=rec.trial_id, worker=label, epoch=i,
+                    duration_s=rec.epochs[i].duration_s))
+            self._epochs_seen[rec.trial_id] = len(rec.epochs)
+        return TrialCompletion(rec.trial_id, rec.score(runner.objective))
+
+    def _run_one(self, trial: TrialProposal, epochs: int) -> None:
+        try:
+            resp = self._request({
+                "op": "run", "workload": self.workload,
+                "trial_id": trial.trial_id,
+                "hparams": dict(trial.hparams), "epochs": int(epochs)})
+            self._completions.put(self._install(resp["record"]))
+        except BaseException as e:                      # noqa: BLE001
+            self._completions.put(TrialCompletion(
+                trial.trial_id, float("nan"), error=e))
+
+    def _run_batch(self, items) -> None:
+        """One ``run_many`` round-trip for the batch. On a transport death
+        mid-batch *every* member reports the same ``WorkerLostError`` —
+        nothing acked means nothing is known to have run, so the pool
+        retires this worker once and re-places every member; trials the
+        server finished before dying re-run deterministically elsewhere
+        (the record installs once, from whichever run was acked)."""
+        try:
+            resp = self._request({
+                "op": "run_many", "workload": self.workload,
+                "trials": [{"trial_id": t.trial_id,
+                            "hparams": dict(t.hparams),
+                            "epochs": int(e)} for t, e in items]})
+        except WorkerLostError as e:
+            for trial, _ in items:
                 self._completions.put(TrialCompletion(
-                    rec.trial_id, rec.score(runner.objective)))
+                    trial.trial_id, float("nan"), error=e))
+            return
+        except WorkerError:
+            # a worker process that predates run_many: replay per trial
+            # over the same healthy connection, and stop batching
+            self._batched_runs = False
+            for trial, epochs in items:
+                self._run_one(trial, epochs)
+            return
+        except BaseException as e:                      # noqa: BLE001
+            for trial, _ in items:
+                self._completions.put(TrialCompletion(
+                    trial.trial_id, float("nan"), error=e))
+            return
+        results = resp.get("results", [])
+        for (trial, _), sub in zip(items, results):
+            try:
+                if not sub.get("ok"):
+                    raise WorkerError(
+                        f"worker {self.address[0]}:{self.address[1]} failed "
+                        f"trial {trial.trial_id}: "
+                        f"{sub.get('error', 'unknown error')}")
+                self._completions.put(self._install(sub["record"]))
             except BaseException as e:                  # noqa: BLE001
                 self._completions.put(TrialCompletion(
                     trial.trial_id, float("nan"), error=e))
+        for trial, _ in items[len(results):]:           # truncated response
+            self._completions.put(TrialCompletion(
+                trial.trial_id, float("nan"),
+                error=WorkerError(
+                    f"worker {self.address[0]}:{self.address[1]} returned "
+                    f"no result for trial {trial.trial_id}")))
+
+    def _loop(self) -> None:
+        while True:
+            items = self._inbox.get()
+            if items is None:
+                return
+            if len(items) == 1 or not self._batched_runs:
+                for trial, epochs in items:
+                    self._run_one(trial, epochs)
+            else:
+                self._run_batch(items)

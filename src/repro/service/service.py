@@ -14,6 +14,17 @@ response carries ``ok`` plus op-specific fields and the current store
     add       -> {ok, version, n_entries}          (journaled, then refit)
     refit     -> {ok, version}
     snapshot  -> {ok, version, n_entries, hits, misses, model}
+    batch     -> {ok, version, results: [...]}     (sub-requests in order;
+                                                    one journal flush)
+
+``batch`` runs a list of sub-requests (any op but ``batch``) atomically
+under the service lock and answers each with its own ``{ok, version,
+...}`` result; a failed sub-request is reported in place and does not
+abort the rest. Journal writes from the batch's ``add``s are pipelined:
+buffered in order and written + flushed **once** before the batch
+returns, so a wave of adds pays one fsync-able flush instead of one per
+entry — and nothing is acknowledged before its journal line is durable,
+preserving the write-ahead recovery story.
 
 ``model`` is the ``CentroidModel`` payload — the pure lookup state —
 which is what lets clients cache it and serve hot-path lookups locally,
@@ -41,7 +52,7 @@ from repro.obs.events import StoreRefit, get_bus
 
 __all__ = ["GroundTruthService"]
 
-_OPS = ("version", "lookup", "add", "refit", "snapshot")
+_OPS = ("version", "lookup", "add", "refit", "snapshot", "batch")
 
 
 class GroundTruthService:
@@ -59,6 +70,8 @@ class GroundTruthService:
         self.bus = get_bus()
         self._lock = threading.RLock()
         self._journal = None
+        self._journal_buffer = None     # non-None inside a batch: lines
+                                        # pipelined into one write + flush
         if path:
             if reset and os.path.exists(path):
                 os.remove(path)
@@ -95,8 +108,12 @@ class GroundTruthService:
                "sys_config": dict(req["sys_config"]),
                "objective": float(req["objective"])}
         if self._journal is not None:           # write-ahead, then apply
-            self._journal.write(json.dumps(rec) + "\n")
-            self._journal.flush()
+            line = json.dumps(rec) + "\n"
+            if self._journal_buffer is not None:  # inside a batch: pipeline
+                self._journal_buffer.append(line)
+            else:
+                self._journal.write(line)
+                self._journal.flush()
         self.store.add(profile, rec["workload"], rec["sys_config"],
                        rec["objective"], refit=bool(req.get("refit", True)))
         if req.get("refit", True) and self.bus.enabled:
@@ -116,6 +133,43 @@ class GroundTruthService:
         return {"n_entries": len(self.store.entries),
                 "hits": self.store.hits, "misses": self.store.misses,
                 "model": None if model is None else model.to_payload()}
+
+    def _op_batch(self, req) -> dict:
+        """Run sub-requests in order with one journal flush at the end.
+
+        Nothing is acknowledged until the whole batch (and its single
+        journal flush) completes, so buffering the write-ahead lines is
+        exactly as safe as flushing each: a crash mid-batch loses only
+        un-acked work and the journal never records it.
+        """
+        if self._journal_buffer is not None:
+            raise ValueError("nested batch requests are not supported")
+        subs = req.get("requests")
+        if not isinstance(subs, list):
+            raise ValueError("batch needs a 'requests' list")
+        results = []
+        self._journal_buffer = []
+        try:
+            for sub in subs:
+                op = sub.get("op") if isinstance(sub, dict) else None
+                try:
+                    if op not in _OPS or op == "batch":
+                        raise ValueError(
+                            f"unknown batch sub-op {op!r}; supported: "
+                            f"{tuple(o for o in _OPS if o != 'batch')}")
+                    out = getattr(self, "_op_" + op)(sub)
+                    out["ok"] = True
+                    out["version"] = self.store.version
+                    results.append(out)
+                except Exception as e:  # noqa: BLE001 — wire boundary
+                    results.append(
+                        {"ok": False, "error": f"{type(e).__name__}: {e}"})
+        finally:
+            lines, self._journal_buffer = self._journal_buffer, None
+            if lines and self._journal is not None:
+                self._journal.write("".join(lines))
+                self._journal.flush()
+        return {"results": results}
 
     # -------------------------------------------------------------- journal
     def _replay(self, path: str):

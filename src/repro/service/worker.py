@@ -108,6 +108,30 @@ class TrialWorkerService:
                                    dict(req["hparams"]), int(req["epochs"]))
             return {"record": record_to_payload(rec)}
 
+    def _op_run_many(self, req) -> Dict[str, Any]:
+        """A wave's worth of trials in one round-trip. Trials run in
+        order under the runner lock; each answers with its own
+        ``{ok, record|error}`` so one bad trial doesn't poison the batch.
+        Nothing is acked until the whole batch returns — a client that
+        loses the connection mid-batch treats every member as unknown and
+        re-places it (deterministic backends make the re-run identical)."""
+        workload = str(req["workload"])
+        results = []
+        with self._lock:
+            runner = self._require_runner()
+            for t in req.get("trials", []):
+                try:
+                    rec = runner.run_trial(workload, str(t["trial_id"]),
+                                           dict(t["hparams"]),
+                                           int(t["epochs"]))
+                    results.append({"ok": True,
+                                    "record": record_to_payload(rec)})
+                except Exception as e:              # noqa: BLE001
+                    results.append(
+                        {"ok": False,
+                         "error": f"{type(e).__name__}: {e}"})
+        return {"results": results}
+
     # ------------------------------------------------------------ internals
     def _require_runner(self):
         if self.runner is None:
@@ -183,6 +207,10 @@ def main(argv=None):
                     help="hostname workers are dialed back on when "
                          "announcing (default: --host; set it when binding "
                          "0.0.0.0)")
+    ap.add_argument("--advertise-port", type=int, default=None,
+                    help="port workers are dialed back on when announcing "
+                         "(default: the bound port; set it when a proxy or "
+                         "port-forward sits in front of this worker)")
     ap.add_argument("--speed-factor", type=float, default=1.0,
                     help="declared relative throughput of this worker "
                          "(1.0 = baseline); elastic pools weight placement "
@@ -207,8 +235,9 @@ def main(argv=None):
     if args.announce:
         from repro.service.coordinator import WorkerAnnouncer
         advertise = args.advertise_host or args.host
+        advertise_port = args.advertise_port or port
         announcer = WorkerAnnouncer(
-            args.announce, address=f"tcp://{advertise}:{port}",
+            args.announce, address=f"tcp://{advertise}:{advertise_port}",
             speed_factor=args.speed_factor)
         worker_id = announcer.start()
         print(f"announced to {args.announce} as {worker_id}", flush=True)

@@ -499,7 +499,10 @@ def test_worker_lost_error_carries_heartbeat_age_and_last_trial():
 
     def one_hello_then_die():
         conn, _ = probe.accept()
-        _recv_msg(conn)
+        req = _recv_msg(conn)
+        if req.get("op") == "_wire":        # decline like a JSON-only peer
+            _send_msg(conn, {"ok": False, "error": "unsupported"})
+            req = _recv_msg(conn)
         _send_msg(conn, {"ok": True, "kind": "remote", "capacity": 1})
         conn.close()
 

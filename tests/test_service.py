@@ -304,7 +304,23 @@ def test_socket_client_sees_other_clients_adds(tcp_server):
     assert reader.lookup(_profile(1))[1] is None    # cold store: miss
     for i in range(3):
         writer.add(_profile(i), "w", {"chips": 4}, 0.8)
-    # version bump invalidates the reader's cached (empty) model
+    # default sync="piggyback": a purely-local reader only learns about
+    # other writers' refits from the version piggybacked on its *next*
+    # RPC of any kind — issue one, then the stale cache self-invalidates
+    reader.version()
+    score, cfg = reader.lookup(_profile(41))
+    assert cfg == {"chips": 4} and score > 0
+
+
+def test_ping_sync_client_sees_other_clients_adds_without_own_traffic():
+    svc = GroundTruthService()
+    reader = StoreClient(InprocTransport(svc), sync="ping")
+    writer = StoreClient(InprocTransport(svc))
+    assert reader.lookup(_profile(1))[1] is None
+    for i in range(3):
+        writer.add(_profile(i), "w", {"chips": 4}, 0.8)
+    # legacy mode pings `version` on every lookup: the refit is visible
+    # immediately, no reader-side RPC needed first
     score, cfg = reader.lookup(_profile(41))
     assert cfg == {"chips": 4} and score > 0
 

@@ -1,0 +1,660 @@
+"""Binary wire protocol + batched dispatch (PR 7 acceptance surface):
+codec round-trips (bit-exact floats, fuzzed nested payloads), framing
+edge cases (torn frames, interleaved partial sends, oversized frames),
+per-connection codec negotiation, the batched store/worker ops, and the
+perf-path invariant — remote == in-process bit-identical under every
+codec and under batched dispatch, including a mid-batch connection drop.
+"""
+import math
+import random
+import socket
+import struct
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.api import Experiment, RemoteWorker, WorkerPoolExecutor
+from repro.core.groundtruth import GroundTruth
+from repro.core.job import HPTJob, Param, SearchSpace
+from repro.service import (DropConnection, GroundTruthService,
+                           GroundTruthTCPServer, InprocTransport,
+                           JsonRPCServer, SocketTransport, StoreClient,
+                           StoreError, TransportError, TrialWorkerService,
+                           available_codecs, get_codec, serve_worker)
+from repro.service.codec import CodecError, best_binary_codec
+from repro.service.transport import (MAX_FRAME_BYTES, _recv_frame, _recv_msg,
+                                     _send_msg)
+
+BINARY = best_binary_codec().name
+
+
+# ---------------------------------------------------------------- codecs
+
+def _float_bits(x):
+    return struct.pack(">d", x)
+
+
+def _assert_same(a, b, path="$"):
+    """Structural equality with float *bit* equality (nan == nan)."""
+    assert type(a) is type(b) or (isinstance(a, (list, tuple)) and
+                                  isinstance(b, (list, tuple))), \
+        f"{path}: {type(a).__name__} != {type(b).__name__}"
+    if isinstance(a, float):
+        assert _float_bits(a) == _float_bits(b), f"{path}: {a!r} != {b!r}"
+    elif isinstance(a, dict):
+        assert sorted(a) == sorted(b), path
+        for k in a:
+            _assert_same(a[k], b[k], f"{path}.{k}")
+    elif isinstance(a, (list, tuple)):
+        assert len(a) == len(b), path
+        for i, (x, y) in enumerate(zip(a, b)):
+            _assert_same(x, y, f"{path}[{i}]")
+    else:
+        assert a == b, f"{path}: {a!r} != {b!r}"
+
+
+def _random_value(rng, depth=0):
+    kinds = ["none", "bool", "int", "float", "str"]
+    if depth < 3:
+        kinds += ["list", "dict"] * 2
+    kind = rng.choice(kinds)
+    if kind == "none":
+        return None
+    if kind == "bool":
+        return rng.random() < 0.5
+    if kind == "int":
+        # int64 range: the msgpack data model's integer bound
+        return rng.randint(-(1 << 62), 1 << 62)
+    if kind == "float":
+        return rng.choice([
+            rng.uniform(-1e300, 1e300), -0.0, 0.0, math.inf, -math.inf,
+            math.nan, 1e-323, 0.1 + 0.2])
+    if kind == "str":
+        return "".join(rng.choice("abc λμ 🔥 \n\"\\0") for _ in
+                       range(rng.randint(0, 12)))
+    if kind == "list":
+        return [_random_value(rng, depth + 1)
+                for _ in range(rng.randint(0, 5))]
+    return {f"k{i}-{rng.randint(0, 99)}": _random_value(rng, depth + 1)
+            for i in range(rng.randint(0, 5))}
+
+
+@pytest.mark.parametrize("name", list(available_codecs()))
+def test_codec_fuzz_round_trip_bit_exact(name):
+    """decode(encode(x)) == x with float bits preserved, for randomly
+    nested payloads, on every codec this process can speak."""
+    codec = get_codec(name)
+    rng = random.Random(1234)
+    for i in range(200):
+        payload = {"op": "fuzz", "v": _random_value(rng)}
+        _assert_same(payload, codec.decode(codec.encode(payload)), f"#{i}")
+
+
+@pytest.mark.parametrize("name", list(available_codecs()))
+def test_codec_special_floats_bit_exact(name):
+    codec = get_codec(name)
+    vals = [math.nan, math.inf, -math.inf, -0.0, 0.0, 5e-324,
+            1.7976931348623157e308, 0.1, 1 / 3]
+    out = codec.decode(codec.encode({"v": vals}))["v"]
+    assert [_float_bits(x) for x in vals] == [_float_bits(y) for y in out]
+
+
+def test_codecs_agree_across_the_matrix():
+    """The same payload survives any encode/decode pair of codecs — the
+    encoding is never a semantics choice."""
+    rng = random.Random(7)
+    payloads = [{"op": "x", "v": _random_value(rng)} for _ in range(50)]
+    codecs = [get_codec(n) for n in available_codecs()]
+    for p in payloads:
+        decoded = [c.decode(c.encode(p)) for c in codecs]
+        for d in decoded[1:]:
+            _assert_same(decoded[0], d)
+
+
+def test_tlv_bigint_bytes_and_errors():
+    tlv = get_codec("tlv")
+    big = 17 ** 40
+    assert tlv.decode(tlv.encode({"n": big, "m": -big})) == \
+        {"n": big, "m": -big}
+    assert tlv.decode(tlv.encode({"b": b"\x00\xffraw"}))["b"] == b"\x00\xffraw"
+    with pytest.raises(CodecError, match="keys must be str"):
+        tlv.encode({1: "x"})
+    with pytest.raises(CodecError, match="cannot encode"):
+        tlv.encode({"x": object()})
+    with pytest.raises(CodecError, match="truncated"):
+        tlv.decode(tlv.encode({"a": [1, 2, 3]})[:-4])
+    with pytest.raises(CodecError, match="trailing"):
+        tlv.decode(tlv.encode({"a": 1}) + b"\x00")
+    with pytest.raises(CodecError, match="unknown tlv tag"):
+        tlv.decode(b"\xc1")
+
+
+def test_get_codec_binary_alias_and_unknown():
+    assert get_codec("binary").name == BINARY
+    with pytest.raises(CodecError, match="unknown wire codec"):
+        get_codec("protobuf")
+
+
+# ------------------------------------------------------- framing edge cases
+
+@pytest.fixture
+def store_server():
+    svc = GroundTruthService()
+    server = GroundTruthTCPServer(("127.0.0.1", 0), svc)
+    threading.Thread(target=server.serve_forever, daemon=True).start()
+    yield server
+    server.shutdown()
+
+
+def test_torn_frames_reassemble(store_server):
+    """A request trickling in byte by byte (worst-case TCP segmentation)
+    must reassemble into one frame and get a normal response."""
+    sock = socket.create_connection(store_server.server_address[:2],
+                                    timeout=10)
+    payload = get_codec("json").encode({"op": "version"})
+    frame = struct.pack(">I", len(payload)) + payload
+    for i in range(len(frame)):
+        sock.sendall(frame[i:i + 1])
+        if i % 7 == 0:
+            time.sleep(0.001)
+    resp = _recv_msg(sock)
+    assert resp["ok"] and resp["version"] == 0
+    sock.close()
+
+
+def test_interleaved_partial_sends_stay_isolated(store_server):
+    """Two connections sending halves of their frames alternately: the
+    selector loop buffers per connection, so neither sees the other's
+    bytes and both get correct responses."""
+    addr = store_server.server_address[:2]
+    socks = [socket.create_connection(addr, timeout=10) for _ in range(2)]
+    frames = []
+    for i in range(2):
+        payload = get_codec("json").encode(
+            {"op": "add", "profile": [float(i)] * 3, "workload": f"wl{i}",
+             "sys_config": {"chips": i}, "objective": 0.5})
+        frames.append(struct.pack(">I", len(payload)) + payload)
+    cut = [len(f) // 2 for f in frames]
+    for s, f, c in zip(socks, frames, cut):      # first halves, interleaved
+        s.sendall(f[:c])
+    time.sleep(0.05)
+    for s, f, c in zip(socks, frames, cut):      # then the second halves
+        s.sendall(f[c:])
+    versions = []
+    for i, s in enumerate(socks):
+        resp = _recv_msg(s)
+        assert resp["ok"], resp
+        versions.append(resp["version"])
+    # the two adds ran on concurrent handler threads, so either may have
+    # answered first — but both landed, each with its own version bump
+    assert sorted(versions) == [1, 2]
+    payload = get_codec("json").encode({"op": "snapshot"})
+    socks[0].sendall(struct.pack(">I", len(payload)) + payload)
+    snap = _recv_msg(socks[0])
+    assert snap["ok"] and snap["n_entries"] == 2  # both adds landed
+    for s in socks:
+        s.close()
+
+
+def test_oversized_frame_raises_naming_the_peer():
+    a, b = socket.socketpair()
+    a.settimeout(5)
+    b.sendall(struct.pack(">I", MAX_FRAME_BYTES + 1))
+    with pytest.raises(TransportError, match="exceeds the .*-byte cap"):
+        _recv_frame(a, peer="10.1.2.3:7077")
+    b.sendall(struct.pack(">I", 2048))           # over a tighter custom cap
+    try:
+        _recv_frame(a, max_frame=1024, peer="10.1.2.3:7077")
+    except TransportError as e:
+        assert "10.1.2.3:7077" in str(e)
+    else:
+        pytest.fail("oversized frame accepted")
+    a.close()
+    b.close()
+
+
+def test_server_closes_connection_on_oversized_frame(store_server):
+    """A corrupt length prefix (or a non-repro peer) must not make the
+    server allocate gigabytes — it drops the connection instead."""
+    sock = socket.create_connection(store_server.server_address[:2],
+                                    timeout=10)
+    sock.sendall(struct.pack(">I", 0xFFFFFFFF) + b"junk")
+    sock.settimeout(5)
+    assert sock.recv(1) == b""                   # orderly close, no reply
+    sock.close()
+    # the server survives for well-formed clients
+    with StoreClient(SocketTransport(*store_server.server_address[:2])) as c:
+        assert c.version() == 0
+
+
+def test_server_closes_connection_on_undecodable_frame(store_server):
+    sock = socket.create_connection(store_server.server_address[:2],
+                                    timeout=10)
+    sock.sendall(struct.pack(">I", 4) + b"\x00ah!")
+    sock.settimeout(5)
+    assert sock.recv(1) == b""
+    sock.close()
+    # only the offending connection died — the serve loop is still up
+    # (a decode error must never escape and kill the I/O thread)
+    with StoreClient(SocketTransport(*store_server.server_address[:2])) as c:
+        assert c.version() == 0
+
+
+# ------------------------------------------------------------- negotiation
+
+def _legacy_json_server(n_requests=4):
+    """A pre-codec peer: speaks only JSON framing and errors unknown ops
+    (which is how a real legacy server answers the ``_wire`` hello)."""
+    listener = socket.socket()
+    listener.bind(("127.0.0.1", 0))
+    listener.listen(4)
+
+    def serve():
+        conn, _ = listener.accept()
+        try:
+            for _ in range(n_requests):
+                req = _recv_msg(conn)
+                if req.get("op") == "version":
+                    _send_msg(conn, {"ok": True, "version": 0})
+                else:
+                    _send_msg(conn, {"ok": False,
+                                     "error": f"unknown op {req.get('op')!r}"})
+        except (ConnectionError, OSError):
+            pass
+        conn.close()
+
+    threading.Thread(target=serve, daemon=True).start()
+    return listener, listener.getsockname()[1]
+
+
+def test_auto_negotiates_binary_against_new_server(store_server):
+    t = SocketTransport(*store_server.server_address[:2], wire="auto")
+    assert t.codec_name == BINARY
+    assert t.request({"op": "version"})["ok"]
+    t.close()
+
+
+def test_forced_json_skips_the_hello(store_server):
+    t = SocketTransport(*store_server.server_address[:2], wire="json")
+    assert t.codec_name == "json"
+    assert t.request({"op": "version"})["ok"]
+    t.close()
+
+
+def test_forced_tlv_works_against_new_server(store_server):
+    t = SocketTransport(*store_server.server_address[:2], wire="tlv")
+    assert t.codec_name == "tlv"
+    client = StoreClient(t)
+    client.add(np.ones(3), "wl", {"chips": 2}, 0.9)
+    assert client.version() == 1
+    client.close()
+
+
+def test_auto_falls_back_to_json_on_legacy_peer():
+    listener, port = _legacy_json_server()
+    t = SocketTransport("127.0.0.1", port, wire="auto")
+    assert t.codec_name == "json"                # declined hello, no error
+    assert t.request({"op": "version"}) == {"ok": True, "version": 0}
+    t.close()
+    listener.close()
+
+
+def test_forced_binary_against_legacy_peer_is_a_clear_error():
+    listener, port = _legacy_json_server(n_requests=1)
+    with pytest.raises(TransportError, match="declined wire codec"):
+        SocketTransport("127.0.0.1", port, wire=BINARY)
+    listener.close()
+
+
+def test_generic_ok_responder_does_not_flip_the_wire():
+    """A service that answers unknown ops with a bare {"ok": true} must
+    not be mistaken for codec support: the hello requires the codec name
+    echoed back, or the connection stays on JSON."""
+    listener = socket.socket()
+    listener.bind(("127.0.0.1", 0))
+    listener.listen(1)
+
+    def serve():
+        conn, _ = listener.accept()
+        try:
+            while True:
+                _recv_msg(conn)
+                _send_msg(conn, {"ok": True})    # no "codec" echo
+        except (ConnectionError, OSError):
+            pass
+        conn.close()
+
+    threading.Thread(target=serve, daemon=True).start()
+    t = SocketTransport("127.0.0.1", listener.getsockname()[1], wire="auto")
+    assert t.codec_name == "json"
+    assert t.request({"op": "anything"})["ok"]   # still JSON-intelligible
+    t.close()
+    listener.close()
+
+
+# ----------------------------------------------- batched store ops + journal
+
+class _FlushCounter:
+    def __init__(self, f):
+        self.f, self.writes, self.flushes = f, 0, 0
+
+    def write(self, s):
+        self.writes += 1
+        return self.f.write(s)
+
+    def flush(self):
+        self.flushes += 1
+        return self.f.flush()
+
+    def close(self):
+        return self.f.close()
+
+
+def _add_req(i, refit=False):
+    return {"op": "add", "profile": [float(i), 1.0, 2.0],
+            "workload": f"wl{i % 2}", "sys_config": {"chips": i},
+            "objective": 0.5 + i / 100, "refit": refit}
+
+
+def test_batch_op_pipelines_journal_to_one_flush(tmp_path):
+    svc = GroundTruthService(path=str(tmp_path / "gt.jsonl"))
+    svc._journal = counter = _FlushCounter(svc._journal)
+    resp = svc.handle({"op": "batch",
+                       "requests": [_add_req(i) for i in range(10)] +
+                       [{"op": "refit"}]})
+    assert resp["ok"] and len(resp["results"]) == 11
+    assert all(sub["ok"] for sub in resp["results"])
+    assert resp["results"][-1]["version"] == resp["version"] == 1
+    assert (counter.writes, counter.flushes) == (1, 1)   # pipelined
+    # scalar adds pay one write+flush each — the baseline the batch beats
+    svc.handle(_add_req(99, refit=True))
+    assert (counter.writes, counter.flushes) == (2, 2)
+    svc.close()
+    # write-ahead lines were real: a fresh service replays all 11 adds
+    svc2 = GroundTruthService(path=str(tmp_path / "gt.jsonl"))
+    assert len(svc2.store.entries) == 11
+    svc2.close()
+
+
+def test_batch_op_reports_bad_subrequests_in_place():
+    svc = GroundTruthService()
+    resp = svc.handle({"op": "batch", "requests": [
+        _add_req(0), {"op": "nope"}, {"op": "batch", "requests": []},
+        _add_req(1, refit=True)]})
+    assert resp["ok"]
+    oks = [sub.get("ok") for sub in resp["results"]]
+    assert oks == [True, False, False, True]     # failures don't abort
+    assert "unknown batch sub-op" in resp["results"][1]["error"]
+    assert len(svc.store.entries) == 2
+    svc.close()
+
+
+def test_batch_requires_a_request_list():
+    svc = GroundTruthService()
+    assert not svc.handle({"op": "batch"})["ok"]
+    assert not svc.handle({"op": "batch", "requests": "nope"})["ok"]
+
+
+def test_evaluate_many_is_bit_identical_to_evaluate():
+    gt = GroundTruth()
+    rng = np.random.RandomState(3)
+    for i in range(12):
+        base = np.zeros(8)
+        base[i % 3] = 10.0 * (1 + i % 3)
+        gt.add(base + rng.randn(8) * 0.1, f"wl{i % 3}",
+               {"chips": i % 3}, 0.8)
+    model = gt.centroid_model()
+    probes = [rng.randn(8) * 5 for _ in range(40)]
+    scalar = [model.evaluate(p) for p in probes]
+    batched = model.evaluate_many(probes)
+    for (s0, c0), (s1, c1) in zip(scalar, batched):
+        assert _float_bits(s0) == _float_bits(s1)
+        assert c0 == c1
+
+
+class _CountingTransport:
+    def __init__(self, inner):
+        self.inner, self.n_requests = inner, 0
+
+    def request(self, req):
+        self.n_requests += 1
+        return self.inner.request(req)
+
+    def close(self):
+        self.inner.close()
+
+
+def test_piggyback_lookup_is_rpc_free_when_warm():
+    svc = GroundTruthService()
+    transport = _CountingTransport(InprocTransport(svc))
+    client = StoreClient(transport)
+    client.add(np.ones(4), "wl", {"chips": 2}, 0.9)   # piggybacks version 1
+    client.lookup(np.ones(4))                         # fetches the model
+    warm = transport.n_requests
+    results = [client.lookup(np.ones(4) + i * 1e-3) for i in range(50)]
+    assert transport.n_requests == warm               # zero RPCs, all local
+    assert all(cfg == {"chips": 2} for _, cfg in results)
+    # a refit by another writer is seen at this client's next RPC
+    other = StoreClient(InprocTransport(svc))
+    other.add(np.ones(4) * 100, "wl2", {"chips": 8}, 0.9)
+    client.version()                                  # any RPC re-syncs
+    client.lookup(np.ones(4))
+    assert client._model_version == 2
+    client.close()
+    other.close()
+
+
+def test_lookup_many_matches_scalar_lookups_and_counts():
+    svc = GroundTruthService()
+    seed_client = StoreClient(InprocTransport(svc))
+    rng = np.random.RandomState(11)
+    for i in range(8):
+        base = np.zeros(6)
+        base[i % 2] = 25.0
+        seed_client.add(base + rng.randn(6) * 0.05, f"wl{i % 2}",
+                        {"chips": 2 + i % 2}, 0.85)
+    probes = [rng.randn(6) * (0.1 if i % 2 else 30.0) for i in range(30)]
+    a, b = (StoreClient(InprocTransport(svc)) for _ in range(2))
+    scalar = [a.lookup(p) for p in probes]
+    batched = b.lookup_many(probes)
+    for (s0, c0), (s1, c1) in zip(scalar, batched):
+        assert _float_bits(s0) == _float_bits(s1) and c0 == c1
+    assert (a.hits, a.misses) == (b.hits, b.misses)
+    assert b.lookup_many([]) == []
+    a.close()
+    b.close()
+
+
+def test_add_many_is_one_round_trip():
+    svc = GroundTruthService()
+    transport = _CountingTransport(InprocTransport(svc))
+    client = StoreClient(transport)
+    rng = np.random.RandomState(5)
+    version = client.add_many(
+        [(rng.randn(4), f"wl{i}", {"chips": i}, 0.7) for i in range(6)])
+    assert transport.n_requests == 1
+    assert version == 1 and svc.store.version == 1    # single trailing refit
+    assert len(svc.store.entries) == 6
+    client.close()
+
+
+# ----------------------------------- remote == in-process, codec + batching
+
+def _space():
+    return SearchSpace([
+        Param("batch_size", "choice", choices=(32, 64, 256, 1024)),
+        Param("learning_rate", "log", 0.001, 0.1),
+    ])
+
+
+def _job(seed=0, epochs=9):
+    return HPTJob(workload="lenet-mnist", space=_space(), max_epochs=epochs,
+                  seed=seed)
+
+
+def _assert_bit_identical(a, b):
+    assert a.best_hparams == b.best_hparams
+    assert a.best_score == b.best_score
+    assert sorted(a.records) == sorted(b.records)
+    for tid, rec_a in a.records.items():
+        rec_b = b.records[tid]
+        assert [e.accuracy for e in rec_a.epochs] == \
+            [e.accuracy for e in rec_b.epochs], tid
+        assert [e.duration_s for e in rec_a.epochs] == \
+            [e.duration_s for e in rec_b.epochs], tid
+        assert rec_a.sys_history == rec_b.sys_history, tid
+
+
+class _CountingService(TrialWorkerService):
+    def __init__(self, **kw):
+        super().__init__(**kw)
+        self.ops = []
+
+    def handle(self, req):
+        self.ops.append(req.get("op"))
+        return super().handle(req)
+
+
+@pytest.fixture
+def worker_server():
+    made = []
+
+    def make(service=None):
+        server = serve_worker(service or TrialWorkerService(), port=0,
+                              background=True)
+        made.append(server)
+        return server.server_address[1]
+
+    yield make
+    for server in made:
+        server.shutdown()
+        server.service.close()
+
+
+@pytest.mark.parametrize("wire", ["json", "binary"])
+def test_remote_run_bit_identical_under_both_codecs(worker_server, wire):
+    """Acceptance: the negotiated binary codec changes the bytes on the
+    wire and nothing else — remote == in-process bit for bit under JSON
+    and binary alike."""
+    port = worker_server()
+    serial = (Experiment(_job()).with_tuner("v1").with_backend("sim")
+              .with_scheduler("hyperband").run())
+    worker = RemoteWorker(f"tcp://127.0.0.1:{port}", wire=wire)
+    want = "json" if wire == "json" else BINARY
+    assert worker.transport.codec_name == want
+    ex = WorkerPoolExecutor([worker])
+    remote = (Experiment(_job()).with_tuner("v1").with_backend("sim")
+              .with_scheduler("hyperband").run(executor=ex))
+    ex.close()
+    _assert_bit_identical(serial, remote)
+
+
+def test_batched_dispatch_uses_run_many_and_stays_bit_identical(
+        worker_server):
+    services = [_CountingService(), _CountingService()]
+    ports = [worker_server(s) for s in services]
+    ex = WorkerPoolExecutor([RemoteWorker(f"tcp://127.0.0.1:{p}")
+                             for p in ports])
+    serial = (Experiment(_job()).with_tuner("v1").with_backend("sim")
+              .with_scheduler("random", n_trials=6).run())
+    remote = (Experiment(_job()).with_tuner("v1").with_backend("sim")
+              .with_scheduler("random", n_trials=6).run(executor=ex))
+    ex.close()
+    _assert_bit_identical(serial, remote)
+    # the wave really was batched: one run_many per worker, no scalar runs
+    for s in services:
+        assert "run_many" in s.ops and "run" not in s.ops
+
+
+def test_legacy_worker_without_run_many_falls_back_per_trial(worker_server):
+    class _OldService(_CountingService):
+        def handle(self, req):
+            if req.get("op") == "run_many":
+                self.ops.append("run_many")
+                return {"ok": False, "error": "unknown op 'run_many'"}
+            return super().handle(req)
+
+    svc = _OldService()
+    port = worker_server(svc)
+    ex = WorkerPoolExecutor([RemoteWorker(f"tcp://127.0.0.1:{port}")])
+    serial = (Experiment(_job()).with_tuner("v1").with_backend("sim")
+              .with_scheduler("random", n_trials=4).run())
+    remote = (Experiment(_job()).with_tuner("v1").with_backend("sim")
+              .with_scheduler("random", n_trials=4).run(executor=ex))
+    assert not ex.workers[0]._batched_runs       # remembered the decline
+    ex.close()
+    _assert_bit_identical(serial, remote)
+    assert svc.ops.count("run_many") == 1        # asked once, never again
+    assert svc.ops.count("run") == 4
+
+
+def test_mid_batch_connection_drop_loses_no_trial_and_double_runs_none(
+        worker_server):
+    """Acceptance (+ chaos satellite core): a worker whose connection dies
+    mid-``run_many`` reports every batch member as worker-lost; the pool
+    retires it once and re-places the whole batch on the survivor. No
+    trial is lost, none runs twice into the merged result, and the run is
+    bit-identical to serial."""
+    class _DropOnce(_CountingService):
+        def handle(self, req):
+            if req.get("op") == "run_many" and "run_many" not in self.ops:
+                self.ops.append("run_many")
+                raise DropConnection("chaos: mid-batch drop")
+            return super().handle(req)
+
+    dropping, survivor = _DropOnce(), _CountingService()
+    ports = [worker_server(dropping), worker_server(survivor)]
+    ex = WorkerPoolExecutor([RemoteWorker(f"tcp://127.0.0.1:{p}")
+                             for p in ports])
+    ex.pool.retire_on_error = True
+    serial = (Experiment(_job()).with_tuner("v1").with_backend("sim")
+              .with_scheduler("random", n_trials=6).run())
+    remote = (Experiment(_job()).with_tuner("v1").with_backend("sim")
+              .with_scheduler("random", n_trials=6).run(executor=ex))
+    assert len(ex.pool.workers) == 1             # the dropper was retired
+    ex.close()
+    _assert_bit_identical(serial, remote)
+    assert len(remote.records) == 6
+    # every trial ran exactly once into the merged result: the survivor
+    # picked up the dropped batch, and the dropper contributed nothing
+    assert len(survivor.runner.records) == 6
+    assert survivor.ops.count("run_many") >= 1
+
+
+def test_store_client_over_every_codec_agrees_bit_for_bit(store_server):
+    """Warm-socket == in-process across json / binary / tlv: the PR 3
+    acceptance property, re-asserted per codec."""
+    host, port = store_server.server_address[:2]
+    svc = store_server.service
+    rng = np.random.RandomState(9)
+    seed_client = StoreClient(SocketTransport(host, port))
+    for i in range(6):
+        base = np.zeros(5)
+        base[i % 2] = 15.0
+        seed_client.add(base + rng.randn(5) * 0.1, f"wl{i % 2}",
+                        {"chips": 1 + i % 2}, 0.8)
+    seed_client.close()
+    probes = [rng.randn(5) * (0.2 if i % 3 else 20.0) for i in range(25)]
+    local = [StoreClient(InprocTransport(svc)).lookup(p) for p in probes]
+    for wire in ["json", "binary", "tlv"]:
+        client = StoreClient(SocketTransport(host, port, wire=wire))
+        got = [client.lookup(p) for p in probes]
+        for (s0, c0), (s1, c1) in zip(local, got):
+            assert _float_bits(s0) == _float_bits(s1) and c0 == c1, wire
+        batched = client.lookup_many(probes)
+        for (s0, c0), (s1, c1) in zip(local, batched):
+            assert _float_bits(s0) == _float_bits(s1) and c0 == c1, wire
+        client.close()
+
+
+def test_server_batch_op_over_the_socket(store_server):
+    host, port = store_server.server_address[:2]
+    with StoreClient(SocketTransport(host, port, wire="auto")) as client:
+        version = client.add_many(
+            [(np.full(4, float(i)), f"wl{i % 2}", {"chips": i}, 0.6)
+             for i in range(5)])
+        assert version == 1
+        snap = client.snapshot()
+        assert snap["n_entries"] == 5
