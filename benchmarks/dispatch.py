@@ -91,6 +91,111 @@ def _measure_batched(addr, wire: str, n: int, batch: int) -> float:
     return dt * 1e6 / n
 
 
+def _measure_traced_single(addr, wire: str, n: int, bus) -> float:
+    """µs per trial action with tracing on: ``_trace`` metadata stamped on
+    every request, an ``RpcCompleted`` receipt emitted per action onto an
+    enabled bus whose ``ForwardingSink`` ships to a live collector — the
+    exact per-request work the traced driver path adds."""
+    from repro.obs.events import RpcCompleted
+    t = SocketTransport(*addr, wire=wire)
+    t.trace = "bench0123456789ab"
+    t.request(_run_request("warmup"))
+    t0 = time.perf_counter()
+    for i in range(n):
+        r0 = time.perf_counter()
+        resp = t.request(_run_request(f"t{i}"))
+        dt = time.perf_counter() - r0
+        assert resp.get("ok"), resp
+        bus.emit(RpcCompleted(op="run", peer=f"tcp://{addr[0]}:{addr[1]}",
+                              duration_s=dt, overhead_s=dt))
+    total = time.perf_counter() - t0
+    t.close()
+    return total * 1e6 / n
+
+
+def _measure_traced_batched(addr, wire: str, n: int, batch: int,
+                            bus) -> float:
+    """Traced ``run_many``: one receipt per wave (the production path)."""
+    from repro.obs.events import RpcCompleted
+    t = SocketTransport(*addr, wire=wire)
+    t.trace = "bench0123456789ab"
+    t.request(_run_request("warmup"))
+    waves, count = [], 0
+    while count < n:
+        size = min(batch, n - count)
+        waves.append([{"trial_id": f"b{count + j}",
+                       "hparams": {"batch_size": 256,
+                                   "learning_rate": 0.0125},
+                       "epochs": 5} for j in range(size)])
+        count += size
+    t0 = time.perf_counter()
+    for trials in waves:
+        r0 = time.perf_counter()
+        resp = t.request({"op": "run_many", "workload": "lenet-mnist",
+                          "trials": trials})
+        dt = time.perf_counter() - r0
+        assert resp.get("ok") and len(resp["results"]) == len(trials), resp
+        bus.emit(RpcCompleted(op="run_many", peer="bench",
+                              duration_s=dt, overhead_s=dt,
+                              n=len(trials)))
+    total = time.perf_counter() - t0
+    t.close()
+    return total * 1e6 / n
+
+
+def run_traced(n_actions: int = 2000, batch: int = 32,
+               repeats: int = 3) -> dict:
+    """Tracing-overhead headline: the dispatch bench with tracing off vs
+    on (trace metadata + per-action receipts + forwarding to a live
+    collector). Best-of-``repeats`` per variant, interleaved, so scheduler
+    noise hits both sides alike. The acceptance bar is < 5% overhead."""
+    from repro.obs.events import EventBus
+    from repro.obs.forward import start_collector, ForwardingSink
+
+    server = JsonRPCServer(("127.0.0.1", 0), _CannedTrialService().handle)
+    import threading
+    threading.Thread(target=server.serve_forever, daemon=True).start()
+    addr = ("127.0.0.1", server.server_address[1])
+    wire = best_binary_codec().name
+
+    sink_bus = EventBus()                   # collector's home bus
+    collector = start_collector(sink_bus)
+    bus = EventBus()                        # the traced driver's bus
+    bus.trace_id, bus.proc = "bench0123456789ab", "driver"
+    fwd = ForwardingSink(collector.address, proc="driver")
+    bus.add_sink(fwd)
+
+    plain_s, traced_s = [], []
+    plain_b, traced_b = [], []
+    try:
+        for _ in range(max(1, repeats)):
+            plain_s.append(_measure_single(addr, wire, n_actions))
+            traced_s.append(_measure_traced_single(addr, wire, n_actions,
+                                                   bus))
+            fwd.flush(timeout=1.0)      # don't bleed into the next timing
+            plain_b.append(_measure_batched(addr, wire, n_actions, batch))
+            traced_b.append(_measure_traced_batched(addr, wire, n_actions,
+                                                    batch, bus))
+            fwd.flush(timeout=1.0)
+    finally:
+        fwd.close()
+        collector.close(drain_s=0.1)
+        server.shutdown()
+    out = {
+        "n_actions": n_actions, "batch": batch, "wire": wire,
+        "us_plain_single": min(plain_s),
+        "us_traced_single": min(traced_s),
+        "us_plain_batched": min(plain_b),
+        "us_traced_batched": min(traced_b),
+        "forwarded": sink_bus.seq,
+    }
+    out["overhead_single_pct"] = 100.0 * (
+        out["us_traced_single"] / out["us_plain_single"] - 1.0)
+    out["overhead_batched_pct"] = 100.0 * (
+        out["us_traced_batched"] / out["us_plain_batched"] - 1.0)
+    return out
+
+
 def run(n_actions: int = 2000, batch: int = 32, quick: bool = True) -> dict:
     server = JsonRPCServer(("127.0.0.1", 0), _CannedTrialService().handle)
     import threading
@@ -116,5 +221,6 @@ def run(n_actions: int = 2000, batch: int = 32, quick: bool = True) -> dict:
 
 if __name__ == "__main__":
     res = run(n_actions=20000, batch=64, quick=False)
+    res.update(run_traced(n_actions=20000, batch=64))
     for k, v in res.items():
         print(f"{k}: {v:.2f}" if isinstance(v, float) else f"{k}: {v}")

@@ -164,6 +164,27 @@ def bench_dispatch():
             f"codec={out['binary_codec']}")
 
 
+def bench_dispatch_traced():
+    """Tracing overhead on the dispatch bench: trace metadata on every
+    request, RPC receipts onto an enabled bus, forwarding to a live
+    collector — vs. tracing off. The acceptance bar (<5%) is asserted on
+    the batched ``run_many`` path, production dispatch since the batched
+    protocol landed (one receipt per wave); the legacy per-request single
+    path rides along informationally."""
+    from benchmarks import dispatch
+    out = dispatch.run_traced(n_actions=2000, batch=32)
+    if out["overhead_batched_pct"] >= 5.0:
+        raise RuntimeError(
+            f"tracing overhead {out['overhead_batched_pct']:.1f}% on the "
+            f"batched dispatch path breaches the 5% acceptance bar "
+            f"(traced {out['us_traced_batched']:.1f}us vs plain "
+            f"{out['us_plain_batched']:.1f}us per action)")
+    return (f"overhead_batched_pct={out['overhead_batched_pct']:.1f};"
+            f"overhead_single_pct={out['overhead_single_pct']:.1f};"
+            f"us_traced_batched={out['us_traced_batched']:.1f};"
+            f"forwarded={out['forwarded']}")
+
+
 def bench_chaos():
     """SIGKILL recovery headline: real workers, one killed mid-run; SLOs
     (retire-in-budget, trials re-placed, epochs exact, bit-identical)
@@ -318,6 +339,7 @@ def _run_all() -> None:
     _timed("elastic", bench_elastic)
     _timed("store_service", bench_store_service)
     _timed("dispatch", bench_dispatch)
+    _timed("dispatch_traced", bench_dispatch_traced)
     _timed("chaos", bench_chaos)
     _timed("fig1_tuning_cost", bench_fig1_tuning_cost)
     _timed("fig2_profiling_stability", bench_fig2_profiling_stability)

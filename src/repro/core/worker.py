@@ -46,7 +46,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 from repro.core.schedulers import TrialProposal
 from repro.obs.events import (Resharded, TrialCompleted, TrialDispatched,
                               WorkerJoined, WorkerRetired, get_bus,
-                              worker_label)
+                              new_trace_id, worker_label)
 
 __all__ = ["WorkerCapabilities", "TrialCompletion", "Worker",
            "InprocWorker", "ThreadWorker", "WorkerPool",
@@ -290,6 +290,10 @@ class WorkerPool:
         self.workers: List[Worker] = list(workers)
         self.sticky = sticky
         self.bus = get_bus()            # telemetry; off until observed
+        # distributed-trace context ({"trace_id", "collector"}) applied to
+        # every worker that joins while set (see WorkerPoolExecutor
+        # .enable_trace); None = untraced
+        self.trace: Optional[Dict[str, Any]] = None
         self.retire_on_error = False
         self.maintenance: Optional[Any] = None      # no-arg callable
         self.join_timeout_s = join_timeout_s
@@ -357,6 +361,14 @@ class WorkerPool:
         pool is unchanged), then immediately eligible for placement; any
         backlogged trials (stranded by earlier removals) dispatch to it."""
         worker.bus = self.bus
+        if self.trace is not None:
+            enable = getattr(worker, "enable_trace", None)
+            if enable is not None:
+                try:        # best-effort: legacy peers just stay untraced
+                    enable(self.trace["trace_id"],
+                           collector=self.trace.get("collector"))
+                except Exception:               # noqa: BLE001
+                    pass
         if self._bound is not None:
             worker.bind(*self._bound)
         self.workers.append(worker)
@@ -631,6 +643,7 @@ class WorkerPoolExecutor:
                                allow_empty=allow_empty)
         self.workers = self.pool.workers
         self._runner_spec: Optional[dict] = None
+        self._trace_collector = None    # owned TraceCollector, if any
 
     @property
     def parallelism(self) -> int:
@@ -650,6 +663,42 @@ class WorkerPoolExecutor:
         self.pool.bus = bus
         for w in self.workers:
             w.bus = bus
+
+    def enable_trace(self, trace_id: Optional[str] = None,
+                     collector: Optional[str] = None) -> str:
+        """Start a distributed trace on this executor: stamp the pool's
+        bus with a trace id + the ``"driver"`` proc label, remember the
+        context for late joiners, and handshake every current worker that
+        can propagate it (``RemoteWorker.enable_trace``; in-process
+        workers share the bus already). ``collector`` is the
+        ``tcp://HOST:PORT`` of a ``TraceCollector`` remote peers forward
+        their events to. Returns the trace id (fresh when not given)."""
+        tid = trace_id or new_trace_id()
+        bus = self.pool.bus
+        bus.trace_id = tid
+        if bus.proc is None:
+            bus.proc = "driver"
+        bus.enable()
+        self.pool.trace = {"trace_id": tid, "collector": collector}
+        for w in list(self.workers):
+            enable = getattr(w, "enable_trace", None)
+            if enable is not None:
+                try:    # best-effort: legacy peers just stay untraced
+                    enable(tid, collector=collector)
+                except Exception:               # noqa: BLE001
+                    pass
+        return tid
+
+    @property
+    def trace_context(self) -> Optional[dict]:
+        """The active trace ({"trace_id", "collector"}) or None —
+        ``Experiment.run`` reads this to join the driver's store client
+        into the trace."""
+        return self.pool.trace
+
+    @property
+    def trace_bus(self):
+        return self.pool.bus
 
     def configure_runner_spec(self, spec: Optional[dict]) -> None:
         """Hand workers that mirror the runner remotely the recipe for
@@ -697,6 +746,9 @@ class WorkerPoolExecutor:
 
     def close(self) -> None:
         self.pool.close()
+        if self._trace_collector is not None:
+            self._trace_collector.close()
+            self._trace_collector = None
 
     def __enter__(self):
         return self

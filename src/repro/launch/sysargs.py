@@ -164,6 +164,15 @@ def _maybe_attach_trace(ex, args: argparse.Namespace, name: str):
     bus = EventBus()
     attach_trace(bus, trace)
     ex.attach_bus(bus)
+    if getattr(ex, "enable_trace", None) is not None:
+        # cross-process collection rides along automatically: start a
+        # collector on an ephemeral port and handshake every peer the
+        # executor dials (--workers / --coordinator); purely local
+        # executors skip this (no enable_trace) and trace as before
+        from repro.obs.forward import start_collector
+        collector = start_collector(bus)
+        ex.enable_trace(collector=collector.address)
+        ex._trace_collector = collector     # closed with the executor
     return ex
 
 

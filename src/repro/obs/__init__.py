@@ -4,8 +4,11 @@ Structured telemetry (``repro.obs.events``), sinks (JSONL trace,
 ``MetricsStore`` bridge), a scrapeable metrics/tail endpoint over the
 shared RPC framing (``repro.obs.metrics``), and a fault-injecting chaos
 orchestrator that asserts recovery SLOs (``repro.obs.chaos`` +
-``repro.obs.scenarios``). ``python -m repro.obs`` is the CLI (tail a live
-run, scrape metrics, run a chaos scenario).
+``repro.obs.scenarios``). Distributed tracing lives in
+``repro.obs.forward`` (cross-process trace propagation + event
+forwarding) and ``repro.obs.trace`` (merged timelines, wall-time
+breakdown, critical path). ``python -m repro.obs`` is the CLI (tail a
+live run, scrape metrics, analyze a trace, run a chaos scenario).
 
 This ``__init__`` resolves lazily (PEP 562): ``repro.core.worker`` and
 ``repro.cluster.engine`` import ``repro.obs.events`` (stdlib-only), while
@@ -14,9 +17,10 @@ the sinks/metrics modules import ``repro.core.store`` and
 ``repro.core``.
 """
 from repro.obs.events import (  # noqa: F401 — the always-safe base layer
-    DEFAULT_BUS, EVENT_TYPES, EpochCompleted, Event, EventBus,
-    HeartbeatMissed, Resharded, StoreRefit, TrialCompleted, TrialDispatched,
-    WorkerJoined, WorkerRetired, event_from_dict, get_bus, set_bus,
+    DEFAULT_BUS, EVENT_TYPES, ClockSync, EpochCompleted, Event, EventBus,
+    ForwardDropped, HeartbeatMissed, Resharded, RpcCompleted, StoreRefit,
+    TrialCompleted, TrialDispatched, TrialStarted, WorkerJoined,
+    WorkerRetired, event_from_dict, get_bus, new_trace_id, set_bus,
     worker_label)
 
 _LAZY = {
@@ -29,7 +33,20 @@ _LAZY = {
     "ObsService": "repro.obs.metrics",
     "ObsServer": "repro.obs.metrics",
     "ObsClient": "repro.obs.metrics",
+    "ObsUnreachable": "repro.obs.metrics",
     "serve_obs": "repro.obs.metrics",
+    "ForwardingSink": "repro.obs.forward",
+    "TraceCollector": "repro.obs.forward",
+    "start_collector": "repro.obs.forward",
+    "adopt_trace": "repro.obs.forward",
+    "propagate_trace": "repro.obs.forward",
+    "Segment": "repro.obs.trace",
+    "TrialSpan": "repro.obs.trace",
+    "load_events": "repro.obs.trace",
+    "merge_events": "repro.obs.trace",
+    "build_trace": "repro.obs.trace",
+    "analyze_trace": "repro.obs.trace",
+    "render_report": "repro.obs.trace",
     "ChaosProxy": "repro.obs.chaos",
     "ChaosScenario": "repro.obs.chaos",
     "ChaosReport": "repro.obs.chaos",
@@ -43,11 +60,12 @@ _LAZY = {
     "SCENARIOS": "repro.obs.scenarios",
 }
 
-__all__ = ["Event", "EventBus", "TrialDispatched", "TrialCompleted",
-           "EpochCompleted", "WorkerJoined", "WorkerRetired",
-           "HeartbeatMissed", "Resharded", "StoreRefit", "EVENT_TYPES",
+__all__ = ["Event", "EventBus", "TrialDispatched", "TrialStarted",
+           "TrialCompleted", "EpochCompleted", "WorkerJoined",
+           "WorkerRetired", "HeartbeatMissed", "Resharded", "StoreRefit",
+           "RpcCompleted", "ClockSync", "ForwardDropped", "EVENT_TYPES",
            "DEFAULT_BUS", "get_bus", "set_bus", "event_from_dict",
-           "worker_label"] + sorted(_LAZY)
+           "new_trace_id", "worker_label"] + sorted(_LAZY)
 
 
 def __getattr__(name):

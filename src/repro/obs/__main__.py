@@ -2,13 +2,18 @@
 
     tail tcp://HOST:PORT          follow a live run's event stream
     metrics tcp://HOST:PORT       scrape the Prometheus-style text once
+    analyze TRACE [TRACE...]      profile a traced run: merged timeline,
+                                  wall-time breakdown, critical path
     chaos NAME [--trace t.jsonl]  run one chaos scenario, assert its SLOs
     chaos --list                  show the scenario pack
 
 ``tail``/``metrics`` talk to a ``serve_obs`` endpoint (any run can host
-one: ``from repro.obs import serve_obs; serve_obs(background=True)``).
-``chaos`` exits nonzero when any SLO is violated — the CI smoke job is
-exactly ``python -m repro.obs chaos sigkill_worker --trace ...``.
+one: ``from repro.obs import serve_obs; serve_obs(background=True)``);
+both retry with bounded backoff while the run is still opening its
+endpoint. ``analyze`` reads ``--trace`` JSONL files (a distributed run
+produces one pre-merged file; several files merge here). ``chaos`` exits
+nonzero when any SLO is violated — the CI smoke job is exactly
+``python -m repro.obs chaos sigkill_worker --trace ...``.
 """
 from __future__ import annotations
 
@@ -18,9 +23,14 @@ import sys
 import time
 
 
+def _fail(msg: str) -> int:
+    print(f"error: {msg}", file=sys.stderr)
+    return 1
+
+
 def _cmd_tail(args) -> int:
-    from repro.obs.metrics import ObsClient
-    client = ObsClient(args.endpoint)
+    from repro.obs.metrics import ObsClient, ObsUnreachable
+    client = ObsClient(args.endpoint, connect_retries=args.retries)
     try:
         while True:
             for rec in client.tail():
@@ -30,17 +40,39 @@ def _cmd_tail(args) -> int:
             time.sleep(args.interval)
     except KeyboardInterrupt:
         return 0
+    except ObsUnreachable as e:
+        return _fail(str(e))
     finally:
         client.close()
 
 
 def _cmd_metrics(args) -> int:
-    from repro.obs.metrics import ObsClient
-    client = ObsClient(args.endpoint)
+    from repro.obs.metrics import ObsClient, ObsUnreachable
+    client = ObsClient(args.endpoint, connect_retries=args.retries)
     try:
         print(client.metrics(), end="")
+    except ObsUnreachable as e:
+        return _fail(str(e))
     finally:
         client.close()
+    return 0
+
+
+def _cmd_analyze(args) -> int:
+    from repro.obs.trace import analyze_trace, load_events, render_report
+    try:
+        records = load_events(args.traces)
+    except OSError as e:
+        return _fail(f"cannot read trace: {e}")
+    except ValueError as e:
+        return _fail(f"malformed trace: {e}")
+    if not records:
+        return _fail("trace is empty (was the run started with --trace?)")
+    report = analyze_trace(records)
+    if args.json:
+        print(json.dumps(report), flush=True)
+    else:
+        print(render_report(report), end="", flush=True)
     return 0
 
 
@@ -67,7 +99,7 @@ def _cmd_chaos(args) -> int:
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.obs",
-        description="tail, scrape, and chaos-test a live PipeTune run")
+        description="tail, scrape, profile, and chaos-test a PipeTune run")
     sub = ap.add_subparsers(dest="cmd")
 
     tail = sub.add_parser("tail", help="follow a live event stream")
@@ -77,10 +109,26 @@ def main(argv=None) -> int:
                       help="poll interval in seconds")
     tail.add_argument("--once", action="store_true",
                       help="print what the ring holds and exit")
+    tail.add_argument("--retries", type=int, default=5,
+                      help="connection attempts before giving up (the "
+                           "client backs off between them, so a run still "
+                           "opening its endpoint is waited out)")
 
     met = sub.add_parser("metrics", help="scrape the metrics text once")
     met.add_argument("endpoint", help="tcp://HOST:PORT of a serve_obs "
                                       "endpoint")
+    met.add_argument("--retries", type=int, default=5,
+                     help="connection attempts before giving up")
+
+    ana = sub.add_parser(
+        "analyze", help="profile a traced run: span trees, wall-time "
+                        "breakdown, critical path, straggler attribution")
+    ana.add_argument("traces", nargs="+", metavar="TRACE",
+                     help="JSONL trace file(s) from --trace (several "
+                          "files merge into one timeline)")
+    ana.add_argument("--json", action="store_true",
+                     help="emit the full report as JSON instead of the "
+                          "table")
 
     chaos = sub.add_parser(
         "chaos", help="run one fault scenario against a real elastic run "
@@ -101,6 +149,8 @@ def main(argv=None) -> int:
         return _cmd_tail(args)
     if args.cmd == "metrics":
         return _cmd_metrics(args)
+    if args.cmd == "analyze":
+        return _cmd_analyze(args)
     if args.cmd == "chaos":
         return _cmd_chaos(args)
     ap.print_help()

@@ -422,6 +422,7 @@ def run_scenario(scenario: ChaosScenario,
     servers = []
     store_service = None
     ex = None
+    collector = None
     try:
         # -- topology: coordinator (maybe proxied), optional store ---------
         coord_svc = CoordinatorService(ttl_s=scenario.ttl_s)
@@ -479,6 +480,13 @@ def run_scenario(scenario: ChaosScenario,
         # production path
         ex = ElasticWorkerPoolExecutor(coord_addr, refresh_s=0.1)
         ex.attach_bus(bus)
+        # distributed trace: the chaos run exercises the full cross-process
+        # path — worker subprocesses and the store forward their events home
+        # through the collector, so the CI trace artifact is one merged
+        # timeline that `python -m repro.obs analyze` can profile
+        from repro.obs.forward import start_collector
+        collector = start_collector(bus)
+        ex.enable_trace(collector=collector.address)
         job = _job(scenario.epochs, scenario.seed)
         sched = _GatedScheduler(make_scheduler("hyperband", job),
                                 gate_after=scenario.gate_after_wave)
@@ -567,6 +575,11 @@ def run_scenario(scenario: ChaosScenario,
                 pass
         for p in procs:
             p.kill()
+        if collector is not None:
+            try:
+                collector.close()
+            except Exception:                       # noqa: BLE001
+                pass
         for proxy in proxies:
             proxy.close()
         for server in servers:

@@ -15,6 +15,10 @@ timestamped records:
                       heartbeat age that killed it)
     Resharded         an in-flight or bound trial moved to another worker
     StoreRefit        the ground-truth store re-clustered (version bump)
+    TrialStarted      execution began on a worker (traced runs, worker-side)
+    RpcCompleted      one wire round-trip, measured client-side
+    ClockSync         per-peer wall-clock offset estimate (trace handshake)
+    ForwardDropped    a remote forwarding queue shed records (overflow)
 
 Emission is **off by default and near-free when off**: hot paths guard on
 ``bus.enabled`` (one attribute read) and only then construct the event, so
@@ -34,10 +38,12 @@ import time
 from collections import deque
 from typing import Any, Callable, ClassVar, Dict, List, Optional, Tuple
 
-__all__ = ["Event", "TrialDispatched", "TrialCompleted", "EpochCompleted",
-           "WorkerJoined", "WorkerRetired", "HeartbeatMissed", "Resharded",
-           "StoreRefit", "EventBus", "EVENT_TYPES", "event_from_dict",
-           "DEFAULT_BUS", "get_bus", "set_bus", "worker_label"]
+__all__ = ["Event", "TrialDispatched", "TrialStarted", "TrialCompleted",
+           "EpochCompleted", "WorkerJoined", "WorkerRetired",
+           "HeartbeatMissed", "Resharded", "StoreRefit", "RpcCompleted",
+           "ClockSync", "ForwardDropped", "EventBus", "EVENT_TYPES",
+           "event_from_dict", "new_trace_id", "DEFAULT_BUS", "get_bus",
+           "set_bus", "worker_label"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,7 +55,10 @@ class Event:
     kind: ClassVar[str] = "event"
 
     def to_fields(self) -> Dict[str, Any]:
-        return dataclasses.asdict(self)
+        # every event is a flat record of scalars, so a __dict__ copy is
+        # exact — and ~8x cheaper than dataclasses.asdict's deep recursion,
+        # which matters on traced hot paths (one emit per RPC receipt)
+        return dict(self.__dict__)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -59,6 +68,18 @@ class TrialDispatched(Event):
     worker: str
     epochs: int = 0
     at_s: Optional[float] = None        # simulated time (engine emitters)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrialStarted(Event):
+    """Execution actually began on a worker (emitted worker-side in traced
+    distributed runs; the gap back to ``trial_dispatched`` is queue wait +
+    one-way RPC)."""
+
+    kind: ClassVar[str] = "trial_started"
+    trial_id: str
+    worker: str
+    epochs: int = 0                     # budget this run was asked for
 
 
 @dataclasses.dataclass(frozen=True)
@@ -124,22 +145,70 @@ class StoreRefit(Event):
     n_entries: int = 0
 
 
+@dataclasses.dataclass(frozen=True)
+class RpcCompleted(Event):
+    """One request/response round-trip on the wire, measured client-side.
+    ``overhead_s`` is the slice of ``duration_s`` not accounted for by
+    remote compute the caller can see (for ``run``/``run_many`` that is
+    duration minus the returned epochs' summed durations; for store and
+    coordinator ops it equals ``duration_s``)."""
+
+    kind: ClassVar[str] = "rpc_completed"
+    op: str
+    peer: str
+    duration_s: float = 0.0
+    overhead_s: float = 0.0
+    n: int = 1                          # sub-requests (batched ops)
+
+
+@dataclasses.dataclass(frozen=True)
+class ClockSync(Event):
+    """NTP-style offset estimate for a traced peer: ``offset_s`` is how far
+    the peer's wall clock runs *ahead* of ours, estimated at the trace
+    handshake midpoint; merge subtracts it from that peer's ``ts``."""
+
+    kind: ClassVar[str] = "clock_sync"
+    proc: str
+    offset_s: float = 0.0
+    rtt_s: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class ForwardDropped(Event):
+    """A remote forwarding queue overflowed and shed its oldest records
+    (the hot path never blocks on telemetry; this is the receipt)."""
+
+    kind: ClassVar[str] = "forward_dropped"
+    proc: str
+    dropped: int = 0
+
+
 EVENT_TYPES: Dict[str, type] = {
-    cls.kind: cls for cls in (TrialDispatched, TrialCompleted,
+    cls.kind: cls for cls in (TrialDispatched, TrialStarted, TrialCompleted,
                               EpochCompleted, WorkerJoined, WorkerRetired,
-                              HeartbeatMissed, Resharded, StoreRefit)}
+                              HeartbeatMissed, Resharded, StoreRefit,
+                              RpcCompleted, ClockSync, ForwardDropped)}
 
 
 def event_from_dict(rec: Dict[str, Any]) -> Tuple[float, int, Event]:
     """Inverse of the bus's wire encoding: ``(ts, seq, typed event)``.
     Unknown kinds raise ``ValueError`` (a trace from a newer build should
-    fail loudly, not decode into the wrong type)."""
+    fail loudly, not decode into the wrong type). Trace metadata the bus
+    stamps alongside (``mono``/``trace``/``proc``) is carried in the record
+    dict, not the typed event."""
     cls = EVENT_TYPES.get(str(rec.get("kind")))
     if cls is None:
         raise ValueError(f"unknown event kind {rec.get('kind')!r}")
     fields = {f.name: rec[f.name] for f in dataclasses.fields(cls)
               if f.name in rec}
     return float(rec.get("ts", 0.0)), int(rec.get("seq", 0)), cls(**fields)
+
+
+def new_trace_id() -> str:
+    """A fresh 16-hex-char trace id (process-unique, collision-safe for
+    the handful of concurrent tuning runs a driver hosts)."""
+    import uuid
+    return uuid.uuid4().hex[:16]
 
 
 class EventBus:
@@ -167,6 +236,11 @@ class EventBus:
         self._seq = 0
         self._enabled = False
         self.counters: Dict[str, int] = {}
+        # distributed-tracing context: when set, every record is stamped
+        # with the trace id and this process's label so cross-process
+        # streams merge into one causal timeline (see repro.obs.trace)
+        self.trace_id: Optional[str] = None
+        self.proc: Optional[str] = None
 
     # ------------------------------------------------------------- control
     @property
@@ -191,12 +265,40 @@ class EventBus:
     def emit(self, event: Event, ts: Optional[float] = None) -> None:
         if not self._enabled:
             return
-        rec = {"ts": time.time() if ts is None else ts, "kind": event.kind}
-        rec.update(event.to_fields())
+        # one dict copy, keys added in place: this runs once per RPC
+        # receipt on traced hot paths, so no intermediate dicts
+        rec = dict(event.__dict__)
+        rec["kind"] = event.kind
+        rec["ts"] = time.time() if ts is None else ts
+        rec["mono"] = time.monotonic()
+        if self.trace_id is not None:
+            rec["trace"] = self.trace_id
+        if self.proc is not None and not rec.get("proc"):
+            # events that NAME a process (ClockSync's synced peer,
+            # ForwardDropped's shedding worker) keep their own label; the
+            # bus label only fills the gap for everything else
+            rec["proc"] = self.proc
+        self._admit(rec)
+
+    def ingest(self, rec: Dict[str, Any]) -> None:
+        """Adopt a record stamped by a *remote* bus (trace forwarding): the
+        sender's ``seq`` is preserved as ``rseq`` (per-proc ordering), a
+        fresh local ``seq`` is stamped, and the record flows through the
+        same counters/ring/sinks as a local emit — so forwarded events show
+        up in live ``tail``/``metrics`` and land in the same trace file."""
+        if not self._enabled:
+            return
+        rec = dict(rec)
+        if "seq" in rec:
+            rec["rseq"] = rec.pop("seq")
+        self._admit(rec)
+
+    def _admit(self, rec: Dict[str, Any]) -> None:
         with self._lock:
             self._seq += 1
             rec["seq"] = self._seq
-            self.counters[event.kind] = self.counters.get(event.kind, 0) + 1
+            kind = rec.get("kind", "event")
+            self.counters[kind] = self.counters.get(kind, 0) + 1
             self._recent.append(rec)
             dead = []
             for sink in self._sinks:

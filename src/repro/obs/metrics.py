@@ -16,13 +16,19 @@ framing (or just hit ``metrics`` and split lines) can scrape it.
 from __future__ import annotations
 
 import threading
+import time
 from typing import Any, Dict, Optional, Tuple
 
 from repro.obs.events import EventBus, get_bus
-from repro.service.transport import JsonRPCServer, SocketTransport
+from repro.service.transport import (JsonRPCServer, SocketTransport,
+                                     TransportError)
 
 __all__ = ["render_metrics", "ObsService", "ObsServer", "ObsClient",
-           "serve_obs"]
+           "ObsUnreachable", "serve_obs"]
+
+
+class ObsUnreachable(RuntimeError):
+    """The obs endpoint stayed unreachable through every retry."""
 
 
 def render_metrics(bus: EventBus, prefix: str = "repro") -> str:
@@ -117,18 +123,47 @@ def serve_obs(bus: Optional[EventBus] = None, host: str = "127.0.0.1",
 
 
 class ObsClient:
-    """Client of an ``ObsServer``: scrape metrics text, tail events."""
+    """Client of an ``ObsServer``: scrape metrics text, tail events.
+
+    Connection is lazy and self-healing: each request (re)dials on demand
+    and retries refused/reset connections with bounded exponential backoff
+    — ``python -m repro.obs tail`` started a beat before the run opens its
+    endpoint just waits it out, and an endpoint restart costs one retried
+    call. ``ObsUnreachable`` is raised only once the retry budget is
+    spent."""
 
     def __init__(self, address: str, timeout: float = 10.0,
-                 wire: str = "auto"):
+                 wire: str = "auto", connect_retries: int = 5,
+                 retry_backoff_s: float = 0.25):
         from repro.service.dispatch import parse_tcp_address
-        host, port = parse_tcp_address(address)
-        self.transport = SocketTransport(host, port, timeout=timeout,
-                                         wire=wire)
+        self.address = parse_tcp_address(address)
+        self._timeout = timeout
+        self._wire = wire
+        self._retries = max(0, int(connect_retries))
+        self._backoff_s = retry_backoff_s
+        self.transport: Optional[SocketTransport] = None
         self.cursor = 0
 
     def _request(self, req: Dict[str, Any]) -> Dict[str, Any]:
-        resp = self.transport.request(req)
+        delay = self._backoff_s
+        resp = None
+        for attempt in range(self._retries + 1):
+            try:
+                if self.transport is None:
+                    self.transport = SocketTransport(
+                        *self.address, timeout=self._timeout,
+                        connect_retries=1, wire=self._wire)
+                resp = self.transport.request(req)
+                break
+            except (TransportError, ConnectionError, OSError) as e:
+                self.close()
+                if attempt == self._retries:
+                    raise ObsUnreachable(
+                        f"obs endpoint tcp://{self.address[0]}:"
+                        f"{self.address[1]} unreachable after "
+                        f"{self._retries + 1} attempt(s): {e}") from e
+                time.sleep(delay)
+                delay = min(delay * 2, 2.0)
         if not resp.get("ok"):
             raise RuntimeError(
                 f"obs endpoint rejected {req.get('op')!r}: "
@@ -149,4 +184,6 @@ class ObsClient:
         return resp["events"]
 
     def close(self) -> None:
-        self.transport.close()
+        if self.transport is not None:
+            self.transport.close()
+            self.transport = None

@@ -82,18 +82,22 @@ class MemorySink:
 
 def read_trace(path: str, kind: Optional[str] = None) -> List[Dict[str, Any]]:
     """Load a JSONL trace back into record dicts (optionally one kind).
-    A torn final line — the signature of a crash mid-append — is dropped;
-    any earlier malformed line raises."""
+    A torn final record — the signature of a SIGKILL mid-append — is
+    dropped whether or not the tear includes the trailing newline (the
+    store journal has the same tolerance); any earlier malformed line
+    still raises."""
     out: List[Dict[str, Any]] = []
     with open(path) as f:
         lines = f.read().split("\n")
+    last_content = max((i for i, ln in enumerate(lines) if ln.strip()),
+                       default=-1)
     for i, line in enumerate(lines):
         if not line.strip():
             continue
         try:
             rec = json.loads(line)
         except ValueError:
-            if i == len(lines) - 1:
+            if i == last_content:
                 break
             raise
         if kind is None or rec.get("kind") == kind:

@@ -155,6 +155,12 @@ class CoordinatorService:
             self._prune()
             return {"version": self._version}
 
+    def _op_obs_trace(self, req) -> Dict[str, Any]:
+        # distributed-tracing hello (repro.obs.forward): membership events
+        # (joins, prunes) get tagged + forwarded into the driver's trace
+        from repro.obs.forward import adopt_trace
+        return adopt_trace(req, self.bus)
+
     # ------------------------------------------------------------ internals
     def _prune(self) -> None:
         now = self._clock()
@@ -207,6 +213,7 @@ class CoordinatorClient:
         self._request_timeout = request_timeout
         self._wire = wire
         self._transport: Optional[SocketTransport] = None
+        self._trace: Optional[str] = None
         self._lock = threading.Lock()
 
     def _request(self, req: Dict[str, Any]) -> Dict[str, Any]:
@@ -218,6 +225,7 @@ class CoordinatorClient:
                         connect_retries=1,
                         request_timeout=self._request_timeout,
                         wire=self._wire)
+                    self._transport.trace = self._trace
                 resp = self._transport.request(req)
             except (TransportError, ConnectionError, OSError) as e:
                 self.close()
@@ -256,6 +264,31 @@ class CoordinatorClient:
 
     def version(self) -> int:
         return self._request({"op": "version"})["version"]
+
+    def enable_trace(self, trace_id: str, collector: Optional[str] = None,
+                     bus=None) -> bool:
+        """Send the ``obs_trace`` hello so the coordinator tags + forwards
+        its membership events into this trace. Best-effort and never
+        raises: False means the coordinator is away or predates tracing
+        (the run proceeds with the driver-side view only). ``_trace``
+        request metadata keeps riding across reconnects either way."""
+        self._trace = trace_id
+        peer = f"coordinator@{self.address[0]}:{self.address[1]}"
+        from repro.obs.forward import propagate_trace
+        try:
+            with self._lock:
+                if self._transport is None:
+                    self._transport = SocketTransport(
+                        *self.address, timeout=self._connect_timeout,
+                        connect_retries=1,
+                        request_timeout=self._request_timeout,
+                        wire=self._wire)
+                return propagate_trace(self._transport, trace_id,
+                                       collector=collector, proc=peer,
+                                       bus=bus)
+        except (TransportError, ConnectionError, OSError):
+            self.close()
+            return False
 
     def close(self) -> None:
         if self._transport is not None:
@@ -375,6 +408,17 @@ class ElasticWorkerPoolExecutor(WorkerPoolExecutor):
                 if getattr(w, "accepts_runner_spec", False) and \
                         w.runner_spec is None:
                     w.runner_spec = {}
+
+    def enable_trace(self, trace_id: Optional[str] = None,
+                     collector: Optional[str] = None) -> str:
+        """Trace the whole elastic topology: the pool + every current
+        worker (via the base executor), plus the coordinator's membership
+        events. Workers that join later are handshaked by
+        ``WorkerPool.add_worker`` from the pool's stored trace context."""
+        tid = super().enable_trace(trace_id=trace_id, collector=collector)
+        self.coordinator.enable_trace(tid, collector=collector,
+                                      bus=self.pool.bus)
+        return tid
 
     def sync_roster(self, force: bool = False) -> None:
         """Reconcile the pool with the coordinator's live roster: joins

@@ -44,7 +44,7 @@ from repro.core.pipetune import TrialRecord
 from repro.core.profiler import EpochProfile
 from repro.core.schedulers import TrialProposal
 from repro.core.worker import TrialCompletion, Worker, WorkerCapabilities
-from repro.obs.events import EpochCompleted
+from repro.obs.events import EpochCompleted, RpcCompleted
 from repro.service.transport import SocketTransport, TransportError
 
 __all__ = ["RemoteWorker", "WorkerError", "WorkerLostError",
@@ -168,6 +168,11 @@ class RemoteWorker(Worker):
         self._last_trial: Optional[str] = None
         self._last_epochs = 0
         self._epochs_seen: Dict[str, int] = {}      # trial -> epochs emitted
+        # tracing: once the peer forwards its own events to a collector
+        # (enable_trace), the driver stops synthesizing EpochCompleted from
+        # returned records — the worker-side stream is the real one
+        self._peer_traced = False
+        self._pending_compute_s = 0.0   # remote compute seen since last rpc
         # request_timeout=None: a remote trial legitimately runs longer
         # than any sane connect timeout
         try:
@@ -217,6 +222,19 @@ class RemoteWorker(Worker):
                 "the worker process's own CLI defaults)")
         # (re)build the worker's mirror runner; fresh trial state per job
         self._request({"op": "bind", "spec": dict(self.runner_spec)})
+
+    def enable_trace(self, trace_id: str,
+                     collector: Optional[str] = None) -> bool:
+        """Send the ``obs_trace`` hello so the worker process tags its
+        events with this trace and (when ``collector`` is set) forwards
+        them home. Returns False for a legacy worker — the run proceeds
+        untraced on that peer, with driver-side synthesis as before."""
+        from repro.obs.forward import propagate_trace
+        label = f"tcp://{self.address[0]}:{self.address[1]}"
+        ok = propagate_trace(self.transport, trace_id, collector=collector,
+                             proc=label, bus=self.bus)
+        self._peer_traced = bool(ok and collector)
+        return ok
 
     def clone(self, dst_id: str, src_id: str) -> None:
         # wave-boundary semantics hold because the pool only clones while
@@ -295,23 +313,43 @@ class RemoteWorker(Worker):
         self._last_epochs = len(rec.epochs)
         if self.bus.enabled:
             # records accumulate epochs across rung resumes:
-            # emit only what this completion added
+            # count (and emit) only what this completion added
             label = f"tcp://{self.address[0]}:{self.address[1]}"
             seen = self._epochs_seen.get(rec.trial_id, 0)
-            for i in range(seen, len(rec.epochs)):
-                self.bus.emit(EpochCompleted(
-                    trial_id=rec.trial_id, worker=label, epoch=i,
-                    duration_s=rec.epochs[i].duration_s))
+            self._pending_compute_s += sum(
+                float(e.duration_s) for e in rec.epochs[seen:])
+            if not self._peer_traced:
+                # the worker emits the real per-epoch stream itself when
+                # traced; synthesizing here too would double-count
+                for i in range(seen, len(rec.epochs)):
+                    self.bus.emit(EpochCompleted(
+                        trial_id=rec.trial_id, worker=label, epoch=i,
+                        duration_s=rec.epochs[i].duration_s))
             self._epochs_seen[rec.trial_id] = len(rec.epochs)
         return TrialCompletion(rec.trial_id, rec.score(runner.objective))
 
+    def _rpc_done(self, op: str, dt: float, n: int) -> None:
+        """Emit the round-trip receipt: overhead is wall duration minus the
+        remote compute the installed record(s) accounted for (clamped —
+        simulated epoch durations can exceed wall time)."""
+        self.bus.emit(RpcCompleted(
+            op=op, peer=f"tcp://{self.address[0]}:{self.address[1]}",
+            duration_s=dt,
+            overhead_s=max(0.0, dt - self._pending_compute_s), n=n))
+
     def _run_one(self, trial: TrialProposal, epochs: int) -> None:
         try:
+            t0 = time.monotonic()
             resp = self._request({
                 "op": "run", "workload": self.workload,
                 "trial_id": trial.trial_id,
                 "hparams": dict(trial.hparams), "epochs": int(epochs)})
-            self._completions.put(self._install(resp["record"]))
+            dt = time.monotonic() - t0
+            self._pending_compute_s = 0.0
+            completion = self._install(resp["record"])
+            if self.bus.enabled:
+                self._rpc_done("run", dt, 1)
+            self._completions.put(completion)
         except BaseException as e:                      # noqa: BLE001
             self._completions.put(TrialCompletion(
                 trial.trial_id, float("nan"), error=e))
@@ -324,11 +362,13 @@ class RemoteWorker(Worker):
         server finished before dying re-run deterministically elsewhere
         (the record installs once, from whichever run was acked)."""
         try:
+            t0 = time.monotonic()
             resp = self._request({
                 "op": "run_many", "workload": self.workload,
                 "trials": [{"trial_id": t.trial_id,
                             "hparams": dict(t.hparams),
                             "epochs": int(e)} for t, e in items]})
+            batch_dt = time.monotonic() - t0
         except WorkerLostError as e:
             for trial, _ in items:
                 self._completions.put(TrialCompletion(
@@ -347,6 +387,7 @@ class RemoteWorker(Worker):
                     trial.trial_id, float("nan"), error=e))
             return
         results = resp.get("results", [])
+        self._pending_compute_s = 0.0
         for (trial, _), sub in zip(items, results):
             try:
                 if not sub.get("ok"):
@@ -358,6 +399,8 @@ class RemoteWorker(Worker):
             except BaseException as e:                  # noqa: BLE001
                 self._completions.put(TrialCompletion(
                     trial.trial_id, float("nan"), error=e))
+        if self.bus.enabled:
+            self._rpc_done("run_many", batch_dt, len(items))
         for trial, _ in items[len(results):]:           # truncated response
             self._completions.put(TrialCompletion(
                 trial.trial_id, float("nan"),

@@ -52,7 +52,8 @@ from repro.obs.events import StoreRefit, get_bus
 
 __all__ = ["GroundTruthService"]
 
-_OPS = ("version", "lookup", "add", "refit", "snapshot", "batch")
+_OPS = ("version", "lookup", "add", "refit", "snapshot", "batch",
+        "obs_trace")
 
 
 class GroundTruthService:
@@ -95,6 +96,13 @@ class GroundTruthService:
 
     def _op_version(self, req) -> dict:
         return {}
+
+    def _op_obs_trace(self, req) -> dict:
+        # distributed-tracing hello (repro.obs.forward): adopt the trace
+        # context, echo the trace id (the trace-aware signal), start
+        # forwarding local events when the hello names a collector
+        from repro.obs.forward import adopt_trace
+        return adopt_trace(req, self.bus)
 
     def _op_lookup(self, req) -> dict:
         score, cfg = self.store.lookup(

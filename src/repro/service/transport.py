@@ -163,6 +163,11 @@ class SocketTransport:
         self.addr = (host, port)
         self.max_frame = max_frame
         self._codec = _JSON
+        # distributed-tracing context: once the obs_trace hello succeeds
+        # (repro.obs.forward.propagate_trace) every request carries the
+        # trace id as `_trace` metadata; services ignore unknown keys, so
+        # this is free interop with untraced/legacy peers
+        self.trace: Optional[str] = None
         self._sock = self._connect(timeout, connect_retries, retry_backoff_s)
         if request_timeout is not _SAME_AS_CONNECT:
             self._sock.settimeout(request_timeout)
@@ -208,6 +213,9 @@ class SocketTransport:
 
     def request(self, req: Dict[str, Any]) -> Dict[str, Any]:
         peer = f"{self.addr[0]}:{self.addr[1]}"
+        if (self.trace is not None and "_trace" not in req
+                and not str(req.get("op", "")).startswith("_")):
+            req = {**req, "_trace": self.trace}
         try:
             with self._lock:
                 _send_frame(self._sock, self._codec.encode(req))
@@ -259,10 +267,28 @@ class StoreClient:
         self._known_version: Optional[int] = None
         self.hits = 0
         self.misses = 0
+        # tracing: set by enable_trace; every RPC then emits RpcCompleted
+        # on this bus so store stalls show up in the merged timeline
+        self.bus = None
+        addr = getattr(transport, "addr", None)
+        self.peer = (f"store@{addr[0]}:{addr[1]}"
+                     if isinstance(addr, tuple) and len(addr) == 2
+                     else "store@inproc")
 
     # -------------------------------------------------------------- plumbing
     def _request(self, req: Dict[str, Any]) -> Dict[str, Any]:
-        resp = self.transport.request(req)
+        bus = self.bus
+        if bus is not None and bus.enabled:
+            t0 = time.monotonic()
+            resp = self.transport.request(req)
+            dt = time.monotonic() - t0
+            from repro.obs.events import RpcCompleted
+            op = str(req.get("op", ""))
+            n = (len(req.get("requests") or ()) if op == "batch" else 1)
+            bus.emit(RpcCompleted(op=op, peer=self.peer, duration_s=dt,
+                                  overhead_s=dt, n=max(1, n)))
+        else:
+            resp = self.transport.request(req)
         if not resp.get("ok"):
             raise StoreError(resp.get("error", "store request failed"))
         v = resp.get("version")
@@ -270,6 +296,24 @@ class StoreClient:
             with self._lock:
                 self._known_version = v
         return resp
+
+    def enable_trace(self, trace_id: str, collector: Optional[str] = None,
+                     bus=None) -> bool:
+        """Join this client's store traffic to a distributed trace: emit
+        ``RpcCompleted`` per round-trip on ``bus`` and (for TCP stores)
+        send the ``obs_trace`` hello so the *service* tags + forwards its
+        own events. In-process stores share our process, so their service
+        is simply pointed at the traced bus. False = legacy peer."""
+        from repro.obs.events import get_bus
+        self.bus = bus if bus is not None else get_bus()
+        if isinstance(self.transport, InprocTransport):
+            if hasattr(self.transport.service, "bus"):
+                self.transport.service.bus = self.bus
+            return True
+        from repro.obs.forward import propagate_trace
+        return propagate_trace(self.transport, trace_id,
+                               collector=collector, proc=self.peer,
+                               bus=self.bus)
 
     def version(self) -> int:
         return self._request({"op": "version"})["version"]

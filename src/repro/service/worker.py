@@ -27,8 +27,10 @@ import argparse
 import importlib
 import os
 import threading
+import time
 from typing import Any, Dict, Optional, Tuple
 
+from repro.obs.events import EpochCompleted, TrialStarted, get_bus
 from repro.service.dispatch import parse_tcp_address, record_to_payload
 from repro.service.transport import JsonRPCServer
 
@@ -54,6 +56,8 @@ class TrialWorkerService:
         self.runner = None
         self.spec: Optional[dict] = None
         self._store_client = None
+        self.bus = get_bus()
+        self._epochs_seen: Dict[str, int] = {}  # trial -> epochs emitted
         # one worker process executes one trial at a time: the server is
         # threaded (one handler per connection), so bind/clone/run from
         # different connections must not interleave on the shared runner
@@ -75,6 +79,9 @@ class TrialWorkerService:
         if self._store_client is not None:
             self._store_client.close()
             self._store_client = None
+        sink = getattr(self.bus, "_forward_sink", None)
+        if sink is not None:        # ship the tail of the trace home
+            sink.flush(timeout=1.0)
 
     # ------------------------------------------------------------------ ops
     def _op_hello(self, req) -> Dict[str, Any]:
@@ -91,8 +98,20 @@ class TrialWorkerService:
         with self._lock:
             self.runner = self._build_runner(spec)
             self.spec = spec
+            self._epochs_seen = {}      # fresh trial state per job
         return {"tuner": spec["tuner"], "backend": spec["backend"],
                 "store": spec.get("store")}
+
+    def _op_obs_trace(self, req) -> Dict[str, Any]:
+        # distributed-tracing hello (repro.obs.forward): adopt the
+        # client-assigned trace context + proc label, echo the trace id,
+        # forward local events to the named collector
+        from repro.obs.forward import adopt_trace
+        out = adopt_trace(req, self.bus)
+        with self._lock:
+            if self._store_client is not None:
+                self._wire_store_trace(self._store_client)
+        return out
 
     def _op_clone(self, req) -> Dict[str, Any]:
         with self._lock:
@@ -103,10 +122,11 @@ class TrialWorkerService:
     def _op_run(self, req) -> Dict[str, Any]:
         with self._lock:
             runner = self._require_runner()
-            rec = runner.run_trial(str(req["workload"]),
-                                   str(req["trial_id"]),
-                                   dict(req["hparams"]), int(req["epochs"]))
-            return {"record": record_to_payload(rec)}
+            rec = self._run_trial(runner, str(req["workload"]),
+                                  str(req["trial_id"]),
+                                  dict(req["hparams"]), int(req["epochs"]))
+        self._kick_forwarder()
+        return {"record": record_to_payload(rec)}
 
     def _op_run_many(self, req) -> Dict[str, Any]:
         """A wave's worth of trials in one round-trip. Trials run in
@@ -121,22 +141,79 @@ class TrialWorkerService:
             runner = self._require_runner()
             for t in req.get("trials", []):
                 try:
-                    rec = runner.run_trial(workload, str(t["trial_id"]),
-                                           dict(t["hparams"]),
-                                           int(t["epochs"]))
+                    rec = self._run_trial(runner, workload,
+                                          str(t["trial_id"]),
+                                          dict(t["hparams"]),
+                                          int(t["epochs"]))
                     results.append({"ok": True,
                                     "record": record_to_payload(rec)})
                 except Exception as e:              # noqa: BLE001
                     results.append(
                         {"ok": False,
                          "error": f"{type(e).__name__}: {e}"})
+        self._kick_forwarder()
         return {"results": results}
+
+    def _kick_forwarder(self) -> None:
+        """Nudge the forwarding sink at the end of each run request so the
+        wave's events ship before the driver acts on the response — a
+        worker SIGKILL'd (or a run ending) right after the last wave would
+        otherwise lose everything queued since the previous 0.2s tick."""
+        sink = getattr(self.bus, "_forward_sink", None)
+        if sink is not None:
+            sink.kick()
 
     # ------------------------------------------------------------ internals
     def _require_runner(self):
         if self.runner is None:
             raise RuntimeError("no runner bound (send a 'bind' op first)")
         return self.runner
+
+    def _run_trial(self, runner, workload: str, trial_id: str,
+                   hparams: dict, epochs: int):
+        """``runner.run_trial`` plus, when traced, the worker-side event
+        stream: ``trial_started`` at entry, then one ``epoch_completed``
+        per *new* epoch with its timestamp allocated across the measured
+        wall interval proportionally to epoch duration (sim backends
+        report simulated seconds, so raw ``duration_s`` is not wall time
+        — the allocation keeps worker timelines causally ordered)."""
+        if not self.bus.enabled:
+            return runner.run_trial(workload, trial_id, hparams, epochs)
+        label = self.bus.proc or f"worker:{os.getpid()}"
+        t0 = time.time()
+        self.bus.emit(TrialStarted(trial_id=trial_id, worker=label,
+                                   epochs=int(epochs)))
+        rec = runner.run_trial(workload, trial_id, hparams, epochs)
+        t1 = time.time()
+        seen = self._epochs_seen.get(trial_id, 0)
+        new = rec.epochs[seen:]
+        self._epochs_seen[trial_id] = len(rec.epochs)
+        if new:
+            weights = [max(0.0, float(e.duration_s)) for e in new]
+            total = sum(weights)
+            if total <= 0.0:
+                weights, total = [1.0] * len(new), float(len(new))
+            done = 0.0
+            for i, e in enumerate(new, start=seen):
+                done += weights[i - seen]
+                self.bus.emit(EpochCompleted(
+                    trial_id=trial_id, worker=label, epoch=i,
+                    duration_s=float(e.duration_s)),
+                    ts=t0 + (t1 - t0) * (done / total))
+        return rec
+
+    def _wire_store_trace(self, client) -> None:
+        """Join the worker's store traffic to the adopted trace: store
+        RPCs emit ``RpcCompleted`` on this process's bus and carry the
+        ``_trace`` metadata (the driver handshakes the store *service*
+        itself; re-helloing from every worker would duplicate sinks)."""
+        if self.bus.trace_id is None:
+            return
+        client.bus = self.bus
+        try:
+            client.transport.trace = self.bus.trace_id
+        except AttributeError:
+            pass
 
     def _build_runner(self, spec: Dict[str, Any]):
         # lazy: repro.api sits above repro.service in the layer order
@@ -149,6 +226,7 @@ class TrialWorkerService:
             from repro.service.transport import SocketTransport, StoreClient
             host, port = parse_tcp_address(store)
             groundtruth = StoreClient(SocketTransport(host, port))
+            self._wire_store_trace(groundtruth)
         if self._store_client is not None:
             self._store_client.close()
         self._store_client = groundtruth

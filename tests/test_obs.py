@@ -69,9 +69,10 @@ def test_event_roundtrip_and_unknown_kind():
     with pytest.raises(ValueError, match="unknown event kind"):
         event_from_dict({"kind": "from_the_future"})
     assert set(EVENT_TYPES) == {
-        "trial_dispatched", "trial_completed", "epoch_completed",
-        "worker_joined", "worker_retired", "heartbeat_missed", "resharded",
-        "store_refit"}
+        "trial_dispatched", "trial_started", "trial_completed",
+        "epoch_completed", "worker_joined", "worker_retired",
+        "heartbeat_missed", "resharded", "store_refit", "rpc_completed",
+        "clock_sync", "forward_dropped"}
     assert all(issubclass(c, Event) for c in EVENT_TYPES.values())
 
 

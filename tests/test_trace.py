@@ -1,0 +1,513 @@
+"""Distributed tracing + trace analysis (PR 8 acceptance surface): the
+``obs_trace`` negotiation, the event-forwarding sink/collector pair, the
+span/critical-path analyzer, the torn-trace and reconnecting-client
+satellites, and the ``python -m repro.obs`` CLI."""
+import argparse
+import json
+import socket
+import subprocess
+import sys
+import threading
+import time
+
+import pytest
+
+import repro.obs.__main__ as obs_cli
+from repro.api import Experiment, RemoteWorker, WorkerPoolExecutor
+from repro.core.job import HPTJob, Param, SearchSpace
+from repro.obs.events import EventBus, new_trace_id
+from repro.obs.forward import ForwardingSink, propagate_trace, \
+    start_collector
+from repro.obs.metrics import ObsClient, ObsUnreachable, serve_obs
+from repro.obs.sinks import JsonlSink, MemorySink, read_trace
+from repro.obs.trace import analyze_trace, build_trace, load_events, \
+    render_report
+from repro.service import (GroundTruthService, GroundTruthTCPServer,
+                           JsonRPCServer, SocketTransport, StoreClient,
+                           TrialWorkerService, serve_worker)
+
+
+def _space():
+    return SearchSpace([
+        Param("batch_size", "choice", choices=(32, 64, 256, 1024)),
+        Param("learning_rate", "log", 0.001, 0.1),
+    ])
+
+
+def _job(seed=0, epochs=9):
+    return HPTJob(workload="lenet-mnist", space=_space(), max_epochs=epochs,
+                  seed=seed)
+
+
+def _free_port() -> int:
+    s = socket.socket()
+    s.bind(("127.0.0.1", 0))
+    port = s.getsockname()[1]
+    s.close()
+    return port
+
+
+def _serve(handler):
+    server = JsonRPCServer(("127.0.0.1", 0), handler)
+    threading.Thread(target=server.serve_forever, daemon=True).start()
+    return server
+
+
+# ------------------------------------------------------- forwarding sink
+
+def test_forwarding_sink_drops_oldest_when_bounded(monkeypatch):
+    """The hot path never blocks: a full queue sheds the OLDEST record and
+    counts it (the flusher is frozen here so the bound is what's tested)."""
+    monkeypatch.setattr(ForwardingSink, "_run", lambda self: None)
+    sink = ForwardingSink("tcp://127.0.0.1:9", maxlen=8, batch=64)
+    for i in range(20):
+        sink({"seq": i})
+    assert sink.dropped_total == 12
+    assert [r["seq"] for r in sink._queue] == list(range(12, 20))
+    sink.close(timeout=0.2)             # dead collector: sheds, never hangs
+    sink({"seq": 99})                   # post-close emit is a no-op
+    assert len(sink._queue) == 8
+
+
+def test_forwarding_sink_ships_batches_and_drop_receipts():
+    home = EventBus()
+    mem = MemorySink()
+    home.add_sink(mem)
+    collector = start_collector(home)
+    sink = ForwardingSink(collector.address, proc="w", batch=4,
+                          flush_interval_s=0.05)
+    try:
+        for i in range(6):
+            sink({"kind": "epoch_completed", "seq": i, "ts": float(i),
+                  "proc": "w", "trial_id": "t", "epoch": i})
+        assert sink.flush(timeout=5.0)
+        assert sink.dropped_total == 0
+        got = mem.of_kind("epoch_completed")
+        assert len(got) == 6
+        # remote seq is preserved as rseq; a fresh local seq is stamped
+        assert [r["rseq"] for r in got] == list(range(6))
+        assert all(r["proc"] == "w" and r["seq"] > 0 for r in got)
+        # a shed queue is reported as a forward_dropped receipt
+        with sink._lock:
+            sink._unreported_drops += 3
+            sink._idle.clear()
+        assert sink.flush(timeout=5.0)
+        drops = mem.of_kind("forward_dropped")
+        assert drops and drops[-1]["dropped"] == 3
+        assert drops[-1]["proc"] == "w"
+    finally:
+        sink.close()
+        collector.close(drain_s=0.1)
+
+
+# ------------------------------------------------- obs_trace negotiation
+
+def test_propagate_trace_trace_aware_peer_echoes_and_syncs():
+    svc = TrialWorkerService()
+    svc.bus = EventBus()
+    server = serve_worker(svc, port=0, background=True)
+    transport = SocketTransport("127.0.0.1", server.server_address[1])
+    bus = EventBus().enable()
+    tid = new_trace_id()
+    try:
+        assert propagate_trace(transport, tid, proc="tcp://w:1", bus=bus)
+        assert transport.trace == tid
+        assert svc.bus.trace_id == tid       # peer adopted the context
+        syncs = bus.events("clock_sync")
+        assert len(syncs) == 1
+        assert syncs[0]["proc"] == "tcp://w:1"
+        assert syncs[0]["rtt_s"] >= 0.0
+    finally:
+        transport.close()
+        server.shutdown()
+        svc.close()
+
+
+def test_propagate_trace_legacy_and_generic_ok_peers_stay_untraced():
+    legacy = _serve(lambda req: {"ok": False,
+                                 "error": f"unknown op {req.get('op')!r}"})
+    generic = _serve(lambda req: {"ok": True})   # ok but no trace echo
+    try:
+        for server in (legacy, generic):
+            t = SocketTransport("127.0.0.1", server.server_address[1],
+                                wire="json")
+            assert propagate_trace(t, new_trace_id(), proc="p") is False
+            assert t.trace is None               # no _trace stamping
+            t.close()
+    finally:
+        legacy.shutdown()
+        generic.shutdown()
+
+
+def test_traced_transport_stamps_trace_metadata_only_on_public_ops():
+    seen = []
+
+    def handler(req):
+        seen.append(dict(req))
+        return {"ok": True}
+
+    server = _serve(handler)
+    t = SocketTransport("127.0.0.1", server.server_address[1], wire="json")
+    try:
+        t.trace = "f" * 16
+        t.request({"op": "version"})
+        assert seen[-1].get("_trace") == "f" * 16
+    finally:
+        t.close()
+        server.shutdown()
+
+
+# ------------------------------------------- traced remote-worker stream
+
+def test_traced_remote_worker_forwards_without_duplicate_epochs():
+    """The worker ships its own trial_started/per-epoch stream home; the
+    driver must NOT synthesize a second epoch stream from the returned
+    record — every (trial, epoch) appears exactly once, stamped with the
+    worker's proc label."""
+    svc = TrialWorkerService()
+    svc.bus = EventBus()                # isolate from the process default
+    server = serve_worker(svc, port=0, background=True)
+    addr = f"tcp://127.0.0.1:{server.server_address[1]}"
+
+    bus = EventBus()
+    mem = MemorySink()
+    bus.add_sink(mem)
+    collector = start_collector(bus)
+    ex = WorkerPoolExecutor([RemoteWorker(addr)])
+    ex.attach_bus(bus)
+    tid = ex.enable_trace(collector=collector.address)
+    ex._trace_collector = collector     # closed by ex.close(), CLI-style
+    try:
+        res = (Experiment(_job()).with_tuner("v1").with_backend("sim")
+               .with_scheduler("hyperband").run(executor=ex))
+        assert res.best_hparams
+        fwd = getattr(svc.bus, "_forward_sink", None)
+        assert fwd is not None and fwd.flush(timeout=5.0)
+    finally:
+        ex.close()
+        server.shutdown()
+        svc.close()
+
+    epochs = mem.of_kind("epoch_completed")
+    assert epochs, "worker epoch stream never arrived"
+    keys = [(r["trial_id"], r["epoch"]) for r in epochs]
+    assert len(keys) == len(set(keys)), "duplicate epoch events"
+    assert all(r["proc"] == addr for r in epochs), \
+        "driver synthesized epochs for a traced peer"
+    started = mem.of_kind("trial_started")
+    assert {r["trial_id"] for r in started} == \
+        {r["trial_id"] for r in mem.of_kind("trial_dispatched")}
+    rpcs = mem.of_kind("rpc_completed")
+    assert any(r["op"] in ("run", "run_many") for r in rpcs)
+    assert all(r.get("trace") == tid for r in mem.records
+               if r["kind"] != "clock_sync" or r.get("trace"))
+
+
+# ----------------------------------------------------------- the analyzer
+
+def _rec(kind, ts, seq, **kw):
+    r = {"kind": kind, "ts": ts, "seq": seq, "trace": "t" * 16}
+    r.update(kw)
+    return r
+
+
+def _synthetic_run():
+    """Driver + one skewed worker (+0.5s clock), two trials; t2 is gated
+    by t1's completion; t1 resumes once (two segments)."""
+    w = "tcp://w:1"
+    recs = [
+        _rec("clock_sync", 0.0, 1, proc=w, offset_s=0.5, rtt_s=0.001),
+        _rec("trial_dispatched", 0.0, 2, proc="driver", trial_id="t1",
+             worker=w),
+        # worker-stamped events carry the +0.5s skew
+        _rec("trial_started", 0.51, 3, proc=w, trial_id="t1", worker=w),
+        _rec("epoch_completed", 0.7, 4, proc=w, trial_id="t1", worker=w,
+             epoch=0, duration_s=0.19),
+        _rec("trial_completed", 0.3, 5, proc="driver", trial_id="t1",
+             worker=w, score=0.5),
+        _rec("rpc_completed", 0.3, 6, proc="driver", op="run", peer=w,
+             duration_s=0.3, overhead_s=0.05),
+        # rung resume: second segment of t1
+        _rec("trial_dispatched", 0.4, 7, proc="driver", trial_id="t1",
+             worker=w),
+        _rec("trial_started", 0.91, 8, proc=w, trial_id="t1", worker=w),
+        _rec("epoch_completed", 1.1, 9, proc=w, trial_id="t1", worker=w,
+             epoch=1, duration_s=0.19),
+        _rec("trial_completed", 0.7, 10, proc="driver", trial_id="t1",
+             worker=w, score=0.8),
+        _rec("rpc_completed", 0.7, 11, proc="driver", op="run", peer=w,
+             duration_s=0.3, overhead_s=0.04),
+        # t2 dispatched only after t1 fully completed (the gating chain)
+        _rec("trial_dispatched", 0.75, 12, proc="driver", trial_id="t2",
+             worker=w),
+        _rec("trial_completed", 1.0, 13, proc="driver", trial_id="t2",
+             worker=w, score=0.9),
+        _rec("rpc_completed", 1.0, 14, proc="driver", op="refit",
+             peer="store@h:1", duration_s=0.02, overhead_s=0.02),
+    ]
+    return recs
+
+
+def test_build_trace_segments_per_rung_resume_and_skew_correction():
+    tr = build_trace(_synthetic_run())
+    assert set(tr.trials) == {"t1", "t2"}
+    t1 = tr.trials["t1"].segments
+    assert len(t1) == 2 and tr.trials["t1"].complete
+    # skew-corrected: worker 0.51 - 0.5 offset = 0.01 after dispatch 0.0
+    assert t1[0].started_ts == pytest.approx(0.01)
+    assert t1[0].epochs[0]["ts"] == pytest.approx(0.2)
+    assert t1[1].started_ts == pytest.approx(0.41)
+    # each resume's epochs landed in its own segment
+    assert [e["epoch"] for e in t1[0].epochs] == [0]
+    assert [e["epoch"] for e in t1[1].epochs] == [1]
+    assert not tr.orphans
+
+
+def test_build_trace_slots_events_despite_residual_skew():
+    """A worker start that lands a hair BEFORE its dispatch after skew
+    correction (residual estimation error) still joins the segment."""
+    w = "tcp://w:1"
+    recs = [
+        _rec("trial_dispatched", 1.0, 1, proc="driver", trial_id="t",
+             worker=w),
+        _rec("trial_started", 0.9985, 2, proc=w, trial_id="t", worker=w),
+        _rec("trial_completed", 1.4, 3, proc="driver", trial_id="t",
+             worker=w, score=1.0),
+    ]
+    tr = build_trace(recs)
+    assert not tr.orphans
+    seg = tr.trials["t"].segments[0]
+    assert seg.started_ts == pytest.approx(0.9985)
+    assert seg.queue_wait_s == 0.0      # clamped, never negative
+
+
+def test_analyze_trace_breakdown_critical_path_and_stragglers():
+    report = analyze_trace(_synthetic_run())
+    assert report["trace_ids"] == ["t" * 16]
+    assert report["n_trials"] == 2 and report["n_segments"] == 3
+    assert report["n_orphans"] == 0
+    assert report["clock_offsets"]["tcp://w:1"] == pytest.approx(0.5)
+    b = report["breakdown"]
+    assert b["wall_s"] == pytest.approx(1.0)
+    assert b["rpc_overhead_s"] == pytest.approx(0.09)   # run ops only
+    assert b["store_wait_s"] == pytest.approx(0.02)
+    assert b["queue_wait_s"] == pytest.approx(0.01 + 0.01)
+    # the gating chain: t1 seg1 -> t1 seg2 -> t2
+    cp = report["critical_path"]
+    assert cp["n_segments"] == 3
+    assert [s["trial_id"] for s in cp["segments"]] == ["t1", "t1", "t2"]
+    assert cp["length_s"] == pytest.approx(1.0)
+    assert report["stragglers"][0]["worker"] == "tcp://w:1"
+    # one worker, serial segments: util <= 100% and busy = union of spans
+    row = report["workers"][0]
+    assert row["busy_s"] == pytest.approx(0.3 + 0.3 + 0.25)
+    assert row["util"] <= 1.0
+    text = render_report(report)
+    assert "wall-time breakdown" in text and "critical path" in text
+    json.dumps(report)                  # the whole report is JSON-safe
+
+
+def test_analyze_trace_flags_orphans_and_forward_drops():
+    recs = _synthetic_run() + [
+        _rec("epoch_completed", 0.5, 90, proc="tcp://w:1",
+             trial_id="ghost", worker="tcp://w:1", epoch=0,
+             duration_s=0.1),
+        _rec("forward_dropped", 0.6, 91, proc="tcp://w:1", dropped=7),
+    ]
+    report = analyze_trace(recs)
+    assert report["n_orphans"] == 1
+    assert report["orphan_trials"] == ["ghost"]
+    assert report["forward_dropped"] == 7
+    text = render_report(report)
+    assert "ORPHAN" in text and "dropped" in text
+
+
+# ------------------------------------------------- satellite: torn traces
+
+def test_read_trace_tolerates_torn_final_line(tmp_path):
+    good = json.dumps({"kind": "store_refit", "ts": 1.0, "seq": 1,
+                       "version": 1})
+    for tail in ('{"kind": "trial_co', '{"kind": "trial_co\n'):
+        p = tmp_path / "t.jsonl"
+        p.write_text(good + "\n" + tail)
+        assert [r["kind"] for r in read_trace(str(p))] == ["store_refit"]
+    # a torn line that is NOT final still raises: that is corruption
+    p = tmp_path / "bad.jsonl"
+    p.write_text('{"kind": "trial_co\n' + good + "\n")
+    with pytest.raises(ValueError):
+        read_trace(str(p))
+
+
+# ----------------------------------- satellite: self-healing obs client
+
+def test_obs_client_waits_out_a_slow_endpoint():
+    port = _free_port()
+    client = ObsClient(f"tcp://127.0.0.1:{port}", connect_retries=40,
+                       retry_backoff_s=0.05)
+    out = {}
+
+    def scrape():
+        try:
+            out["text"] = client.metrics()
+        except Exception as e:                      # noqa: BLE001
+            out["err"] = e
+
+    t = threading.Thread(target=scrape, daemon=True)
+    t.start()
+    time.sleep(0.4)                     # client is already retrying
+    server = serve_obs(EventBus(), port=port, background=True)
+    try:
+        t.join(timeout=10.0)
+        assert "repro_events_total" in out.get("text", ""), out
+    finally:
+        client.close()
+        server.shutdown()
+
+
+def test_obs_client_raises_unreachable_after_budget():
+    port = _free_port()                 # nothing ever listens here
+    client = ObsClient(f"tcp://127.0.0.1:{port}", connect_retries=1,
+                       retry_backoff_s=0.01)
+    with pytest.raises(ObsUnreachable, match="unreachable"):
+        client.metrics()
+    client.close()
+
+
+# ------------------------------------------------------ satellite: CLI
+
+@pytest.fixture
+def obs_endpoint():
+    bus = EventBus()
+    server = serve_obs(bus, port=0, background=True)
+    from repro.obs.events import StoreRefit
+    bus.emit(StoreRefit(version=1, n_entries=3))
+    bus.emit(StoreRefit(version=2, n_entries=5))
+    yield f"tcp://127.0.0.1:{server.server_address[1]}"
+    server.shutdown()
+
+
+def test_cli_tail_once(obs_endpoint, capsys):
+    assert obs_cli.main(["tail", obs_endpoint, "--once"]) == 0
+    lines = [json.loads(l) for l in
+             capsys.readouterr().out.strip().splitlines()]
+    assert [r["kind"] for r in lines] == ["store_refit", "store_refit"]
+
+
+def test_cli_metrics(obs_endpoint, capsys):
+    assert obs_cli.main(["metrics", obs_endpoint]) == 0
+    out = capsys.readouterr().out
+    assert "repro_events_total 2" in out
+    assert 'repro_events{kind="store_refit"} 2' in out
+
+
+def test_cli_bad_endpoint_errors_cleanly(capsys):
+    port = _free_port()
+    for cmd in (["tail", f"tcp://127.0.0.1:{port}", "--once",
+                 "--retries", "1"],
+                ["metrics", f"tcp://127.0.0.1:{port}", "--retries", "1"]):
+        assert obs_cli.main(cmd) == 1
+        err = capsys.readouterr().err
+        assert "error:" in err and "unreachable" in err
+
+
+def test_cli_chaos_list(capsys):
+    assert obs_cli.main(["chaos", "--list"]) == 0
+    out = capsys.readouterr().out
+    assert "sigkill_worker" in out
+
+
+def test_cli_analyze_table_and_json(tmp_path, capsys):
+    path = tmp_path / "trace.jsonl"
+    sink = JsonlSink(str(path))
+    for r in _synthetic_run():
+        sink(r)
+    sink.close()
+    assert obs_cli.main(["analyze", str(path)]) == 0
+    out = capsys.readouterr().out
+    assert "wall-time breakdown" in out and "critical path" in out
+    assert obs_cli.main(["analyze", str(path), "--json"]) == 0
+    report = json.loads(capsys.readouterr().out)
+    assert report["n_trials"] == 2
+
+    assert obs_cli.main(["analyze", str(tmp_path / "missing.jsonl")]) == 1
+    assert "error:" in capsys.readouterr().err
+    empty = tmp_path / "empty.jsonl"
+    empty.write_text("")
+    assert obs_cli.main(["analyze", str(empty)]) == 1
+    assert "empty" in capsys.readouterr().err
+
+
+# --------------------------------------- acceptance: distributed end-to-end
+
+@pytest.mark.slow
+def test_distributed_run_under_trace_yields_one_merged_timeline(tmp_path):
+    """Acceptance: a real ``python -m repro.worker`` subprocess + a TCP
+    store, driven through the ``--workers``/``--trace`` launch path, leave
+    ONE merged trace from which analyze reconstructs every trial's full
+    span tree — worker-side starts/epochs joined to driver-side
+    dispatch/completion, no orphans — plus breakdown and critical path."""
+    import os
+    from repro.launch.sysargs import executor_from_args
+
+    trace_path = str(tmp_path / "run_trace.jsonl")
+    store_svc = GroundTruthService()
+    store_svc.bus = EventBus()          # isolate from the process default
+    store_srv = GroundTruthTCPServer(("127.0.0.1", 0), store_svc)
+    threading.Thread(target=store_srv.serve_forever, daemon=True).start()
+    s_host, s_port = store_srv.server_address[:2]
+
+    repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.worker", "--port", "0"],
+        stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True,
+        env={**os.environ, "PYTHONPATH": "src"}, cwd=repo_root)
+    try:
+        line = proc.stdout.readline()
+        assert "trial worker on" in line, line
+        wport = int(line.split(" on ", 1)[1].split()[0].rsplit(":", 1)[1])
+        worker_proc = f"tcp://127.0.0.1:{wport}"
+
+        args = argparse.Namespace(
+            executor="serial", parallelism=1, cluster_nodes=4,
+            straggler_prob=0.0, backends=None, shard_capacity=1,
+            workers=worker_proc, coordinator=None, trace=trace_path,
+            wire="auto")
+        ex = executor_from_args(args)
+        res = (Experiment(_job(epochs=6))
+               .with_tuner("pipetune", max_probes=4).with_backend("sim")
+               .with_groundtruth(StoreClient(SocketTransport(s_host,
+                                                             s_port)))
+               .with_scheduler("random", n_trials=4).run(executor=ex))
+        assert res.best_hparams
+        time.sleep(0.5)                 # let the worker's flusher tick
+        ex.close()                      # drains + closes the collector
+    finally:
+        proc.terminate()
+        proc.wait(timeout=10)
+        store_srv.shutdown()
+        store_svc.close()
+
+    records = load_events([trace_path])
+    report = analyze_trace(records)
+    assert len(report["trace_ids"]) == 1, report["trace_ids"]
+    assert "driver" in report["procs"] and worker_proc in report["procs"]
+    # every trial's span tree is complete: dispatched + started + completed
+    assert report["n_orphans"] == 0
+    assert report["n_trials"] >= 4
+    for tid, segs in report["trials"].items():
+        for seg in segs:
+            assert not seg["orphan"], (tid, seg)
+            assert seg["completed_ts"] is not None, (tid, seg)
+        assert any(s["started_ts"] is not None for s in segs), \
+            f"no worker-side start for {tid}"
+    # worker-side epoch stream arrived exactly once per epoch
+    epochs = [r for r in records if r.get("kind") == "epoch_completed"]
+    keys = [(r["trial_id"], r["epoch"]) for r in epochs]
+    assert epochs and len(keys) == len(set(keys))
+    assert all(r.get("proc") == worker_proc for r in epochs)
+    # store RPCs were traced (receipts against the store peer label)
+    assert any(str(r.get("peer", "")).startswith("store@")
+               for r in records if r.get("kind") == "rpc_completed")
+    assert report["breakdown"]["wall_s"] > 0
+    assert report["critical_path"]["n_segments"] >= 1
+    assert report["workers"] and report["workers"][0]["util"] <= 1.0
