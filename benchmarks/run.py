@@ -254,6 +254,23 @@ def bench_roofline():
     return f"n={out['n']};dom={out['dominant']};mfu_max={out['mfu_max']:.1e}"
 
 
+def bench_lint():
+    """Full-tree repro.lint run; the suite must stay fast enough to sit in
+    the inner dev loop (<10s over src/repro)."""
+    import repro.lint as lint
+    t0 = time.monotonic()
+    project = lint.Project.from_dir(
+        os.path.join(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), "src", "repro"),
+        lint.default_config())
+    findings, suppressed = lint.run_lint(project)
+    wall = time.monotonic() - t0
+    if wall >= 10.0:
+        raise RuntimeError(f"lint took {wall:.1f}s (budget 10s)")
+    return (f"modules={len(project.modules)};findings={len(findings)};"
+            f"suppressed={suppressed};wall_s={wall:.2f}")
+
+
 def load_baseline(path):
     # the comparison is advisory: a missing or mangled baseline must not
     # stop the benchmarks from running
@@ -349,6 +366,7 @@ def _run_all() -> None:
     _timed("kernels", bench_kernels)
     _timed("hillclimb", bench_hillclimb)
     _timed("roofline", bench_roofline)
+    _timed("lint", bench_lint)
 
 
 if __name__ == "__main__":

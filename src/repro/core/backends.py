@@ -60,7 +60,7 @@ def backend_capabilities(backend) -> BackendCapabilities:
     if fn is not None:
         return fn()
     return BackendCapabilities(
-        async_precompile=hasattr(backend, "precompile_async"))
+        async_precompile=callable(getattr(backend, "precompile_async", None)))
 
 
 def sys_key(sys_cfg: dict) -> str:

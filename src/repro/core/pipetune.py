@@ -189,7 +189,7 @@ class TrialRunner:
         ``parallelism > 1`` (proposals within a wave are independent by the
         scheduler contract, so this is the paper's trial-level parallelism).
         """
-        t0 = time.time()
+        t0 = time.monotonic()
         from repro.core.executor import make_executor
         if isinstance(scheduler, str):
             # name resolution is the one service core takes from the api
@@ -241,7 +241,7 @@ class TrialRunner:
                 best_record=best_rec,
                 tuning_time_s=sum(r.train_time
                                   for r in self.records.values()),
-                wall_time_s=time.time() - t0,
+                wall_time_s=time.monotonic() - t0,
                 energy_j=sum(r.energy for r in self.records.values()),
                 records=dict(self.records),
                 gt_hits=gt_hits, gt_misses=gt_misses,
@@ -263,7 +263,8 @@ class TrialRunner:
             if tree is None:
                 return None
             return jax.tree.map(
-                lambda a: a.copy() if hasattr(a, "copy") else a, tree)
+                lambda a: a.copy() if callable(getattr(a, "copy", None)) else a,
+                tree)
 
         with self._hook_lock:
             src_state = self.states.get(src_id)

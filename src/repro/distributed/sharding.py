@@ -145,12 +145,15 @@ _RULES = [
 
 
 def _path_str(path):
+    keys = jax.tree_util
     parts = []
     for p in path:
-        if hasattr(p, "key"):
+        if isinstance(p, (keys.DictKey, keys.FlattenedIndexKey)):
             parts.append(str(p.key))
-        elif hasattr(p, "idx"):
+        elif isinstance(p, keys.SequenceKey):
             parts.append(str(p.idx))
+        elif isinstance(p, keys.GetAttrKey):
+            parts.append(str(p.name))
         else:
             parts.append(str(p))
     return "/".join(parts)

@@ -1,0 +1,41 @@
+"""repro.lint — repo-aware static analysis.
+
+Five passes guard the invariants the test suite can only sample:
+determinism of the tuning core, wire-protocol conformance between every
+client/server pair, lock discipline on shared state, event-schema
+conformance at ``bus.emit`` sites, and exception safety inside serve
+loops.  Run it with ``python -m repro.lint``; see README "Static
+analysis" for suppression and baselines.
+
+The package is import-light on purpose (stdlib only — no numpy/jax): the
+CI lint job runs on a bare interpreter.
+"""
+
+from repro.lint.config import LintConfig, default_config
+from repro.lint.engine import (
+    Baseline,
+    Finding,
+    LintPass,
+    Module,
+    Project,
+    all_passes,
+    register_pass,
+    render_json,
+    render_text,
+    run_lint,
+)
+
+__all__ = [
+    "Baseline",
+    "Finding",
+    "LintConfig",
+    "LintPass",
+    "Module",
+    "Project",
+    "all_passes",
+    "default_config",
+    "register_pass",
+    "render_json",
+    "render_text",
+    "run_lint",
+]

@@ -1,0 +1,13 @@
+"""Built-in lint passes.
+
+Importing this package registers every pass with the engine registry.
+"""
+
+from repro.lint.passes import (  # noqa: F401
+    capability,
+    determinism,
+    events,
+    locks,
+    serve,
+    wire,
+)

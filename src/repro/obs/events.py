@@ -241,6 +241,11 @@ class EventBus:
         # streams merge into one causal timeline (see repro.obs.trace)
         self.trace_id: Optional[str] = None
         self.proc: Optional[str] = None
+        # forwarding capability (owned by repro.obs.forward): addresses of
+        # collectors that ingest into THIS bus — forwarding to one of them
+        # would loop records back forever — and the active outbound sink
+        self.local_collectors: set = set()
+        self.forward_sink: Optional[Any] = None
 
     # ------------------------------------------------------------- control
     @property

@@ -110,8 +110,9 @@ class ForwardingSink:
         return batch, drops
 
     def _send(self, batch: list, drops: int) -> bool:
+        from repro.service.codec import CodecError
         from repro.service.dispatch import parse_tcp_address
-        from repro.service.transport import SocketTransport
+        from repro.service.transport import SocketTransport, TransportError
         if time.monotonic() < self._backoff_until:
             return False
         try:
@@ -123,11 +124,13 @@ class ForwardingSink:
                 {"op": "obs_events", "proc": self.proc,
                  "events": batch, "dropped": drops})
             return bool(resp.get("ok"))
-        except Exception:                       # noqa: BLE001 — best effort
+        except (OSError, TransportError, CodecError):
+            # dial/wire/encode failure: shed and back off — anything else
+            # (a programming error) must surface, not vanish with the batch
             try:
                 if self._transport is not None:
                     self._transport.close()
-            except Exception:                   # noqa: BLE001
+            except OSError:
                 pass
             self._transport = None
             self._backoff_until = time.monotonic() + 1.0
@@ -206,9 +209,7 @@ class TraceCollector:
         # mark the bus as this collector's home so a service in the SAME
         # process (sharing the bus) never forwards back to it — that loop
         # re-ingests every record it ships, amplifying without bound
-        if not hasattr(bus, "_local_collectors"):
-            bus._local_collectors = set()
-        bus._local_collectors.add(f"tcp://{self.host}:{self.port}")
+        bus.local_collectors.add(f"tcp://{self.host}:{self.port}")
         self._thread = threading.Thread(target=self._server.serve_forever,
                                         daemon=True, name="obs-collector")
         self._thread.start()
@@ -271,11 +272,11 @@ def adopt_trace(req: Dict[str, Any], bus: EventBus,
         # must not relabel the driver's own events
         bus.proc = label
     collector = req.get("collector")
-    if collector and str(collector) in getattr(bus, "_local_collectors", ()):
+    if collector and str(collector) in bus.local_collectors:
         collector = None        # the collector ingests into this very bus:
                                 # forwarding would loop records back forever
     if collector:
-        prev = getattr(bus, "_forward_sink", None)
+        prev = bus.forward_sink
         if prev is not None and prev.collector == collector:
             pass                                # already forwarding there
         else:
@@ -284,7 +285,7 @@ def adopt_trace(req: Dict[str, Any], bus: EventBus,
                 prev.close(timeout=0.5)
             sink = ForwardingSink(str(collector), proc=bus.proc or label)
             bus.add_sink(sink)                  # enables the bus
-            bus._forward_sink = sink
+            bus.forward_sink = sink
     else:
         bus.enable()
     return {"trace": trace_id, "server_ts": time.time(),
@@ -301,6 +302,8 @@ def propagate_trace(transport, trace_id: str, *, collector: Optional[str]
     yields one NTP-style clock sample: offset = peer wall clock at the
     midpoint minus ours, emitted as ``ClockSync`` for the merge to apply.
     """
+    from repro.service.codec import CodecError
+    from repro.service.transport import TransportError
     req: Dict[str, Any] = {"op": "obs_trace", "trace": trace_id,
                            "proc": proc}
     if collector:
@@ -308,8 +311,8 @@ def propagate_trace(transport, trace_id: str, *, collector: Optional[str]
     t0 = time.time()
     try:
         resp = transport.request(req)
-    except Exception:                           # noqa: BLE001 — legacy peer
-        return False
+    except (OSError, TransportError, CodecError):
+        return False                            # legacy / unreachable peer
     t1 = time.time()
     if not isinstance(resp, dict) or not resp.get("ok") \
             or resp.get("trace") != trace_id:

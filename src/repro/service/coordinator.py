@@ -228,7 +228,7 @@ class CoordinatorClient:
                     self._transport.trace = self._trace
                 resp = self._transport.request(req)
             except (TransportError, ConnectionError, OSError) as e:
-                self.close()
+                self._reset_transport()
                 raise CoordinatorError(
                     f"coordinator tcp://{self.address[0]}:{self.address[1]} "
                     f"unreachable: {e}") from e
@@ -290,10 +290,16 @@ class CoordinatorClient:
             self.close()
             return False
 
-    def close(self) -> None:
+    def _reset_transport(self) -> None:
+        """Drop the cached connection. Caller must hold ``self._lock`` (the
+        in-request failure path already does; ``close`` takes it)."""
         if self._transport is not None:
             self._transport.close()
             self._transport = None
+
+    def close(self) -> None:
+        with self._lock:
+            self._reset_transport()
 
 
 class WorkerAnnouncer:

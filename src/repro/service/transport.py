@@ -307,7 +307,7 @@ class StoreClient:
         from repro.obs.events import get_bus
         self.bus = bus if bus is not None else get_bus()
         if isinstance(self.transport, InprocTransport):
-            if hasattr(self.transport.service, "bus"):
+            if getattr(self.transport.service, "bus", None) is not None:
                 self.transport.service.bus = self.bus
             return True
         from repro.obs.forward import propagate_trace
@@ -639,7 +639,15 @@ class JsonRPCServer:
                         "supported": list(available_codecs())}
             else:
                 resp = {"ok": True, "codec": new.name}
-            self._queue_frame(conn, conn.codec.encode(resp))
+            try:
+                data = conn.codec.encode(resp)
+            except CodecError:
+                # the hello answer cannot be encoded in the CURRENT codec:
+                # dropping beats leaving the peer blocked on a reply and
+                # beats killing the selector thread for everyone else
+                self._close_conn(conn)
+                return
+            self._queue_frame(conn, data)
             if new is not None:
                 conn.codec = new
             return
@@ -694,7 +702,8 @@ class JsonRPCServer:
             try:
                 data = conn.codec.encode(resp)
             except CodecError as e:
-                data = conn.codec.encode(
+                # a str-only error dict encodes under every wire codec
+                data = conn.codec.encode(  # lint: disable=EXC001
                     {"ok": False, "error": f"CodecError: {e}"})
             framed = struct.pack(">I", len(data)) + data
         with self._lock:

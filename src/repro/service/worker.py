@@ -76,10 +76,14 @@ class TrialWorkerService:
         return out
 
     def close(self) -> None:
-        if self._store_client is not None:
-            self._store_client.close()
-            self._store_client = None
-        sink = getattr(self.bus, "_forward_sink", None)
+        # the runner (and with it _store_client) is mutated under the lock
+        # by bind/clone handlers on server threads; teardown must not race
+        # a concurrent bind's _build_runner
+        with self._lock:
+            if self._store_client is not None:
+                self._store_client.close()
+                self._store_client = None
+        sink = self.bus.forward_sink
         if sink is not None:        # ship the tail of the trace home
             sink.flush(timeout=1.0)
 
@@ -159,7 +163,7 @@ class TrialWorkerService:
         wave's events ship before the driver acts on the response — a
         worker SIGKILL'd (or a run ending) right after the last wave would
         otherwise lose everything queued since the previous 0.2s tick."""
-        sink = getattr(self.bus, "_forward_sink", None)
+        sink = self.bus.forward_sink
         if sink is not None:
             sink.kick()
 

@@ -1,0 +1,43 @@
+# repro-lint: deterministic
+"""Seeded determinism violations (DET001-DET004), one per construct."""
+import os
+import random
+import time
+
+import numpy as np
+
+from repro.core.seeding import stable_hash
+
+
+def wall_clock():
+    t0 = time.time()                    # DET001
+    time.sleep(0.0)                     # allowed clock
+    return time.monotonic() - t0        # allowed clock
+
+
+def entropy(seed: int):
+    a = random.random()                 # DET002
+    b = os.urandom(4)                   # DET002
+    c = np.random.rand(3)               # DET002 (module-global RNG)
+    d = np.random.RandomState()         # DET002 (no seed)
+    ok = np.random.RandomState(seed)    # fine: seeded
+    return a, b, c, d, ok
+
+
+def hashing(key: str) -> int:
+    bad = hash(key)                     # DET003
+    good = stable_hash(key)             # fine: routed through seeding
+    return bad ^ good
+
+
+def set_order(items):
+    out = []
+    for x in {1, 2, 3}:                 # DET004
+        out.append(x)
+    squares = [y * y for y in set(items)]   # DET004
+    out.extend(sorted(set(items)))      # fine: sorted
+    return out, squares
+
+
+def suppressed():
+    return time.time()  # lint: disable=DET001

@@ -1,0 +1,26 @@
+"""Fixture event schema. The test config points event_module at this file;
+emit sites live in fixture_events_use.py."""
+import dataclasses
+from typing import ClassVar
+
+
+@dataclasses.dataclass(frozen=True)
+class Event:
+    kind: ClassVar[str] = "event"
+
+
+@dataclasses.dataclass(frozen=True)
+class FixtureStarted(Event):
+    kind: ClassVar[str] = "fixture_started"
+    trial_id: str
+    worker: str
+    epochs: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class FixtureOrphan(Event):             # EVT004: not in EVENT_TYPES
+    kind: ClassVar[str] = "fixture_orphan"
+    reason: str = ""
+
+
+EVENT_TYPES = {cls.kind: cls for cls in (FixtureStarted,)}

@@ -1,0 +1,21 @@
+"""Seeded event-schema violations at emit/dispatch sites (see
+fixture_events.py for the schema)."""
+from tests.lint_fixtures.fixture_events import FixtureOrphan, FixtureStarted
+
+
+def good_emit(bus):
+    bus.emit(FixtureStarted(trial_id="t1", worker="w0", epochs=3))
+
+
+def bad_emits(bus):
+    bus.emit(FixtureOrphan(reason="x"))                  # EVT001
+    bus.emit(FixtureStarted(trial_id="t1"))              # EVT002: no worker
+    bus.emit(FixtureStarted("t1", "w0", epoch=1))        # EVT002: bad kwarg
+
+
+def dispatch(bus, rec):                 # EVT005 target via kind_dispatchers
+    if rec.get("kind") == "fixture_started":
+        return "started"
+    if rec.get("kind") == "fixture_startd":              # EVT003: typo
+        return "typo"
+    return None

@@ -1,0 +1,58 @@
+"""Seeded lock-discipline violations: an unlocked write to pool state
+(LOCK001) and a two-class acquisition-order cycle (LOCK002)."""
+import threading
+
+
+class FixturePool:
+    """WorkerPool-shaped: workers list guarded by _lock except in close."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.workers = []
+        self.inflight = {}
+
+    def add_worker(self, w):
+        with self._lock:
+            self.workers.append(w)
+
+    def dispatch(self, trial_id, w):
+        with self._lock:
+            self.inflight[trial_id] = w
+
+    def handle(self, req):
+        with self._lock:
+            return getattr(self, "_op_" + str(req.get("op")))(req)
+
+    def _op_retire(self, req):
+        # runs under handle's lock via dynamic dispatch: NOT a violation
+        self.workers.pop()
+        return {}
+
+    def close(self):
+        self.workers = []               # LOCK001: unlocked write
+        with self._lock:
+            self.inflight.clear()
+
+
+class FixtureBusA:
+    def __init__(self, peer):
+        self._lock = threading.Lock()
+        self.peer = peer
+        self.items = []
+
+    def emit(self, rec):
+        with self._lock:
+            self.items.append(rec)
+            self.peer.notify(rec)       # LOCK002: acquires B inside A
+
+
+class FixtureBusB:
+    def __init__(self, pool):
+        self._lock = threading.Lock()
+        self.pool = pool
+        self.seen = []
+
+    def notify(self, rec):
+        with self._lock:
+            self.seen.append(rec)
+            self.pool.emit(rec)         # LOCK002: acquires A inside B

@@ -1,0 +1,39 @@
+"""Seeded serve-loop exception-safety violations.  The test config puts
+FixtureServer's loop methods in serve_scopes and this file under
+serve_paths."""
+
+
+class CodecError(ValueError):
+    pass
+
+
+class FixtureServer:
+    def __init__(self, sock, codec):
+        self.sock = sock
+        self.codec = codec
+
+    def _on_readable(self, conn):
+        chunk = conn.sock.recv(4096)                     # EXC001: unguarded
+        try:
+            return self.codec.decode(chunk)              # guarded: fine
+        except CodecError:
+            return None
+
+    def _on_writable(self, conn):
+        try:
+            conn.sock.send(b"x")                         # guarded: fine
+        except OSError:
+            pass
+        data = self.codec.encode({"ok": True})           # EXC001: unguarded
+        return data
+
+    def _run_handler(self, conn, req):
+        try:
+            resp = conn.transport.request(req)           # swallowed below
+            return resp
+        except Exception:                                # EXC002
+            return None
+
+
+def probe(worker):
+    return hasattr(worker, "submit_many")                # CAP001

@@ -1,0 +1,30 @@
+"""Seeded wire-protocol violations; paired with a test-local LintConfig
+mapping FixtureClient -> FixtureService."""
+
+_OPS = ("ping", "unused")               # WIRE004: _op_add missing from gate
+
+
+class FixtureService:
+    def _op_ping(self, req):
+        return {}
+
+    def _op_add(self, req):
+        return {"n": 1}
+
+    def _op_unused(self, req):          # WIRE002: nobody sends "unused"
+        return {}
+
+
+class FixtureClient:
+    def __init__(self, transport):
+        self.transport = transport
+
+    def ping(self):
+        return self.transport.request({"op": "ping"})
+
+    def missing(self):
+        return self.transport.request({"op": "missing_op"})    # WIRE001
+
+    def bad_payload(self):
+        return self.transport.request(
+            {"op": "ping", "tags": {"a", "b"}, 3: "x"})        # WIRE003 x2

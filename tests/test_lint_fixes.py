@@ -1,0 +1,150 @@
+"""Regression tests for the behavioral fixes that came out of the first
+repro.lint run over the tree (see lint-baseline.json for the two findings
+that were ruled false positives instead).
+"""
+import threading
+import time
+
+import pytest
+
+from repro.obs.events import EventBus
+from repro.obs.forward import ForwardingSink, propagate_trace
+from repro.service.coordinator import CoordinatorClient, CoordinatorError
+from repro.service.transport import TransportError
+from repro.service.worker import TrialWorkerService
+
+
+# --------------------------------------------------------------------------
+# CoordinatorClient: failed requests reset the transport under the held
+# lock (the old code called the locked close() from inside _request, which
+# would self-deadlock on the non-reentrant Lock)
+
+
+def test_coordinator_client_unreachable_raises_without_deadlock():
+    client = CoordinatorClient("tcp://127.0.0.1:1", connect_timeout=0.2,
+                               request_timeout=0.2)
+    errors = []
+
+    def attempt():
+        try:
+            client.roster()
+        except CoordinatorError as e:
+            errors.append(e)
+
+    t = threading.Thread(target=attempt, daemon=True)
+    t.start()
+    t.join(timeout=10.0)
+    assert not t.is_alive(), "request deadlocked against its own lock"
+    assert len(errors) == 1 and "unreachable" in str(errors[0])
+    assert client._transport is None        # reset, not left half-open
+    client.close()                          # second close is a no-op
+
+
+def test_coordinator_client_close_is_reentrant_safe():
+    client = CoordinatorClient("tcp://127.0.0.1:1")
+    client.close()
+    client.close()
+    assert client._transport is None
+
+
+# --------------------------------------------------------------------------
+# ForwardingSink._send: wire failures shed + reset, programming errors
+# surface (the old bare ``except Exception`` hid both alike)
+
+
+class _FailingTransport:
+    def __init__(self, exc):
+        self.exc = exc
+        self.closed = False
+
+    def request(self, req):
+        raise self.exc
+
+    def close(self):
+        self.closed = True
+
+
+def _quiet_sink():
+    sink = ForwardingSink("tcp://127.0.0.1:1", proc="t",
+                          flush_interval_s=30.0, timeout=0.2)
+    # park the flusher thread so the test drives _send directly
+    return sink
+
+
+def test_forwarding_sink_send_sheds_on_transport_error():
+    sink = _quiet_sink()
+    try:
+        transport = _FailingTransport(TransportError("peer gone"))
+        sink._transport = transport
+        assert sink._send([{"kind": "x"}], 0) is False
+        assert transport.closed and sink._transport is None
+        assert sink._backoff_until > time.monotonic()
+    finally:
+        sink._closed.set()
+        sink._wake.set()
+        sink._thread.join(timeout=5.0)
+
+
+def test_forwarding_sink_send_propagates_programming_errors():
+    sink = _quiet_sink()
+    try:
+        sink._transport = _FailingTransport(ValueError("bug in payload"))
+        with pytest.raises(ValueError):
+            sink._send([{"kind": "x"}], 0)
+    finally:
+        sink._closed.set()
+        sink._wake.set()
+        sink._thread.join(timeout=5.0)
+
+
+# --------------------------------------------------------------------------
+# propagate_trace: legacy/unreachable peers mean False, bugs still raise
+
+
+def test_propagate_trace_false_on_transport_error():
+    assert propagate_trace(_FailingTransport(TransportError("nope")),
+                           "tr-1") is False
+    assert propagate_trace(_FailingTransport(OSError("refused")),
+                           "tr-1") is False
+
+
+def test_propagate_trace_raises_on_programming_error():
+    with pytest.raises(ValueError):
+        propagate_trace(_FailingTransport(ValueError("bad req")), "tr-1")
+
+
+# --------------------------------------------------------------------------
+# EventBus: forwarding state is now a declared part of the bus contract
+# (previously monkey-patched on via hasattr probes)
+
+
+def test_event_bus_declares_forwarding_attrs():
+    bus = EventBus()
+    assert bus.local_collectors == set()
+    assert bus.forward_sink is None
+
+
+# --------------------------------------------------------------------------
+# TrialWorkerService.close: store-client teardown now serializes with the
+# bind/clone handlers on self._lock
+
+
+def test_worker_service_close_waits_for_lock():
+    svc = TrialWorkerService()
+
+    class _Client:
+        closed = False
+
+        def close(self):
+            self.closed = True
+
+    svc._store_client = _Client()
+    svc._lock.acquire()
+    t = threading.Thread(target=svc.close, daemon=True)
+    t.start()
+    t.join(timeout=0.3)
+    assert t.is_alive(), "close() must wait for the service lock"
+    svc._lock.release()
+    t.join(timeout=5.0)
+    assert not t.is_alive()
+    assert svc._store_client is None

@@ -181,7 +181,7 @@ def test_traced_remote_worker_forwards_without_duplicate_epochs():
         res = (Experiment(_job()).with_tuner("v1").with_backend("sim")
                .with_scheduler("hyperband").run(executor=ex))
         assert res.best_hparams
-        fwd = getattr(svc.bus, "_forward_sink", None)
+        fwd = svc.bus.forward_sink
         assert fwd is not None and fwd.flush(timeout=5.0)
     finally:
         ex.close()
