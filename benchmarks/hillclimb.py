@@ -13,6 +13,7 @@ one target on a 1x1 mesh — the smoke path ``benchmarks/run.py`` drives.
 ``repro.launch.dryrun`` is imported.)
 """
 import argparse
+import copy
 import json
 
 from repro.launch import dryrun, mesh as mesh_lib
@@ -60,18 +61,39 @@ QUICK_VARIANTS = [
 ]
 
 
-def run(quick=True, arch="xlstm-350m"):
+def run(quick=True, arch="xlstm-350m", cache=None):
     """Smoke-scale hillclimb: reduced config, tiny train shape, 1x1 mesh.
-    Returns the dry-run records (one per variant) with ``variant`` set."""
+    Returns the dry-run records (one per variant) with ``variant`` set.
+
+    ``cache`` (a ``KernelConfigDB``) routes variants through the kernel
+    config cache: a hit replays the stored record without recompiling
+    (``cached=True`` on the record), a miss compiles and stores. Records
+    are deep-copied across the cache boundary so callers mutating one run's
+    records can't corrupt the next.
+    """
     from repro import configs
+    from repro.kernels import findb
     mesh = mesh_lib.make_mesh(1, 1)
     shape = configs.ShapeSpec("train_smoke", "train", 128, 8)
+    hw = findb.hardware_key()
     records = []
     for name, overrides in QUICK_VARIANTS:
+        key = findb.shape_key(arch=arch, cell="train_smoke", mesh="1x1",
+                              variant=name)
+        hit = cache.get("hillclimb", key, hw) if cache is not None else None
+        if hit is not None:
+            r = copy.deepcopy(hit["record"])
+            r["cached"] = True
+            records.append(r)
+            continue
         r = dryrun.run_cell(arch, "train_smoke", mesh=mesh, reduced=True,
                             shape=shape, sys_overrides=overrides,
                             verbose=False)
         r["variant"] = name
+        r["cached"] = False
+        if cache is not None and r["status"] == "ok":
+            cache.put("hillclimb", key, {"record": copy.deepcopy(r)},
+                      hardware=hw)
         records.append(r)
     return records
 

@@ -1,0 +1,90 @@
+"""Kernel autotuning headline: tuned-vs-default wall time via the find-db.
+
+``run(quick=True)`` tunes the smoke workloads into an *isolated*
+``KernelConfigDB`` (never the process-wide one — the bench must measure the
+tuner, not inherit someone else's warm entries), asserts the acceptance
+bar — best tuned config >= 1.2x faster than the hand-picked default on at
+least one (kernel, shape) — and that a warm re-tune resolves every workload
+from the find-db with **zero** tuning trials and the identical config.
+
+Full mode (run this module directly) sweeps every preset workload and
+prints the tuned-vs-default table.
+"""
+import argparse
+import json
+
+# the two smoke shapes where block choice is measurable in seconds, not
+# minutes; train-smoke is excluded here (it's the hillclimb bench's job)
+QUICK_WORKLOADS = ("flash-fwd-smoke", "mlstm-smoke")
+
+
+def run(quick=True, workloads=None, reps=5, warmup=2, seed=0):
+    """Tune ``workloads`` cold, then re-resolve warm. Returns
+    ``{results, warm, best, warm_trials}``; raises RuntimeError when the
+    speedup bar or the zero-trial warm path fails (bench_elastic idiom —
+    an assert here is a broken subsystem, not a slow one)."""
+    from repro.core.groundtruth import KernelConfigDB
+    from repro.kernels import tune
+
+    if workloads is None:
+        workloads = (QUICK_WORKLOADS if quick
+                     else tuple(sorted(tune.PRESETS)))
+    db = KernelConfigDB()
+    results = [tune.tune_kernel(wl, db=db, reps=reps, warmup=warmup,
+                                seed=seed) for wl in workloads]
+    for r in results:
+        if r["source"] != "tuned":
+            raise RuntimeError(
+                f"cold tune of {r['workload']!r} resolved from "
+                f"{r['source']} — isolated db was not empty?")
+
+    # warm path: every workload must come back from the find-db, zero
+    # trials, config bit-identical to what the cold run persisted
+    warm = [tune.tune_kernel(wl, db=db) for wl in workloads]
+    warm_trials = sum(w["trials"] for w in warm)
+    if warm_trials != 0:
+        raise RuntimeError(f"warm re-tune ran {warm_trials} trials "
+                           f"(want 0: the find-db fast path is broken)")
+    for cold, hot in zip(results, warm):
+        if hot["source"] != "find-db" or hot["config"] != cold["config"]:
+            raise RuntimeError(
+                f"warm lookup for {cold['workload']!r} returned "
+                f"{hot['config']} from {hot['source']} "
+                f"(tuned {cold['config']})")
+
+    best = max(results, key=lambda r: r["speedup"] or 0.0)
+    if quick and best["speedup"] < 1.2:
+        raise RuntimeError(
+            "kernel tuning found no config >=1.2x over defaults "
+            + "; ".join(f"{r['workload']}={r['speedup']:.3f}x"
+                        for r in results))
+    return {"results": results, "warm": warm, "best": best,
+            "warm_trials": warm_trials}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workload", action="append", default=None,
+                    help="preset or kernel@k=v spec (repeatable; "
+                    "default: all presets)")
+    ap.add_argument("--reps", type=int, default=5)
+    ap.add_argument("--warmup", type=int, default=2)
+    ap.add_argument("--out", default="kernel_tune.json")
+    a = ap.parse_args()
+    out = run(quick=False, workloads=a.workload, reps=a.reps,
+              warmup=a.warmup)
+    for r in out["results"]:
+        print(f"{r['workload']:20s} {json.dumps(r['config']):40s} "
+              f"default={r['default_s'] * 1e3:7.2f}ms "
+              f"tuned={r['tuned_s'] * 1e3:7.2f}ms "
+              f"speedup={r['speedup']:.3f}x trials={r['trials']}")
+    print(f"warm re-resolve: {out['warm_trials']} trials "
+          f"(best {out['best']['workload']} "
+          f"{out['best']['speedup']:.3f}x)")
+    with open(a.out, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"wrote {a.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -232,19 +232,45 @@ _HILLCLIMB_RECORDS = None       # shared with bench_roofline (one compile)
 
 
 def bench_hillclimb():
-    """§Perf hillclimb smoke: reduced-config variants on a 1x1 mesh."""
+    """§Perf hillclimb smoke: reduced-config variants on a 1x1 mesh, cold
+    through the kernel config cache and then warm (cache hits replay the
+    stored records without recompiling)."""
     global _HILLCLIMB_RECORDS
     from benchmarks import hillclimb
-    _HILLCLIMB_RECORDS = hillclimb.run(quick=True)
+    from repro.core.groundtruth import KernelConfigDB
+    cache = KernelConfigDB()
+    t0 = time.monotonic()
+    _HILLCLIMB_RECORDS = hillclimb.run(quick=True, cache=cache)
+    cold_s = time.monotonic() - t0
     ok = [r for r in _HILLCLIMB_RECORDS if r["status"] == "ok"]
     if len(ok) != len(_HILLCLIMB_RECORDS):
         bad = [r["variant"] for r in _HILLCLIMB_RECORDS
                if r["status"] != "ok"]
         raise RuntimeError(f"hillclimb variants failed to compile: {bad}")
+    t0 = time.monotonic()
+    warm = hillclimb.run(quick=True, cache=cache)
+    warm_s = time.monotonic() - t0
+    missed = [r["variant"] for r in warm if not r.get("cached")]
+    if missed:
+        raise RuntimeError(f"hillclimb warm rerun recompiled: {missed}")
     base = next(r for r in ok if r["variant"] == "baseline")
     best = min(ok, key=lambda r: r["roofline"]["step_time_s"])
     return (f"variants={len(ok)};best={best['variant']};step_ratio="
-            f"{best['roofline']['step_time_s']/base['roofline']['step_time_s']:.2f}")
+            f"{best['roofline']['step_time_s']/base['roofline']['step_time_s']:.2f};"
+            f"cold_s={cold_s:.1f};warm_s={warm_s:.3f};"
+            f"warm_speedup={cold_s/max(warm_s, 1e-9):.0f}x")
+
+
+def bench_kernel_tune():
+    """Kernel autotuning headline: tuned-vs-default wall time per the
+    find-db, plus the warm zero-trial re-resolve."""
+    from benchmarks import kernel_tune
+    out = kernel_tune.run(quick=True)
+    b = out["best"]
+    trials = sum(r["trials"] for r in out["results"])
+    return (f"best={b['workload']};config={json.dumps(b['config'])};"
+            f"speedup={b['speedup']:.2f}x;trials={trials};"
+            f"warm_trials={out['warm_trials']}")
 
 
 def bench_roofline():
@@ -364,6 +390,7 @@ def _run_all() -> None:
     # kernels initializes the jax CPU backend before the dryrun import below
     # can request 512 host devices, keeping the compile cells single-device
     _timed("kernels", bench_kernels)
+    _timed("kernel_tune", bench_kernel_tune)
     _timed("hillclimb", bench_hillclimb)
     _timed("roofline", bench_roofline)
     _timed("lint", bench_lint)

@@ -151,6 +151,21 @@ register_backend("numeric", NumericBackend, sys_space=lambda: SystemSpace(
     remat=("none",), microbatches=(1, 2), precision=("fp32",)))
 
 
+def _make_kernel_tune_backend(**kw):
+    # lazy: the kernel-tuning backend pulls in jax + the Pallas kernels,
+    # which plain registry users (lint, service-only processes) never need
+    from repro.kernels.tune import KernelTuneBackend
+    return KernelTuneBackend(**kw)
+
+
+# trials time kernel variants (see repro.kernels.tune); the sys space is
+# the hillclimb system-dims grid for tuners that probe system configs
+register_backend("kernel-tune", _make_kernel_tune_backend,
+                 sys_space=lambda: SystemSpace(
+                     remat=("none", "block"), microbatches=(1, 2, 4),
+                     precision=("fp32",)))
+
+
 def _make_v1(backend, sys_space=None, groundtruth=None, **kw):
     return TuneV1(backend, **kw)
 

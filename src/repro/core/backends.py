@@ -218,8 +218,27 @@ class RealBackend:
         return (ts.workload, hp.get("embed_dim"), hp.get("dropout"),
                 int(hp.get("batch_size", 64)), sys_key(sys_cfg))
 
+    def _effective_sys(self, ts: TrialState, sys_cfg: dict) -> dict:
+        """Fill sys-config keys the caller left unspecified from the kernel
+        find-db's tuned ``train_step`` entry for this (workload, batch).
+
+        Explicit keys always win, so tuner-driven probing (which passes
+        complete configs) is byte-for-byte unaffected; only callers that
+        rely on defaults pick up tuned values. Idempotent, and applied
+        before ``_step_key`` everywhere so cache keys stay coherent."""
+        from repro.kernels import findb
+        tuned = findb.lookup_or_default(
+            "train_step", findb.train_step_shape_key(
+                arch=ts.workload, batch=int(ts.hparams.get("batch_size", 64))),
+            default={})
+        fill = {k: v for k, v in tuned.items()
+                if k not in sys_cfg
+                and k in ("remat", "microbatches", "precision", "donate")}
+        return {**fill, **sys_cfg} if fill else sys_cfg
+
     def get_step(self, ts: TrialState, sys_cfg: dict):
         """Compiled (train_step, eval_step), building if needed."""
+        sys_cfg = self._effective_sys(ts, sys_cfg)
         key = self._step_key(ts, sys_cfg)
         with self._lock:
             if key in self._step_cache:
@@ -237,6 +256,7 @@ class RealBackend:
 
     def precompile_async(self, ts: TrialState, sys_cfg: dict):
         """Compile a candidate system config off the critical path."""
+        sys_cfg = self._effective_sys(ts, sys_cfg)
         key = self._step_key(ts, sys_cfg)
         with self._lock:
             if key in self._step_cache or key in self._pending:
@@ -248,6 +268,7 @@ class RealBackend:
     # ----------------------------------------------------------------- epoch
     def run_epoch(self, ts: TrialState, sys_cfg: dict, collect_profile=True
                   ) -> Tuple[TrialState, EpochResult]:
+        sys_cfg = self._effective_sys(ts, sys_cfg)
         (train_step, eval_step), compile_s = self.get_step(ts, sys_cfg)
         n_micro = int(sys_cfg.get("microbatches", 1))
         bs = int(ts.hparams.get("batch_size", 64))

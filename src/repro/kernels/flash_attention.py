@@ -82,16 +82,29 @@ def _attn_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, acc_ref, m_ref, l_ref,
         lse_ref[0] = m_ref[...] + jnp.log(l)
 
 
-def flash_attention(q, k, v, *, causal=True, window=None, q_block=128,
-                    kv_block=128, softmax_scale=None, interpret=True,
+def flash_attention(q, k, v, *, causal=True, window=None, q_block=None,
+                    kv_block=None, softmax_scale=None, interpret=None,
                     return_lse=False):
     """q: (B, S, K, G, D); k, v: (B, T, K, D) -> (B, S, K, G, D).
 
     return_lse additionally returns the per-row logsumexp (B, S, K, G) fp32
-    used by the backward kernels. interpret=True executes on CPU.
+    used by the backward kernels. Defaults of None resolve through the
+    kernel find-db (``repro.kernels.findb``): block sizes come from the
+    tuned entry for this (shape, hardware) or the hand-picked fallback,
+    and ``interpret`` auto-detects the platform (interpreted everywhere
+    but TPU). Explicit arguments always win.
     """
+    from repro.kernels import findb
     B, S, K, G, D = q.shape
     T = k.shape[1]
+    if interpret is None:
+        interpret = findb.default_interpret()
+    if q_block is None or kv_block is None:
+        tuned = findb.lookup_or_default(
+            "flash_attention", findb.attention_shape_key(
+                B=B, S=S, K=K, G=G, D=D, T=T, causal=causal, window=window))
+        q_block = tuned["q_block"] if q_block is None else q_block
+        kv_block = tuned["kv_block"] if kv_block is None else kv_block
     scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(D)
     q_block = min(q_block, S)
     kv_block = min(kv_block, T)

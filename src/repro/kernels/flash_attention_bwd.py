@@ -137,14 +137,25 @@ def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
 # ------------------------------------------------------------------ driver
 
 def flash_attention_bwd(q, k, v, out, lse, do, *, causal=True, window=None,
-                        q_block=128, kv_block=128, softmax_scale=None,
-                        interpret=True):
+                        q_block=None, kv_block=None, softmax_scale=None,
+                        interpret=None):
     """q: (B,S,K,G,D); k,v: (B,T,K,D); out/do like q; lse: (B,S,K,G) fp32.
 
-    Returns (dq, dk, dv).
+    Returns (dq, dk, dv). None defaults resolve via the kernel find-db and
+    platform auto-detect, exactly like the forward (see
+    ``repro.kernels.findb``); explicit arguments always win.
     """
+    from repro.kernels import findb
     B, S, K, G, D = q.shape
     T = k.shape[1]
+    if interpret is None:
+        interpret = findb.default_interpret()
+    if q_block is None or kv_block is None:
+        tuned = findb.lookup_or_default(
+            "flash_attention_bwd", findb.attention_shape_key(
+                B=B, S=S, K=K, G=G, D=D, T=T, causal=causal, window=window))
+        q_block = tuned["q_block"] if q_block is None else q_block
+        kv_block = tuned["kv_block"] if kv_block is None else kv_block
     scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(D)
     q_block = min(q_block, S)
     kv_block = min(kv_block, T)

@@ -81,13 +81,21 @@ def _mlstm_kernel(q_ref, k_ref, v_ref, ig_ref, fg_ref, h_ref,
     m_ref[0] = m_new
 
 
-def mlstm_chunkwise(q, k, v, i_gate, f_gate, *, chunk=128, interpret=True):
+def mlstm_chunkwise(q, k, v, i_gate, f_gate, *, chunk=None, interpret=None):
     """q,k,v: (B, S, H, D); gates: (B, S, H). Returns h (B, S, H, D).
 
     Kernel computes the sequence outputs; final state stays in scratch (the
-    decode path carries state explicitly via repro.models.xlstm).
+    decode path carries state explicitly via repro.models.xlstm). None
+    defaults resolve via the kernel find-db / platform auto-detect
+    (``repro.kernels.findb``); explicit arguments always win.
     """
+    from repro.kernels import findb
     B, S, H, D = q.shape
+    if interpret is None:
+        interpret = findb.default_interpret()
+    if chunk is None:
+        chunk = findb.lookup_or_default(
+            "mlstm", findb.mlstm_shape_key(B=B, S=S, H=H, D=D))["chunk"]
     chunk = min(chunk, S)
     assert S % chunk == 0, f"S={S} must be divisible by chunk={chunk}"
     ns = S // chunk

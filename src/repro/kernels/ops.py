@@ -2,8 +2,14 @@
 
 Forward = Pallas kernel; backward = recompute through the jnp oracle
 (flash-style: nothing score-shaped is saved, the backward recomputes blocks).
-``interpret`` defaults to True so everything runs on CPU; TPU launchers pass
-interpret=False.
+
+Block sizes and ``interpret`` default to None and resolve through the
+kernel find-db (``repro.kernels.findb``): tuned configs per (shape,
+hardware) when present, hand-picked fallbacks otherwise, and interpret
+auto-detected from the platform (compiled path on TPU, interpreted
+elsewhere). Resolution happens in the public wrappers *before* the
+``custom_vjp`` boundary so the backward passes see concrete block sizes.
+Explicit arguments always win.
 """
 from __future__ import annotations
 
@@ -12,6 +18,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import findb
 from repro.kernels import flash_attention as fa_kernel
 from repro.kernels import flash_attention_bwd as fa_bwd_kernel
 from repro.kernels import mlstm as mlstm_kernel
@@ -19,19 +26,32 @@ from repro.kernels import rglru as rglru_kernel
 from repro.kernels import ref
 
 
+def _resolve_attention(q, k, causal, window, q_block, kv_block, interpret):
+    B, S, K, G, D = q.shape
+    if interpret is None:
+        interpret = findb.default_interpret()
+    if q_block is None or kv_block is None:
+        tuned = findb.lookup_or_default(
+            "flash_attention", findb.attention_shape_key(
+                B=B, S=S, K=K, G=G, D=D, T=k.shape[1],
+                causal=causal, window=window))
+        q_block = tuned["q_block"] if q_block is None else q_block
+        kv_block = tuned["kv_block"] if kv_block is None else kv_block
+    return int(q_block), int(kv_block), bool(interpret)
+
+
 # ---------------------------------------------------------------- attention
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
-def flash_attention(q, k, v, causal=True, window=None, q_block=128,
-                    kv_block=128, interpret=True):
+def _flash_attention(q, k, v, causal, window, q_block, kv_block, interpret):
     return fa_kernel.flash_attention(q, k, v, causal=causal, window=window,
                                      q_block=q_block, kv_block=kv_block,
                                      interpret=interpret)
 
 
 def _fa_fwd(q, k, v, causal, window, q_block, kv_block, interpret):
-    out = flash_attention(q, k, v, causal, window, q_block, kv_block,
-                          interpret)
+    out = _flash_attention(q, k, v, causal, window, q_block, kv_block,
+                           interpret)
     return out, (q, k, v)
 
 
@@ -44,12 +64,20 @@ def _fa_bwd(causal, window, q_block, kv_block, interpret, res, g):
     return vjp(g)
 
 
-flash_attention.defvjp(_fa_fwd, _fa_bwd)
+_flash_attention.defvjp(_fa_fwd, _fa_bwd)
+
+
+def flash_attention(q, k, v, causal=True, window=None, q_block=None,
+                    kv_block=None, interpret=None):
+    q_block, kv_block, interpret = _resolve_attention(
+        q, k, causal, window, q_block, kv_block, interpret)
+    return _flash_attention(q, k, v, causal, window, q_block, kv_block,
+                            interpret)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
-def flash_attention_fused(q, k, v, causal=True, window=None, q_block=128,
-                          kv_block=128, interpret=True):
+def _flash_attention_fused(q, k, v, causal, window, q_block, kv_block,
+                           interpret):
     """Kernel forward AND kernel backward (dq/dk/dv Pallas kernels) —
     score blocks never touch HBM in either direction."""
     out, _ = fa_kernel.flash_attention(
@@ -72,20 +100,28 @@ def _faf_bwd(causal, window, q_block, kv_block, interpret, res, g):
         q_block=q_block, kv_block=kv_block, interpret=interpret)
 
 
-flash_attention_fused.defvjp(_faf_fwd, _faf_bwd)
+_flash_attention_fused.defvjp(_faf_fwd, _faf_bwd)
+
+
+def flash_attention_fused(q, k, v, causal=True, window=None, q_block=None,
+                          kv_block=None, interpret=None):
+    q_block, kv_block, interpret = _resolve_attention(
+        q, k, causal, window, q_block, kv_block, interpret)
+    return _flash_attention_fused(q, k, v, causal, window, q_block,
+                                  kv_block, interpret)
 
 
 # ------------------------------------------------------------------- rglru
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
-def rglru(log_a, b, h0, chunk=128, r_block=128, interpret=True):
+def _rglru(log_a, b, h0, chunk, r_block, interpret):
     h, h_last = rglru_kernel.rglru_scan(log_a, b, h0, chunk=chunk,
                                         r_block=r_block, interpret=interpret)
     return h, h_last
 
 
 def _rglru_fwd(log_a, b, h0, chunk, r_block, interpret):
-    out = rglru(log_a, b, h0, chunk, r_block, interpret)
+    out = _rglru(log_a, b, h0, chunk, r_block, interpret)
     return out, (log_a, b, h0)
 
 
@@ -96,19 +132,31 @@ def _rglru_bwd(chunk, r_block, interpret, res, g):
     return vjp(g)
 
 
-rglru.defvjp(_rglru_fwd, _rglru_bwd)
+_rglru.defvjp(_rglru_fwd, _rglru_bwd)
+
+
+def rglru(log_a, b, h0, chunk=None, r_block=None, interpret=None):
+    B, S, R = log_a.shape
+    if interpret is None:
+        interpret = findb.default_interpret()
+    if chunk is None or r_block is None:
+        tuned = findb.lookup_or_default(
+            "rglru", findb.rglru_shape_key(B=B, S=S, R=R))
+        chunk = tuned["chunk"] if chunk is None else chunk
+        r_block = tuned["r_block"] if r_block is None else r_block
+    return _rglru(log_a, b, h0, int(chunk), int(r_block), bool(interpret))
 
 
 # ------------------------------------------------------------------- mlstm
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6))
-def mlstm(q, k, v, i_gate, f_gate, chunk=128, interpret=True):
+def _mlstm(q, k, v, i_gate, f_gate, chunk, interpret):
     return mlstm_kernel.mlstm_chunkwise(q, k, v, i_gate, f_gate, chunk=chunk,
                                         interpret=interpret)
 
 
 def _mlstm_fwd(q, k, v, i_gate, f_gate, chunk, interpret):
-    out = mlstm(q, k, v, i_gate, f_gate, chunk, interpret)
+    out = _mlstm(q, k, v, i_gate, f_gate, chunk, interpret)
     return out, (q, k, v, i_gate, f_gate)
 
 
@@ -119,4 +167,14 @@ def _mlstm_bwd(chunk, interpret, res, g):
     return vjp(g)
 
 
-mlstm.defvjp(_mlstm_fwd, _mlstm_bwd)
+_mlstm.defvjp(_mlstm_fwd, _mlstm_bwd)
+
+
+def mlstm(q, k, v, i_gate, f_gate, chunk=None, interpret=None):
+    B, S, H, D = q.shape
+    if interpret is None:
+        interpret = findb.default_interpret()
+    if chunk is None:
+        chunk = findb.lookup_or_default(
+            "mlstm", findb.mlstm_shape_key(B=B, S=S, H=H, D=D))["chunk"]
+    return _mlstm(q, k, v, i_gate, f_gate, int(chunk), bool(interpret))

@@ -33,16 +33,31 @@ def _rglru_kernel(la_ref, b_ref, h0_ref, o_ref, h_ref, *, chunk: int):
 
     def step(t, h):
         h = jnp.exp(la[t]) * h + b[t]
-        pl.store(o_ref, (0, pl.dslice(t, 1), slice(None)),
-                 h[None].astype(o_ref.dtype))
+        # dslice(0, 1) rather than a bare int: interpret-mode state
+        # discharge chokes on int indices mixed with dynamic slices
+        pl.store(o_ref, (pl.dslice(0, 1), pl.dslice(t, 1), slice(None)),
+                 h[None, None].astype(o_ref.dtype))
         return h
 
     h_ref[...] = jax.lax.fori_loop(0, chunk, step, h_ref[...])
 
 
-def rglru_scan(log_a, b, h0=None, *, chunk=128, r_block=128, interpret=True):
-    """log_a, b: (B, S, R) fp32; h0: (B, R) fp32. Returns (h, h_last)."""
+def rglru_scan(log_a, b, h0=None, *, chunk=None, r_block=None,
+               interpret=None):
+    """log_a, b: (B, S, R) fp32; h0: (B, R) fp32. Returns (h, h_last).
+
+    None defaults resolve via the kernel find-db / platform auto-detect
+    (``repro.kernels.findb``); explicit arguments always win.
+    """
+    from repro.kernels import findb
     B, S, R = log_a.shape
+    if interpret is None:
+        interpret = findb.default_interpret()
+    if chunk is None or r_block is None:
+        tuned = findb.lookup_or_default(
+            "rglru", findb.rglru_shape_key(B=B, S=S, R=R))
+        chunk = tuned["chunk"] if chunk is None else chunk
+        r_block = tuned["r_block"] if r_block is None else r_block
     if h0 is None:
         h0 = jnp.zeros((B, R), jnp.float32)
     chunk = min(chunk, S)

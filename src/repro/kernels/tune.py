@@ -1,0 +1,600 @@
+"""KernelTuneBackend: the tuner pointed at our own compute layer.
+
+PipeTune's thesis is that system parameters deserve the same tuning loop
+as hyperparameters. This module closes that loop on the repo itself: a
+``Backend``-protocol implementation whose "trials" time Pallas kernel
+variants — ``q_block``/``kv_block`` for flash attention (fwd + bwd),
+chunk/block sizes for mlstm and rglru, and the hillclimb system dims
+(remat policy, microbatches, precision) for whole train steps — per
+workload shape, reusing the existing ask/tell schedulers and executors
+unchanged. Winning configs land in a :class:`KernelConfigDB` find-db
+(MITuna's find-db/golden-db loop) keyed by ``(kernel, shape_key,
+hardware_key)``, where every kernel call site resolves them via
+``repro.kernels.findb.lookup_or_default``.
+
+Workload specs
+--------------
+``"<kernel>@k=v,k=v"`` or a named preset::
+
+    flash_attention@B=1,S=256,K=2,G=1,D=32    # fwd blocks
+    flash_attention_bwd@B=1,S=256,K=2,G=1,D=32
+    mlstm@B=1,S=256,H=2,D=32
+    rglru@B=1,S=512,R=128
+    train_step@arch=lenet-mnist,batch=64      # hillclimb system dims
+
+CLI (the MITuna-style golden loop)::
+
+    python -m repro.kernels.tune tune --workload flash-fwd-smoke
+    python -m repro.kernels.tune export --journal store.jsonl --out golden.json
+    python -m repro.kernels.tune import golden.json --store tcp://HOST:PORT
+    python -m repro.kernels.tune show --golden golden.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.backends import BackendCapabilities, EpochResult, TrialState
+from repro.core.groundtruth import (KernelConfigDB, export_golden,
+                                    load_golden)
+from repro.core.job import HPTJob, Param, SearchSpace
+from repro.core.profiler import EpochProfile
+from repro.kernels import findb
+
+__all__ = ["KernelTuneBackend", "PRESETS", "install_kernel_db",
+           "kernel_space", "parse_workload", "tune_kernel",
+           "workload_shape_key"]
+
+PRESETS = {
+    "flash-fwd-smoke": "flash_attention@B=1,S=256,K=2,G=1,D=32",
+    "flash-bwd-smoke": "flash_attention_bwd@B=1,S=256,K=2,G=1,D=32",
+    "mlstm-smoke": "mlstm@B=1,S=256,H=2,D=32",
+    "rglru-smoke": "rglru@B=1,S=512,R=128",
+    "train-smoke": "train_step@arch=lenet-mnist,batch=64",
+}
+
+# which variant keys each kernel understands (hparams and recognized
+# sys_cfg keys both feed these; everything else is ignored)
+KERNEL_KEYS = {
+    "flash_attention": ("q_block", "kv_block"),
+    "flash_attention_bwd": ("q_block", "kv_block"),
+    "mlstm": ("chunk",),
+    "rglru": ("chunk", "r_block"),
+    "train_step": ("remat", "microbatches", "precision", "donate"),
+}
+
+# the hand-picked config each kernel ran on before autotuning — what a
+# variant's speedup is measured against. train_step spells out the
+# RealBackend fallbacks explicitly so the baseline never resolves through
+# the find-db it is trying to beat.
+BASELINES = dict(findb.DEFAULTS)
+BASELINES["train_step"] = {"remat": "none", "microbatches": 1,
+                           "precision": "fp32"}
+
+_INT_KEYS = ("q_block", "kv_block", "chunk", "r_block", "microbatches")
+
+
+def parse_workload(spec: str) -> Tuple[str, Dict[str, Any]]:
+    """``"kernel@k=v,..."`` (or a PRESETS name) -> (kernel, dims)."""
+    spec = PRESETS.get(spec, spec)
+    kernel, _, dimstr = spec.partition("@")
+    if kernel not in KERNEL_KEYS:
+        raise ValueError(f"unknown kernel {kernel!r}; expected one of "
+                         f"{sorted(KERNEL_KEYS)} (or a preset: "
+                         f"{sorted(PRESETS)})")
+    dims: Dict[str, Any] = {}
+    for part in filter(None, dimstr.split(",")):
+        k, _, v = part.partition("=")
+        if not _ or not k:
+            raise ValueError(f"bad dim {part!r} in workload {spec!r}; "
+                             "expected k=v")
+        if v.lstrip("-").isdigit():
+            dims[k] = int(v)
+        elif v in ("True", "False"):
+            dims[k] = v == "True"
+        elif v == "none":
+            dims[k] = None
+        else:
+            dims[k] = v
+    if kernel in ("flash_attention", "flash_attention_bwd"):
+        for d in ("B", "S", "K", "G", "D"):
+            if d not in dims:
+                raise ValueError(f"{kernel} workload needs dim {d}")
+        dims.setdefault("T", dims["S"])
+        dims.setdefault("causal", True)
+        dims.setdefault("window", None)
+    elif kernel == "mlstm":
+        for d in ("B", "S", "H", "D"):
+            if d not in dims:
+                raise ValueError(f"mlstm workload needs dim {d}")
+    elif kernel == "rglru":
+        for d in ("B", "S", "R"):
+            if d not in dims:
+                raise ValueError(f"rglru workload needs dim {d}")
+    else:                                                 # train_step
+        if "arch" not in dims:
+            raise ValueError("train_step workload needs arch=<config id>")
+        dims.setdefault("batch", 64)
+        dims.setdefault("steps", 4)
+    return kernel, dims
+
+
+def workload_shape_key(kernel: str, dims: Dict[str, Any]) -> str:
+    """The exact key the kernel call sites look up — writing tuned entries
+    under it is what makes them take effect with no extra plumbing."""
+    if kernel in ("flash_attention", "flash_attention_bwd"):
+        return findb.attention_shape_key(
+            B=dims["B"], S=dims["S"], K=dims["K"], G=dims["G"],
+            D=dims["D"], T=dims["T"], causal=dims["causal"],
+            window=dims["window"])
+    if kernel == "mlstm":
+        return findb.mlstm_shape_key(B=dims["B"], S=dims["S"],
+                                     H=dims["H"], D=dims["D"])
+    if kernel == "rglru":
+        return findb.rglru_shape_key(B=dims["B"], S=dims["S"], R=dims["R"])
+    return findb.train_step_shape_key(arch=dims["arch"], batch=dims["batch"])
+
+
+def kernel_space(kernel: str, dims: Dict[str, Any]) -> SearchSpace:
+    """The variant search space for one kernel workload, pruned to blocks
+    that fit the shape (and, for mlstm, divide the sequence)."""
+    sizes = (32, 64, 128, 256)
+    if kernel in ("flash_attention", "flash_attention_bwd"):
+        qs = tuple(c for c in sizes if c <= dims["S"]) or (dims["S"],)
+        ks = tuple(c for c in sizes if c <= dims["T"]) or (dims["T"],)
+        return SearchSpace([Param("q_block", "choice", choices=qs),
+                            Param("kv_block", "choice", choices=ks)])
+    if kernel == "mlstm":
+        cs = tuple(c for c in sizes
+                   if c <= dims["S"] and dims["S"] % c == 0) or (dims["S"],)
+        return SearchSpace([Param("chunk", "choice", choices=cs)])
+    if kernel == "rglru":
+        cs = tuple(c for c in sizes if c <= dims["S"]) or (dims["S"],)
+        rs = tuple(c for c in sizes if c <= dims["R"]) or (dims["R"],)
+        return SearchSpace([Param("chunk", "choice", choices=cs),
+                            Param("r_block", "choice", choices=rs)])
+    return SearchSpace([Param("remat", "choice", choices=("none", "block")),
+                        Param("microbatches", "choice", choices=(1, 2, 4))])
+
+
+def variant_config(kernel: str, hparams: dict, sys_cfg: dict) -> dict:
+    """The concrete kernel config one trial epoch measures: recognized keys
+    from the trial's hparams, overridden by recognized sys_cfg keys (so
+    system-probing tuners like PipeTune can drive the same backend)."""
+    keys = KERNEL_KEYS[kernel]
+    cfg = {k: hparams[k] for k in keys if k in hparams}
+    cfg.update({k: sys_cfg[k] for k in keys if k in sys_cfg})
+    merged = dict(BASELINES[kernel])
+    merged.update(cfg)
+    return {k: (int(v) if k in _INT_KEYS else v)
+            for k, v in merged.items()}
+
+
+class KernelTuneBackend:
+    """``Backend`` whose epochs time one kernel variant per call.
+
+    ``accuracy`` is the variant's *speedup over the kernel's baseline
+    config* (maximized by every scheduler under the default "accuracy"
+    objective), ``loss`` is the measured median wall time in seconds —
+    so ASHA/HyperBand rungs, grid/random search, and PBT all tune kernels
+    with zero scheduler changes. Variants are jit-compiled once (charged
+    to ``compile_s``, mirroring RealBackend's compile-spike accounting)
+    and timed warm — probe measurements compare warm-vs-warm or the
+    already-warm default always wins. Measurements are serialized under
+    one lock so parallel/sharded executors can drive the backend without
+    the timings contending with each other.
+    """
+
+    def __init__(self, reps: int = 3, warmup: int = 1,
+                 interpret: Optional[bool] = None):
+        self.reps = max(1, int(reps))
+        self.warmup = max(0, int(warmup))
+        self.interpret = interpret
+        self.trials_timed = 0
+        self._baselines: Dict[str, float] = {}
+        self._jit_cache: Dict[tuple, Any] = {}
+        self._real = None                      # lazy RealBackend (train_step)
+        self._real_states: Dict[str, Any] = {}
+        self._lock = threading.RLock()         # serializes timing + caches
+
+    def capabilities(self) -> BackendCapabilities:
+        return BackendCapabilities(async_precompile=False, simulated=False,
+                                   deterministic=False)
+
+    # ------------------------------------------------------------- protocol
+    def init_trial(self, workload: str, hparams: dict, seed: int = 0
+                   ) -> TrialState:
+        kernel, dims = parse_workload(workload)
+        data = self._make_inputs(kernel, dims, seed)
+        return TrialState(workload=workload, hparams=dict(hparams),
+                          cfg={"kernel": kernel, "dims": dims}, params=None,
+                          opt_state=None, step=0, epoch=0, data=data,
+                          eval_batch={}, seed=seed)
+
+    def run_epoch(self, ts: TrialState, sys_cfg: dict, collect_profile=True
+                  ) -> Tuple[TrialState, EpochResult]:
+        kernel, dims = ts.cfg["kernel"], ts.cfg["dims"]
+        cfg = variant_config(kernel, ts.hparams, sys_cfg)
+        with self._lock:
+            base_s = self._baseline_time(ts)
+            med, times, extra_s = self._time_config(ts, cfg)
+            self.trials_timed += 1
+        ts.epoch += 1
+        ts.step += len(times)
+        ts.loss_last = med
+        profile = EpochProfile({})
+        if collect_profile:
+            profile = EpochProfile({
+                "rt.step_time_mean": float(np.mean(times)),
+                "rt.step_time_p90": float(np.percentile(times, 90)),
+                "shape.batch": float(dims.get("B", dims.get("batch", 1))),
+            })
+        return ts, EpochResult(
+            duration_s=float(np.sum(times)), energy_j=0.0, loss=med,
+            accuracy=base_s / max(med, 1e-12), profile=profile,
+            sys_config=dict(cfg), step_times=list(times), compile_s=extra_s)
+
+    # ------------------------------------------------------------- plumbing
+    def _make_inputs(self, kernel: str, dims: Dict[str, Any], seed: int):
+        import jax.numpy as jnp
+        rng = np.random.RandomState(seed + 17)
+
+        def f32(*shape):
+            return jnp.asarray(rng.randn(*shape), jnp.float32)
+
+        if kernel in ("flash_attention", "flash_attention_bwd"):
+            B, S, K, G, D, T = (dims[k] for k in
+                                ("B", "S", "K", "G", "D", "T"))
+            q, k, v = f32(B, S, K, G, D), f32(B, T, K, D), f32(B, T, K, D)
+            if kernel == "flash_attention":
+                return {"args": (q, k, v)}
+            from repro.kernels import flash_attention as fa
+            out, lse = fa.flash_attention(
+                q, k, v, causal=dims["causal"], window=dims["window"],
+                q_block=BASELINES[kernel]["q_block"],
+                kv_block=BASELINES[kernel]["kv_block"],
+                interpret=self._interpret(), return_lse=True)
+            return {"args": (q, k, v, out, lse, f32(B, S, K, G, D))}
+        if kernel == "mlstm":
+            B, S, H, D = (dims[k] for k in ("B", "S", "H", "D"))
+            return {"args": (f32(B, S, H, D), f32(B, S, H, D),
+                             f32(B, S, H, D), f32(B, S, H), f32(B, S, H))}
+        if kernel == "rglru":
+            B, S, R = dims["B"], dims["S"], dims["R"]
+            log_a = jnp.asarray(-np.abs(rng.randn(B, S, R)) * 0.1,
+                                jnp.float32)
+            return {"args": (log_a, f32(B, S, R))}
+        return {"train": True}                               # train_step
+
+    def _interpret(self) -> bool:
+        return (findb.default_interpret() if self.interpret is None
+                else self.interpret)
+
+    def _build_call(self, ts: TrialState, cfg: dict):
+        """(callable, args) for one variant — a partial over the raw kernel
+        driver, so jit sees the arrays as real arguments (never folds the
+        whole call into a constant)."""
+        import functools
+        kernel, dims = ts.cfg["kernel"], ts.cfg["dims"]
+        interpret = self._interpret()
+        args = ts.data.get("args")
+        if kernel == "flash_attention":
+            from repro.kernels import flash_attention as fa
+            fn = functools.partial(
+                fa.flash_attention, causal=dims["causal"],
+                window=dims["window"], q_block=cfg["q_block"],
+                kv_block=cfg["kv_block"], interpret=interpret)
+        elif kernel == "flash_attention_bwd":
+            from repro.kernels import flash_attention_bwd as fab
+            fn = functools.partial(
+                fab.flash_attention_bwd, causal=dims["causal"],
+                window=dims["window"], q_block=cfg["q_block"],
+                kv_block=cfg["kv_block"], interpret=interpret)
+        elif kernel == "mlstm":
+            from repro.kernels import mlstm as ml
+            fn = functools.partial(ml.mlstm_chunkwise, chunk=cfg["chunk"],
+                                   interpret=interpret)
+        else:
+            from repro.kernels import rglru as rg
+            fn = functools.partial(rg.rglru_scan, chunk=cfg["chunk"],
+                                   r_block=cfg["r_block"],
+                                   interpret=interpret)
+        return fn, args
+
+    def _jitted(self, ts: TrialState, cfg: dict):
+        """Compiled variant callable + its args + whether this call site
+        still owes its compile (first build)."""
+        import jax
+        key = (ts.workload, tuple(sorted(cfg.items())))
+        ent = self._jit_cache.get(key)
+        if ent is not None:
+            return ent[0], ent[1], False
+        fn, args = self._build_call(ts, cfg)
+        jfn = jax.jit(fn)
+        self._jit_cache[key] = (jfn, args)
+        return jfn, args, True
+
+    def _time_call(self, ts: TrialState, cfg: dict
+                   ) -> Tuple[float, List[float], float]:
+        import jax
+        jfn, args, cold = self._jitted(ts, cfg)
+        build_s = 0.0
+        if cold:                     # compile + first run, charged like
+            t0 = time.perf_counter()  # RealBackend's compile-spike strip
+            jax.block_until_ready(jfn(*args))
+            build_s = time.perf_counter() - t0
+        for _ in range(self.warmup):
+            jax.block_until_ready(jfn(*args))
+        times = []
+        for _ in range(self.reps):
+            t0 = time.perf_counter()
+            jax.block_until_ready(jfn(*args))
+            times.append(time.perf_counter() - t0)
+        # min, not median: scheduler noise is strictly additive on a warm
+        # jitted call, so the fastest rep is the best cost estimate
+        return float(np.min(times)), times, build_s
+
+    def _time_train_step(self, ts: TrialState, cfg: dict
+                         ) -> Tuple[float, List[float], float]:
+        from repro.core.backends import RealBackend
+        dims = ts.cfg["dims"]
+        if self._real is None:
+            self._real = RealBackend(steps_per_epoch=int(dims["steps"]))
+        key = (ts.workload, findb.shape_key(**{k: v for k, v in cfg.items()}))
+        inner = self._real_states.get(key)
+        if inner is None:
+            inner = self._real.init_trial(
+                dims["arch"], {"batch_size": int(dims["batch"])},
+                seed=ts.seed)
+            self._real_states[key] = inner
+        inner, res = self._real.run_epoch(inner, dict(cfg),
+                                          collect_profile=False)
+        self._real_states[key] = inner
+        med = (float(np.median(res.step_times)) if res.step_times
+               else res.duration_s)
+        return med, list(res.step_times), res.compile_s
+
+    def _time_config(self, ts: TrialState, cfg: dict
+                     ) -> Tuple[float, List[float], float]:
+        if ts.cfg["kernel"] == "train_step":
+            return self._time_train_step(ts, cfg)
+        return self._time_call(ts, cfg)
+
+    def _baseline_time(self, ts: TrialState) -> float:
+        """Median wall time of the kernel's hand-picked default config,
+        measured once per workload and cached — the denominator of every
+        variant's speedup."""
+        base = self._baselines.get(ts.workload)
+        if base is None:
+            cfg = variant_config(ts.cfg["kernel"], {}, {})
+            base, _, _ = self._time_config(ts, cfg)
+            self._baselines[ts.workload] = base
+        return base
+
+
+# ---------------------------------------------------------------------------
+# the find-db loop: tune -> persist -> resolve; golden export/import
+# ---------------------------------------------------------------------------
+
+def tune_kernel(workload: str, *, db: Optional[KernelConfigDB] = None,
+                store=None, scheduler: str = "grid",
+                trials: Optional[int] = None, executor=None,
+                reps: int = 3, warmup: int = 1, epochs: int = 1,
+                seed: int = 0, interpret: Optional[bool] = None,
+                force: bool = False,
+                hardware: Optional[str] = None) -> Dict[str, Any]:
+    """Resolve-or-tune one kernel workload; returns a summary dict.
+
+    The warm path is the whole point: a find-db (or store) hit returns the
+    known-best config with **zero** tuning trials. A miss runs the variant
+    space through the standard ``Experiment`` machinery (any registered
+    scheduler/executor), persists the winner in ``db`` (and ``store`` when
+    given — one batched ``kernel_db`` round-trip), and reports
+    tuned-vs-default wall time.
+    """
+    db = db if db is not None else findb.get_find_db()
+    hw = hardware if hardware is not None else findb.hardware_key()
+    kernel, dims = parse_workload(workload)
+    skey = workload_shape_key(kernel, dims)
+    if not force:
+        cached = db.get(kernel, skey, hw)
+        if cached is None and store is not None:
+            cached = store.kernel_find(
+                [{"kernel": kernel, "shape": skey, "hardware": hw}])[0]
+            if cached is not None:              # warm the local db too
+                db.put(kernel, skey, cached, hardware=hw)
+        if cached is not None:
+            return {"workload": workload, "kernel": kernel, "shape": skey,
+                    "hardware": hw, "source": "find-db", "trials": 0,
+                    "config": dict(cached), "default_s": None,
+                    "tuned_s": None, "speedup": None}
+
+    from repro.api import Experiment
+    backend = KernelTuneBackend(reps=reps, warmup=warmup,
+                                interpret=interpret)
+    job = HPTJob(workload=PRESETS.get(workload, workload),
+                 space=kernel_space(kernel, dims), objective="accuracy",
+                 max_epochs=epochs, seed=seed)
+    sch_kw = {}
+    if trials is not None and scheduler == "random":
+        sch_kw["n_trials"] = int(trials)
+    exp = (Experiment(job).with_tuner("v1").with_backend(backend)
+           .with_scheduler(scheduler, **sch_kw))
+    if executor is not None:
+        exp.with_executor(executor)
+    res = exp.run()
+    best = res.best_record
+    if best is None or not best.epochs:
+        raise RuntimeError(f"kernel tuning produced no trials for "
+                           f"{workload!r}")
+    cfg = variant_config(kernel, best.hparams, {})
+    # headline numbers: re-time default and winner back-to-back (warm jits,
+    # interleaved, min-of-all) so the reported speedup never compares
+    # measurements taken under different machine load
+    base_cfg = variant_config(kernel, {}, {})
+    ts = backend.init_trial(PRESETS.get(workload, workload), {}, seed=seed)
+    d_times, t_times = [], []
+    for _ in range(2):
+        d, _, _ = backend._time_config(ts, base_cfg)
+        t, _, _ = backend._time_config(ts, cfg)
+        d_times.append(d)
+        t_times.append(t)
+    default_s, tuned_s = min(d_times), min(t_times)
+    db.put(kernel, skey, cfg, hardware=hw, objective=tuned_s)
+    if store is not None:
+        store.kernel_put([{"kernel": kernel, "shape": skey, "hardware": hw,
+                           "config": cfg, "objective": tuned_s}])
+    return {"workload": workload, "kernel": kernel, "shape": skey,
+            "hardware": hw, "source": "tuned", "trials": len(res.records),
+            "config": cfg, "default_s": default_s, "tuned_s": tuned_s,
+            "speedup": default_s / max(tuned_s, 1e-12),
+            "tuning_time_s": res.tuning_time_s,
+            "wall_time_s": res.wall_time_s}
+
+
+def _store_client(addr: str):
+    from repro.service.transport import SocketTransport, StoreClient
+    hostport = addr[len("tcp://"):]
+    host, _, port = hostport.rpartition(":")
+    return StoreClient(SocketTransport(host or "127.0.0.1", int(port)))
+
+
+def install_kernel_db(spec: str,
+                      db: Optional[KernelConfigDB] = None) -> int:
+    """Prime a find-db (the process-wide one by default) from ``spec``:
+    a golden table JSON, a service journal (JSONL), or ``tcp://HOST:PORT``
+    of a live store. Returns the number of rows installed."""
+    db = db if db is not None else findb.get_find_db()
+    if spec.startswith("tcp://"):
+        with _store_client(spec) as client:
+            return db.merge_rows(client.kernel_export())
+    try:
+        return db.merge_rows(load_golden(spec))
+    except Exception as golden_err:            # noqa: BLE001 — try journal
+        from repro.service.service import GroundTruthService
+        try:
+            svc = GroundTruthService(path=spec)
+            rows = svc.kernel_db.rows()
+            svc.close()
+        except Exception:                      # noqa: BLE001 — neither format
+            raise golden_err from None
+        return db.merge_rows(rows)
+
+
+def _rows_from_source(args) -> List[dict]:
+    if getattr(args, "store", None):
+        with _store_client(args.store) as client:
+            return client.kernel_export()
+    if getattr(args, "journal", None):
+        from repro.service.service import GroundTruthService
+        svc = GroundTruthService(path=args.journal)
+        rows = svc.kernel_db.rows()
+        svc.close()
+        return rows
+    if getattr(args, "golden", None):
+        return load_golden(args.golden)
+    raise SystemExit("need a source: --store tcp://HOST:PORT, "
+                     "--journal PATH, or --golden PATH")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.kernels.tune",
+        description="Kernel autotuning + find-db golden loop")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    t = sub.add_parser("tune", help="tune workloads, persist winners")
+    t.add_argument("--workload", action="append", default=None,
+                   metavar="SPEC", help="preset name or kernel@k=v,... "
+                   f"(presets: {', '.join(sorted(PRESETS))}); repeatable; "
+                   "default: every preset kernel workload")
+    t.add_argument("--scheduler", default="grid")
+    t.add_argument("--trials", type=int, default=None,
+                   help="trial budget (random scheduler)")
+    t.add_argument("--reps", type=int, default=3)
+    t.add_argument("--warmup", type=int, default=1)
+    t.add_argument("--store", default=None, metavar="tcp://HOST:PORT",
+                   help="also persist winners to a live store")
+    t.add_argument("--golden", default=None, metavar="PATH",
+                   help="also write/refresh a golden table at PATH")
+    t.add_argument("--force", action="store_true",
+                   help="re-tune even on a find-db hit")
+
+    e = sub.add_parser("export", help="dump a golden config table")
+    e.add_argument("--out", required=True, metavar="PATH")
+    e.add_argument("--store", default=None, metavar="tcp://HOST:PORT")
+    e.add_argument("--journal", default=None, metavar="PATH")
+    e.add_argument("--golden", default=None, metavar="PATH")
+
+    i = sub.add_parser("import", help="load a golden table into a store")
+    i.add_argument("golden_file", metavar="GOLDEN.json")
+    i.add_argument("--store", default=None, metavar="tcp://HOST:PORT")
+    i.add_argument("--journal", default=None, metavar="PATH",
+                   help="journal file of a (stopped) service to append to")
+
+    s = sub.add_parser("show", help="print find-db rows")
+    s.add_argument("--store", default=None, metavar="tcp://HOST:PORT")
+    s.add_argument("--journal", default=None, metavar="PATH")
+    s.add_argument("--golden", default=None, metavar="PATH")
+
+    args = ap.parse_args(argv)
+    if args.cmd == "tune":
+        specs = args.workload or [w for w in sorted(PRESETS)
+                                  if w != "train-smoke"]
+        store = _store_client(args.store) if args.store else None
+        db = findb.get_find_db()
+        if args.golden:
+            try:
+                db.merge_rows(load_golden(args.golden))
+            except Exception:                  # noqa: BLE001 — fresh table
+                pass
+        try:
+            summaries = [tune_kernel(w, db=db, store=store,
+                                     scheduler=args.scheduler,
+                                     trials=args.trials, reps=args.reps,
+                                     warmup=args.warmup, force=args.force)
+                         for w in specs]
+        finally:
+            if store is not None:
+                store.close()
+        if args.golden:
+            export_golden(db.rows(), args.golden)
+        json.dump(summaries, sys.stdout, indent=1, sort_keys=True)
+        sys.stdout.write("\n")
+        return 0
+    if args.cmd == "export":
+        n = export_golden(_rows_from_source(args), args.out)
+        print(f"exported {n} entries -> {args.out}")
+        return 0
+    if args.cmd == "import":
+        rows = load_golden(args.golden_file)
+        if args.store:
+            with _store_client(args.store) as client:
+                n = client.kernel_put(rows)
+            print(f"imported {len(rows)} entries -> {args.store} "
+                  f"(store now holds {n})")
+        elif args.journal:
+            from repro.service.service import GroundTruthService
+            svc = GroundTruthService(path=args.journal)
+            resp = svc.handle({"op": "kernel_db", "puts": rows})
+            svc.close()
+            if not resp.get("ok"):
+                raise SystemExit(f"import failed: {resp.get('error')}")
+            print(f"imported {len(rows)} entries -> {args.journal} "
+                  f"(journal now holds {resp['n_kernel_entries']})")
+        else:
+            raise SystemExit("need a destination: --store or --journal")
+        return 0
+    json.dump(_rows_from_source(args), sys.stdout, indent=1, sort_keys=True)
+    sys.stdout.write("\n")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -217,6 +217,30 @@ def store_client_from_args(args: argparse.Namespace):
     return StoreClient(InprocTransport(service))
 
 
+def add_kernel_db_arg(ap: argparse.ArgumentParser
+                      ) -> argparse.ArgumentParser:
+    """``--kernel-db``: prime the process-wide kernel find-db before any
+    kernel call compiles, so tuned block sizes from a previous ``python -m
+    repro.kernels.tune`` run (or a shared store) take effect here."""
+    ap.add_argument("--kernel-db", default=None, metavar="SPEC",
+                    help="prime the kernel config find-db from SPEC: a "
+                         "golden table JSON (`repro.kernels.tune export`), "
+                         "a service journal (JSONL), or tcp://HOST:PORT of "
+                         "a running `python -m repro.service`")
+    return ap
+
+
+def install_kernel_db_from_args(args: argparse.Namespace) -> int:
+    """Apply ``--kernel-db`` (no-op when unset). Returns rows installed."""
+    spec = getattr(args, "kernel_db", None)
+    if not spec:
+        return 0
+    from repro.kernels.tune import install_kernel_db
+    n = install_kernel_db(spec)
+    print(f"kernel find-db: {n} tuned configs from {spec}")
+    return n
+
+
 def add_system_args(ap: argparse.ArgumentParser,
                     microbatches: int = 1, remat: str = "none",
                     precision: str = "fp32") -> argparse.ArgumentParser:

@@ -17,7 +17,9 @@ from repro import configs
 from repro.checkpoint import CheckpointManager
 from repro.data import synthetic
 from repro.launch import steps as steps_lib
-from repro.launch.sysargs import add_system_args, system_config_from_args
+from repro.launch.sysargs import (add_kernel_db_arg, add_system_args,
+                                  install_kernel_db_from_args,
+                                  system_config_from_args)
 from repro.optim import optimizers
 
 
@@ -30,6 +32,7 @@ def main():
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--lr", type=float, default=3e-4)
     add_system_args(ap)
+    add_kernel_db_arg(ap)   # tuned kernel configs from a prior tune run
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--ckpt-every", type=int, default=25)
     ap.add_argument("--resume", action="store_true")
@@ -39,6 +42,7 @@ def main():
         else configs.get_config(args.arch)
     if steps_lib.is_encdec(cfg):
         raise SystemExit("use whisper paths via examples; train.py covers LM")
+    install_kernel_db_from_args(args)
     sys = system_config_from_args(args)
     opt = optimizers.adamw(
         optimizers.warmup_cosine(args.lr, 10, args.steps), weight_decay=0.01)

@@ -17,8 +17,10 @@ from repro.api import (Experiment, available_backends, available_executors,
                        available_schedulers, available_tuners)
 from repro.core import SearchSpace
 from repro.core.job import HPTJob, Param
-from repro.launch.sysargs import (add_executor_args, add_store_args,
-                                  executor_from_args, store_client_from_args)
+from repro.launch.sysargs import (add_executor_args, add_kernel_db_arg,
+                                  add_store_args, executor_from_args,
+                                  install_kernel_db_from_args,
+                                  store_client_from_args)
 
 
 def main():
@@ -34,6 +36,7 @@ def main():
                     help=f"backend name; registered: {available_backends()}")
     add_executor_args(ap)   # --executor / --parallelism / --cluster-nodes
     add_store_args(ap)      # --store / --gt-store / --store-reset
+    add_kernel_db_arg(ap)   # --kernel-db: tuned kernel configs
     ap.add_argument("--plugin", action="append", default=[],
                     help="module to import for register_* side effects")
     ap.add_argument("--out", default=None)
@@ -41,6 +44,7 @@ def main():
 
     for mod in args.plugin:
         importlib.import_module(mod)
+    install_kernel_db_from_args(args)
 
     space = SearchSpace([
         Param("batch_size", "choice", choices=(32, 64, 128)),

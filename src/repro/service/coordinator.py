@@ -426,6 +426,16 @@ class ElasticWorkerPoolExecutor(WorkerPoolExecutor):
                                       bus=self.pool.bus)
         return tid
 
+    def run_wave(self, runner, workload: str, proposals):
+        # a wave boundary forces a sync (one version ping; the roster is
+        # only re-read when it bumped): a worker that announced while the
+        # scheduler was deciding must be dispatched to in *this* wave, not
+        # whenever the rate-limited maintenance hook next fires — a fast
+        # run can otherwise finish inside the refresh_s window and never
+        # see the join
+        self.sync_roster(force=True)
+        return super().run_wave(runner, workload, proposals)
+
     def sync_roster(self, force: bool = False) -> None:
         """Reconcile the pool with the coordinator's live roster: joins
         become ``RemoteWorker``s, leaves retire (re-placing their trials).

@@ -16,6 +16,18 @@ response carries ``ok`` plus op-specific fields and the current store
     snapshot  -> {ok, version, n_entries, hits, misses, model}
     batch     -> {ok, version, results: [...]}     (sub-requests in order;
                                                     one journal flush)
+    kernel_db -> {ok, version, n_kernel_entries,   (batched find-db op:
+                  configs: [...], entries?: [...]}  puts then queries then
+                                                    optional export, one
+                                                    journal flush)
+
+``kernel_db`` is the kernel find-db protocol (MITuna-style): one request
+carries any mix of ``puts`` (tuned configs keyed by ``(kernel, shape,
+hardware)``, journaled write-ahead like ``add``), ``queries`` (answered
+in order with the best-known config or None), and ``export`` (dump every
+row for a golden table). Batching puts+queries into one op keeps a
+tuning sweep's store traffic to one round-trip and its journal cost to
+one write + flush.
 
 ``batch`` runs a list of sub-requests (any op but ``batch``) atomically
 under the service lock and answers each with its own ``{ok, version,
@@ -47,13 +59,14 @@ from typing import Any, Dict, Optional
 
 import numpy as np
 
-from repro.core.groundtruth import GroundTruth, GroundTruthError
+from repro.core.groundtruth import (GroundTruth, GroundTruthError,
+                                    KernelConfigDB)
 from repro.obs.events import StoreRefit, get_bus
 
 __all__ = ["GroundTruthService"]
 
 _OPS = ("version", "lookup", "add", "refit", "snapshot", "batch",
-        "obs_trace")
+        "obs_trace", "kernel_db")
 
 
 class GroundTruthService:
@@ -67,6 +80,7 @@ class GroundTruthService:
     def __init__(self, store: Optional[GroundTruth] = None,
                  path: Optional[str] = None, reset: bool = False, **gt_kw):
         self.store = store if store is not None else GroundTruth(**gt_kw)
+        self.kernel_db = KernelConfigDB()
         self.path = path
         self.bus = get_bus()
         self._lock = threading.RLock()
@@ -142,6 +156,42 @@ class GroundTruthService:
                 "hits": self.store.hits, "misses": self.store.misses,
                 "model": None if model is None else model.to_payload()}
 
+    def _op_kernel_db(self, req) -> dict:
+        """Kernel find-db: apply ``puts``, answer ``queries``, optionally
+        ``export`` every row — one op, one journal write + flush.
+
+        All puts are validated and journaled (write-ahead, like ``add``)
+        before any is applied, so a request that dies on a malformed put
+        mutates nothing and journals nothing.
+        """
+        recs = []
+        for p in (req.get("puts") or []):
+            recs.append({"op": "kernel_put",
+                         "kernel": str(p["kernel"]),
+                         "shape": str(p["shape"]),
+                         "hardware": str(p.get("hardware", "any")),
+                         "config": dict(p["config"]),
+                         "objective": None if p.get("objective") is None
+                         else float(p["objective"])})
+        if recs and self._journal is not None:
+            lines = [json.dumps(r) + "\n" for r in recs]
+            if self._journal_buffer is not None:  # inside a batch: pipeline
+                self._journal_buffer.extend(lines)
+            else:
+                self._journal.write("".join(lines))
+                self._journal.flush()
+        for r in recs:
+            self.kernel_db.put(r["kernel"], r["shape"], r["config"],
+                               hardware=r["hardware"],
+                               objective=r["objective"])
+        configs = [self.kernel_db.get(str(q["kernel"]), str(q["shape"]),
+                                      str(q.get("hardware", "any")))
+                   for q in (req.get("queries") or [])]
+        out = {"n_kernel_entries": len(self.kernel_db), "configs": configs}
+        if req.get("export"):
+            out["entries"] = self.kernel_db.rows()
+        return out
+
     def _op_batch(self, req) -> dict:
         """Run sub-requests in order with one journal flush at the end.
 
@@ -186,6 +236,7 @@ class GroundTruthService:
         tail_open = not raw.endswith("\n")      # crash mid-append
         records = [line for line in raw.split("\n") if line.strip()]
         applied = []
+        applied_adds = False
 
         def corrupt(i, why, hint=""):
             return GroundTruthError(
@@ -207,7 +258,20 @@ class GroundTruthService:
                     break
                 raise corrupt(i, e) from None
             try:
-                if not isinstance(rec, dict) or rec.get("op") != "add":
+                op = rec.get("op") if isinstance(rec, dict) else None
+                if op == "kernel_put":
+                    # replay runs in __init__ (uncontended), but the find-db
+                    # is written under the lock everywhere else — keep the
+                    # discipline uniform
+                    with self._lock:
+                        self.kernel_db.put(
+                            rec["kernel"], rec["shape"], dict(rec["config"]),
+                            hardware=str(rec.get("hardware", "any")),
+                            objective=None if rec.get("objective") is None
+                            else float(rec["objective"]))
+                    applied.append(line)
+                    continue
+                if not isinstance(rec, dict) or op != "add":
                     looks_like_save = isinstance(rec, list) or (
                         isinstance(rec, dict) and "entries" in rec)
                     raise corrupt(
@@ -221,6 +285,7 @@ class GroundTruthService:
                                rec["workload"], dict(rec["sys_config"]),
                                float(rec["objective"]), refit=False)
                 applied.append(line)
+                applied_adds = True
             except GroundTruthError:
                 raise
             except (ValueError, KeyError, TypeError, AttributeError) as e:
@@ -233,7 +298,7 @@ class GroundTruthService:
             with open(tmp, "w") as f:
                 f.write("".join(line + "\n" for line in applied))
             os.replace(tmp, path)
-        if applied:
+        if applied_adds:
             self.store.refit()
 
     def close(self):

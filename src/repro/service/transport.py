@@ -410,6 +410,40 @@ class StoreClient:
     def snapshot(self) -> Dict[str, Any]:
         return self._request({"op": "snapshot"})
 
+    # ------------------------------------------------------- kernel find-db
+    @staticmethod
+    def _kernel_row(row: Dict[str, Any]) -> Dict[str, Any]:
+        out = {"kernel": str(row["kernel"]), "shape": str(row["shape"]),
+               "hardware": str(row.get("hardware", "any"))}
+        if "config" in row:
+            out["config"] = dict(row["config"])
+            out["objective"] = (None if row.get("objective") is None
+                                else float(row["objective"]))
+        return out
+
+    def kernel_put(self, entries: Sequence[Dict[str, Any]]) -> int:
+        """Persist tuned kernel configs (``{kernel, shape, config,
+        hardware?, objective?}`` rows) in one journaled round-trip;
+        returns the server's total find-db entry count."""
+        resp = self._request({
+            "op": "kernel_db",
+            "puts": [self._kernel_row(e) for e in entries]})
+        return resp["n_kernel_entries"]
+
+    def kernel_find(self, queries: Sequence[Dict[str, Any]]
+                    ) -> List[Optional[dict]]:
+        """Best-known config (or None) for each ``{kernel, shape,
+        hardware?}`` query, answered in order from one round-trip."""
+        resp = self._request({
+            "op": "kernel_db",
+            "queries": [self._kernel_row(q) for q in queries]})
+        return resp["configs"]
+
+    def kernel_export(self) -> List[dict]:
+        """Every find-db row — the golden-table export path."""
+        resp = self._request({"op": "kernel_db", "export": True})
+        return resp["entries"]
+
     def close(self):
         self.transport.close()
 

@@ -1,0 +1,291 @@
+"""Kernel autotuning acceptance surface: the find-db store (exact-hw >
+wildcard > default resolution, miss-never-blocks), the batched ``kernel_db``
+wire op (inproc == TCP bit-identity, journal replay), golden export/import,
+the ``KernelTuneBackend`` Backend-protocol contract, and the warm
+zero-trial fast path that is the whole point of a find-db."""
+import json
+import threading
+
+import pytest
+
+from repro.core.groundtruth import (GOLDEN_FORMAT, GroundTruthError,
+                                    KernelConfigDB, export_golden,
+                                    load_golden)
+from repro.service import (GroundTruthService, GroundTruthTCPServer,
+                           InprocTransport, SocketTransport, StoreClient,
+                           StoreError)
+
+
+def _inproc(svc):
+    return StoreClient(InprocTransport(svc))
+
+
+@pytest.fixture
+def tcp_client():
+    """StoreClient over a real TCP connection on an ephemeral port."""
+    made = []
+
+    def make(service):
+        server = GroundTruthTCPServer(("127.0.0.1", 0), service)
+        threading.Thread(target=server.serve_forever, daemon=True).start()
+        client = StoreClient(
+            SocketTransport("127.0.0.1", server.server_address[1]))
+        made.append((server, client))
+        return client
+
+    yield make
+    for server, client in made:
+        client.close()
+        server.shutdown()
+
+
+# ------------------------------------------------------------ KernelConfigDB
+
+def test_db_exact_hardware_beats_wildcard_beats_default():
+    db = KernelConfigDB()
+    db.put("mlstm", "B=1,S=256", {"chunk": 64})                   # "any"
+    db.put("mlstm", "B=1,S=256", {"chunk": 32}, hardware="cpu/x86")
+    assert db.get("mlstm", "B=1,S=256", "cpu/x86") == {"chunk": 32}
+    assert db.get("mlstm", "B=1,S=256", "tpu/v5e") == {"chunk": 64}
+    assert db.get("mlstm", "B=9,S=1") is None
+    assert db.lookup_or_default("mlstm", "B=9,S=1",
+                                {"chunk": 128}) == {"chunk": 128}
+    # tuned entry overlays the default, unknown keys survive
+    got = db.lookup_or_default("mlstm", "B=1,S=256",
+                               {"chunk": 128, "extra": 7}, "cpu/x86")
+    assert got == {"chunk": 32, "extra": 7}
+
+
+def test_db_miss_never_blocks_or_mutates():
+    db = KernelConfigDB()
+    default = {"q_block": 128, "kv_block": 128}
+    assert db.lookup_or_default("flash_attention", "B=1", default) == default
+    assert len(db) == 0                    # a miss writes nothing
+    default["q_block"] = -1                # and never aliases the caller's
+    assert db.lookup_or_default("flash_attention", "B=1",
+                                {"q_block": 128})["q_block"] == 128
+
+
+def test_db_get_returns_copies():
+    db = KernelConfigDB()
+    db.put("rglru", "S=512", {"chunk": 128, "r_block": 64})
+    db.get("rglru", "S=512")["chunk"] = -1
+    assert db.get("rglru", "S=512")["chunk"] == 128
+
+
+def test_golden_round_trip_identical_lookups(tmp_path):
+    db = KernelConfigDB()
+    db.put("mlstm", "B=1,S=256", {"chunk": 64}, objective=5.4e-4)
+    db.put("flash_attention", "B=1,S=256,causal=True", {"q_block": 64,
+                                                        "kv_block": 128},
+           hardware="cpu/x86", objective=1.2e-3)
+    path = tmp_path / "golden.json"
+    assert export_golden(db.rows(), str(path)) == 2
+    assert json.loads(path.read_text())["format"] == GOLDEN_FORMAT
+
+    fresh = KernelConfigDB()
+    assert fresh.merge_rows(load_golden(str(path))) == 2
+    assert fresh.rows() == db.rows()
+    for k, s, h in [("mlstm", "B=1,S=256", "any"),
+                    ("flash_attention", "B=1,S=256,causal=True", "cpu/x86")]:
+        assert fresh.get(k, s, h) == db.get(k, s, h)
+
+
+def test_golden_malformed_raises(tmp_path):
+    path = tmp_path / "bad.json"
+    path.write_text(json.dumps({"format": "something-else", "entries": []}))
+    with pytest.raises(GroundTruthError):
+        load_golden(str(path))
+
+
+# -------------------------------------------------------------- the wire op
+
+_PUTS = [
+    {"kernel": "mlstm", "shape": "B=1,S=256", "hardware": "any",
+     "config": {"chunk": 64}, "objective": 5.4e-4},
+    {"kernel": "rglru", "shape": "B=1,S=512,R=128", "hardware": "cpu/x86",
+     "config": {"chunk": 128, "r_block": 64}, "objective": None},
+]
+
+_QUERIES = [
+    {"kernel": "mlstm", "shape": "B=1,S=256"},
+    {"kernel": "rglru", "shape": "B=1,S=512,R=128", "hardware": "cpu/x86"},
+    {"kernel": "rglru", "shape": "B=1,S=512,R=128", "hardware": "tpu/v5e"},
+    {"kernel": "nope", "shape": "B=1"},
+]
+
+
+def test_kernel_db_roundtrip_inproc_tcp_bit_identical(tcp_client):
+    results = []
+    for make in (lambda s: _inproc(s), tcp_client):
+        client = make(GroundTruthService())
+        assert client.kernel_put(_PUTS) == 2
+        results.append((client.kernel_find(_QUERIES),
+                        client.kernel_export()))
+    assert results[0] == results[1]        # inproc == TCP, bit-identical
+    configs, entries = results[0]
+    assert configs == [{"chunk": 64}, {"chunk": 128, "r_block": 64},
+                       None, None]
+    assert [e["kernel"] for e in entries] == ["mlstm", "rglru"]
+
+
+def test_kernel_db_malformed_put_mutates_nothing():
+    svc = GroundTruthService()
+    client = _inproc(svc)
+    client.kernel_put(_PUTS[:1])
+    # client-side normalization rejects a row with no kernel name
+    with pytest.raises(KeyError):
+        client.kernel_put([{"shape": "B=1", "config": {}}])
+    # a raw malformed request straight at the wire boundary errors without
+    # applying any put from the batch (validate-then-apply)
+    resp = svc.handle({"op": "kernel_db",
+                       "puts": [dict(_PUTS[1]), {"shape": "B=1"}]})
+    assert resp["ok"] is False
+    assert len(svc.kernel_db) == 1         # the bad batch applied nothing
+
+
+def test_kernel_db_journal_replay(tmp_path):
+    path = str(tmp_path / "journal.jsonl")
+    client = _inproc(GroundTruthService(path=path))
+    client.kernel_put(_PUTS)
+    v0 = client.version()
+
+    revived = GroundTruthService(path=path)
+    assert _inproc(revived).kernel_find(_QUERIES[:2]) == [
+        {"chunk": 64}, {"chunk": 128, "r_block": 64}]
+    # a kernel-only journal must not refit/bump the centroid store version
+    assert revived.store.version == v0
+
+
+def test_kernel_db_export_import_cli_roundtrip(tmp_path):
+    """MITuna golden loop: journal -> `export` -> golden JSON -> `import`
+    into a fresh journal -> identical lookups."""
+    from repro.kernels import tune
+    src_journal = str(tmp_path / "src.jsonl")
+    _inproc(GroundTruthService(path=src_journal)).kernel_put(_PUTS)
+    golden = str(tmp_path / "golden.json")
+    assert tune.main(["export", "--out", golden,
+                      "--journal", src_journal]) == 0
+    dst_journal = str(tmp_path / "dst.jsonl")
+    assert tune.main(["import", golden, "--journal", dst_journal]) == 0
+    src = GroundTruthService(path=src_journal)
+    dst = GroundTruthService(path=dst_journal)
+    assert dst.kernel_db.rows() == src.kernel_db.rows()
+    assert _inproc(dst).kernel_find(_QUERIES) == \
+        _inproc(src).kernel_find(_QUERIES)
+
+
+def test_install_kernel_db_from_golden(tmp_path):
+    from repro.kernels import findb, tune
+    db = KernelConfigDB()
+    db.put("mlstm", "B=1,S=256", {"chunk": 64})
+    golden = str(tmp_path / "golden.json")
+    export_golden(db.rows(), golden)
+    target = KernelConfigDB()
+    assert tune.install_kernel_db(golden, db=target) == 1
+    assert target.get("mlstm", "B=1,S=256") == {"chunk": 64}
+    # and into the process-wide db (restored afterwards)
+    prev = findb.set_find_db(KernelConfigDB())
+    try:
+        assert tune.install_kernel_db(golden) == 1
+        assert findb.get_find_db().get("mlstm", "B=1,S=256") == {"chunk": 64}
+    finally:
+        findb.set_find_db(prev)
+
+
+# ------------------------------------------------------ findb resolution
+
+def test_shape_keys_canonical_and_stable():
+    from repro.kernels import findb
+    assert findb.shape_key(S=256, B=1) == "B=1,S=256"     # sorted
+    a = findb.attention_shape_key(B=1, S=256, K=2, G=1, D=32, T=256,
+                                  causal=True, window=None)
+    assert "window=none" in a and "causal=True" in a
+    assert findb.attention_shape_key(B=1, S=256, K=2, G=1, D=32, T=256,
+                                     causal=True, window=128) != a
+    assert findb.mlstm_shape_key(B=1, S=256, H=2, D=32) == \
+        "B=1,D=32,H=2,S=256"
+
+
+def test_default_interpret_follows_platform(monkeypatch):
+    from repro.kernels import findb
+    monkeypatch.setattr(findb, "_platform", lambda: "tpu")
+    assert findb.default_interpret() is False
+    monkeypatch.setattr(findb, "_platform", lambda: "cpu")
+    assert findb.default_interpret() is True
+
+
+def test_lookup_or_default_uses_active_db():
+    from repro.kernels import findb
+    prev = findb.set_find_db(KernelConfigDB())
+    try:
+        key = findb.mlstm_shape_key(B=1, S=64, H=1, D=16)
+        assert findb.lookup_or_default("mlstm", key)["chunk"] == \
+            findb.DEFAULTS["mlstm"]["chunk"]               # miss -> default
+        findb.get_find_db().put("mlstm", key, {"chunk": 16},
+                                hardware=findb.hardware_key())
+        assert findb.lookup_or_default("mlstm", key)["chunk"] == 16
+    finally:
+        findb.set_find_db(prev)
+
+
+# --------------------------------------------------- KernelTuneBackend
+
+def test_workload_parsing_and_space():
+    from repro.kernels import tune
+    kernel, dims = tune.parse_workload("mlstm@B=1,S=256,H=2,D=32")
+    assert (kernel, dims["S"]) == ("mlstm", 256)
+    assert tune.parse_workload("mlstm-smoke") == (kernel, dims)  # preset
+    with pytest.raises(ValueError):
+        tune.parse_workload("not-a-kernel@B=1")
+    grid = tune.kernel_space(kernel, dims).grid()
+    assert {"chunk": tune.BASELINES["mlstm"]["chunk"]} in \
+        [dict(g) for g in grid]            # the default is always a variant
+    assert tune.variant_config("mlstm", {"chunk": "64"}, {}) == {"chunk": 64}
+
+
+def test_backend_protocol_contract():
+    jax = pytest.importorskip("jax")               # noqa: F841
+    from repro.api.backend import Backend
+    from repro.kernels.tune import KernelTuneBackend
+    backend = KernelTuneBackend(reps=1, warmup=0)
+    assert isinstance(backend, Backend)
+    caps = backend.capabilities()
+    assert not caps.simulated and not caps.async_precompile
+    ts = backend.init_trial("mlstm@B=1,S=64,H=1,D=16", {"chunk": 32}, seed=3)
+    ts, res = backend.run_epoch(ts, {}, collect_profile=True)
+    assert res.loss > 0 and res.accuracy > 0
+    assert res.sys_config == {"chunk": 32}
+    assert backend.trials_timed == 1
+    assert "rt.step_time_mean" in res.profile.events
+
+
+def test_warm_lookup_resolves_with_zero_trials():
+    """Acceptance: a find-db hit answers without constructing a backend or
+    timing anything — tune_kernel returns trials=0 from the cache."""
+    from repro.kernels import findb, tune
+    db = KernelConfigDB()
+    wl = "mlstm@B=1,S=64,H=1,D=16"
+    kernel, dims = tune.parse_workload(wl)
+    skey = tune.workload_shape_key(kernel, dims)
+    db.put(kernel, skey, {"chunk": 16}, hardware=findb.hardware_key())
+    out = tune.tune_kernel(wl, db=db)
+    assert out["source"] == "find-db"
+    assert out["trials"] == 0
+    assert out["config"] == {"chunk": 16}
+
+
+def test_warm_lookup_from_store_warms_local_db():
+    from repro.kernels import findb, tune
+    svc = GroundTruthService()
+    client = _inproc(svc)
+    wl = "mlstm@B=1,S=64,H=1,D=16"
+    kernel, dims = tune.parse_workload(wl)
+    skey = tune.workload_shape_key(kernel, dims)
+    client.kernel_put([{"kernel": kernel, "shape": skey,
+                        "hardware": findb.hardware_key(),
+                        "config": {"chunk": 16}, "objective": 1e-4}])
+    db = KernelConfigDB()
+    out = tune.tune_kernel(wl, db=db, store=client)
+    assert (out["source"], out["trials"]) == ("find-db", 0)
+    assert db.get(kernel, skey, findb.hardware_key()) == {"chunk": 16}

@@ -183,6 +183,35 @@ def test_seeded_op_removed_from_ops_table():
     assert any("_op_add" in f.message for f in w4), w4
 
 
+def test_seeded_kernel_db_removed_from_ops_table():
+    sources = _live_sources()
+    src = sources["service/service.py"]
+    assert '"kernel_db"' in src
+    sources["service/service.py"] = src.replace(
+        ', "kernel_db"', "", 1
+    )  # drop the find-db op from the module-level _OPS gate
+    mutated = Project.from_sources(sources, default_config())
+    findings, _ = run_lint(mutated, select=["wire"])
+    w4 = [f for f in findings if f.rule == "WIRE004"]
+    assert any("_op_kernel_db" in f.message for f in w4), w4
+
+
+def test_seeded_kernel_db_client_op_typo():
+    # the StoreClient kernel helpers are plain dict-literal sends, so the
+    # existing clients mapping cross-checks them against the service _OPS
+    # gate with no lint-config edits: a typo'd op name is a static error
+    sources = _live_sources()
+    src = sources["service/transport.py"]
+    assert src.count('"op": "kernel_db"') == 3
+    sources["service/transport.py"] = src.replace(
+        '"op": "kernel_db"', '"op": "kernel_bd"', 1)
+    mutated = Project.from_sources(sources, default_config())
+    findings, _ = run_lint(mutated, select=["wire"])
+    w1 = [f for f in findings if f.rule == "WIRE001"
+          and "kernel_bd" in f.message]
+    assert len(w1) == 1, [f.message for f in findings]
+
+
 def test_seeded_unlocked_write_in_worker_service():
     sources = _live_sources()
     sources["service/worker.py"] += (
